@@ -1,0 +1,56 @@
+"""Before/after comparison: artifacts/dryrun_baseline vs artifacts/dryrun.
+
+Generates the §Perf delta table for EXPERIMENTS.md (per cell: roofline terms,
+peak memory, collective bytes, dominant bottleneck).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def load(d: str, arch: str, shape: str, mesh: str = "16x16"):
+    p = ROOT / d / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def delta_row(arch: str, shape: str, mesh: str = "16x16") -> str | None:
+    b = load("dryrun_baseline", arch, shape, mesh)
+    o = load("dryrun", arch, shape, mesh)
+    if not b or not o or not b.get("compile_ok") or not o.get("compile_ok"):
+        return None
+
+    def terms(r):
+        t = r["roofline"]
+        return (t["compute_s"], t["memory_s"], t["collective_s"],
+                r["memory"]["peak_bytes_est"] / 1e9,
+                max(t["compute_s"], t["memory_s"], t["collective_s"]))
+
+    cb, mb, lb, pb, boundb = terms(b)
+    co, mo, lo, po, boundo = terms(o)
+    speedup = boundb / boundo if boundo > 0 else float("inf")
+    return (f"| {arch} | {shape} | {cb:.2f}/{mb:.2f}/{lb:.2f} | "
+            f"{co:.2f}/{mo:.2f}/{lo:.2f} | {pb:.1f} -> {po:.1f} | "
+            f"{speedup:.2f}x |")
+
+
+def main():
+    print("| arch | shape | baseline C/M/N (s) | optimized C/M/N (s) | "
+          "peak GB | bound speedup |")
+    print("|---|---|---|---|---|---|")
+    cells = []
+    for p in sorted((ROOT / "dryrun").glob("*__16x16.json")):
+        arch, shape, _ = p.stem.split("__")
+        cells.append((arch, shape))
+    for arch, shape in cells:
+        r = delta_row(arch, shape)
+        if r:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Roofline report: artifacts/dryrun/*.json -> markdown table + CSV.
+
+Per (arch x shape x mesh): the three roofline terms (seconds/step/chip),
+dominant bottleneck, MODEL_FLOPS ratio, memory fit check vs 16 GB HBM.
+Used to pick the hillclimb cells (worst roofline fraction, most
+collective-bound, most paper-representative) and to fill EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+HBM_BYTES = 16e9          # v5e
+
+
+def load_records(mesh: str | None = "16x16"):
+    recs = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def row(r) -> dict | None:
+    if r.get("skipped"):
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "skipped": r["skipped"]}
+    if not r.get("compile_ok"):
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "error": r.get("error", "?")}
+    t = r["roofline"]
+    mem = r["memory"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"], "bottleneck": t["bottleneck"],
+        "roofline_fraction": t["roofline_fraction"],
+        "useful_ratio": r.get("useful_flops_ratio"),
+        "peak_gb": mem["peak_bytes_est"] / 1e9,
+        "fits_hbm": mem["peak_bytes_est"] < HBM_BYTES,
+        "coll_gb": r["hlo"]["collective_bytes"] / 1e9,
+    }
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if isinstance(x, bool):
+        return "yes" if x else "NO"
+    if isinstance(x, float):
+        if x != 0 and (abs(x) < 1e-3 or abs(x) >= 1e5):
+            return f"{x:.2e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def markdown_table(mesh="16x16") -> str:
+    cols = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "roofline_fraction", "useful_ratio", "peak_gb",
+            "fits_hbm"]
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in load_records(mesh):
+        d = row(r)
+        if d is None:
+            continue
+        if "skipped" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | skipped: "
+                         f"{d['skipped'][:60]}... |" + " |" * (len(cols) - 3))
+            continue
+        if "error" in d:
+            lines.append(f"| {d['arch']} | {d['shape']} | ERROR |"
+                         + " |" * (len(cols) - 3))
+            continue
+        lines.append("| " + " | ".join(fmt(d.get(c)) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        recs = load_records(mesh)
+        ok = sum(1 for r in recs if r.get("compile_ok"))
+        sk = sum(1 for r in recs if r.get("skipped"))
+        print(f"\n## mesh {mesh}: {ok} compiled, {sk} skipped, "
+              f"{len(recs) - ok - sk} errors\n")
+        print(markdown_table(mesh))
+    # CSV for downstream tooling
+    out = ARTIFACTS.parent / "roofline.csv"
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "roofline_fraction", "useful_ratio", "peak_gb",
+            "coll_gb"]
+    with out.open("w") as f:
+        f.write(",".join(cols) + "\n")
+        for mesh in ("16x16", "2x16x16"):
+            for r in load_records(mesh):
+                d = row(r)
+                if d and "compute_s" in d:
+                    f.write(",".join(str(d.get(c, "")) for c in cols) + "\n")
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness: one function per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo skeleton contract)
+and a readable JSON dump to artifacts/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+
+    rows: list[dict] = []
+    print("# PixHomology paper benchmarks (reduced sizes, same methodology)")
+    paper_tables.table1_filtering(rows=rows)
+    paper_tables.fig6_partitioning(rows=rows)
+    paper_tables.fig7_equality(rows=rows)
+    paper_tables.fig9_10_scaling(rows=rows)
+    paper_tables.fig11_dipha(rows=rows)
+    paper_tables.perf_merge_impl(rows=rows)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        r = dict(r)
+        name = r.pop("name")
+        t_s = (r.get("pixhomology_s") or r.get("round_makespan_s")
+               or r.get("ours_batch_s") or r.get("value") or 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{t_s * 1e6:.1f},{derived}")
+
+    # Roofline summary (from dry-run artifacts, if present)
+    try:
+        from benchmarks import roofline_report
+        recs = roofline_report.load_records("16x16")
+        for r in recs:
+            d = roofline_report.row(r)
+            if d and "compute_s" in d:
+                print(f"roofline/{d['arch']}/{d['shape']},"
+                      f"{d['compute_s'] * 1e6:.1f},"
+                      f"bottleneck={d['bottleneck']};"
+                      f"fraction={d['roofline_fraction']:.3f};"
+                      f"fits={d['fits_hbm']}")
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline summary unavailable: {e}")
+
+    ARTIFACTS.mkdir(exist_ok=True)
+    (ARTIFACTS / "bench_results.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: 0-dim persistent homology of one astronomical image.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates a synthetic star field (paper §6.2 recipe), computes its
+persistence diagram with PixHomology (Algorithm 1), validates it against
+the classical union-find oracle, and prints the most persistent objects.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import diagram_to_array, persistence_oracle, pixhomology
+from repro.data import astro
+
+
+def main():
+    img = astro.generate_image(image_id=42, size=256)
+    print(f"image: {img.shape}, sky≈{np.median(img):.1f}, "
+          f"max={img.max():.1f}")
+
+    diag = pixhomology(jnp.asarray(img), max_features=8192,
+                       max_candidates=32768)
+    n = int(diag.count)
+    print(f"\nPixHomology found {n} components "
+          f"(overflow={bool(diag.overflow)})")
+
+    rows = diagram_to_array(diag)
+    print("\ntop-10 by birth (birth, death, persistence, y, x):")
+    w = img.shape[1]
+    for b, d, pb, pd in rows[:10]:
+        print(f"  birth={b:9.2f} death={d:9.2f} pers={b - d:9.2f} "
+              f"at ({int(pb) // w:4d},{int(pb) % w:4d})")
+
+    # Validate against the classical algorithm — exact equality, which is
+    # stronger than the paper's bottleneck-distance-0 check (fig 7).
+    want = persistence_oracle(img)
+    assert rows.shape == want.shape and np.array_equal(rows, want)
+    print(f"\nvalidated: {rows.shape[0]} diagram rows match the classical "
+          "union-find oracle exactly (bottleneck distance 0).")
+
+
+if __name__ == "__main__":
+    main()

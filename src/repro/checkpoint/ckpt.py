@@ -1,0 +1,151 @@
+"""Sharded checkpointing: save/restore pytrees with rotation + elastic
+re-sharding (no orbax in this environment).
+
+Format: one directory per step containing ``manifest.json`` (flattened key
+paths, shapes, dtypes, pytree structure hints, user metadata) and one
+``.npy``-style raw buffer file per leaf (bf16 stored as uint16 views).
+Writes are atomic (tmp dir + rename); ``keep`` rotates old steps out;
+``save_async`` runs host-side serialization on a worker thread so the train
+loop isn't blocked (device->host copy happens before the thread handoff, so
+donated buffers are safe).
+
+Restore targets *any* mesh: arrays are stored unsharded (single-host
+container; on a multi-host pod each host would write its addressable shards
+— the manifest layout already carries per-leaf shape/dtype for that) and
+``device_put`` against the new sharding re-shards — this is the elastic
+scaling path (tests/test_checkpoint.py restores a 1-device checkpoint onto
+a 2x4 mesh and vice versa).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for kp, leaf in flat:
+        key = "/".join(_keyname(k) for k in kp) or "_root"
+        items.append((key, leaf))
+    return items, treedef
+
+
+def _keyname(k):
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    return str(k)
+
+
+def save(ckpt_dir, step: int, tree, *, metadata: dict | None = None,
+         keep: int = 3):
+    """Synchronous checkpoint write (atomic)."""
+    host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+    _write(Path(ckpt_dir), step, host_tree, metadata or {}, keep)
+
+
+class AsyncCheckpointer:
+    """Serialize to disk off-thread; join() before exit or next save."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def save(self, ckpt_dir, step: int, tree, *, metadata=None, keep=3):
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+        self.join()
+        self._thread = threading.Thread(
+            target=_write,
+            args=(Path(ckpt_dir), step, host_tree, metadata or {}, keep),
+            daemon=True)
+        self._thread.start()
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def _write(root: Path, step: int, host_tree, metadata: dict, keep: int):
+    items, _ = _flatten(host_tree)
+    final = root / f"step_{step:08d}"
+    tmp = root / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {"step": step, "metadata": metadata, "leaves": {}}
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":
+            arr = arr.view(np.uint16)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr, allow_pickle=False)
+        manifest["leaves"][key] = {"file": fname, "dtype": dtype,
+                                   "shape": list(leaf.shape)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    # rotation
+    steps = sorted(p for p in root.glob("step_*") if p.is_dir())
+    for old in steps[:-keep] if keep else []:
+        shutil.rmtree(old)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    root = Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = sorted(root.glob("step_*"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def restore(ckpt_dir, target_tree, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``target_tree`` (shapes must match).
+
+    ``shardings``: optional matching pytree of NamedShardings — arrays are
+    device_put against them (elastic re-shard onto any mesh).
+    """
+    import ml_dtypes
+
+    root = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    items, treedef = _flatten(target_tree)
+    shard_items = None
+    if shardings is not None:
+        shard_items, _ = _flatten(shardings)
+
+    leaves = []
+    for i, (key, target_leaf) in enumerate(items):
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(d / meta["file"], allow_pickle=False)
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        if list(arr.shape) != list(target_leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {target_leaf.shape}")
+        if shard_items is not None:
+            arr = jax.device_put(arr, shard_items[i][1])
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), \
+        manifest["metadata"], step

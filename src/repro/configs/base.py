@@ -1,0 +1,124 @@
+"""Config schema + registry for architectures and input shapes."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+VOCAB_PAD = 256  # vocabs padded up so `model`-axis sharding divides evenly
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # block construction; cycled over layers
+    block_pattern: tuple[str, ...] = ("attn",)   # attn|moe|rwkv|rec|lattn
+    mlp_type: str = "swiglu"                     # swiglu | geglu | gelu
+    norm_type: str = "rmsnorm"                   # rmsnorm | layernorm
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float | None = 10000.0
+    local_window: int | None = None              # for "lattn" blocks
+    embed_scale_sqrt_dim: bool = False
+    tie_embeddings: bool = True
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_type: str = "softmax"
+    moe_shared_expert: bool = False
+    # recurrent (rglru)
+    rnn_width: int = 0
+    conv_width: int = 4
+    # encoder-decoder (whisper): encoder layers + stub frontend length
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # implementation knobs
+    wkv_impl: str = "chunked"                    # scan | chunked
+    scan_layers: bool = True
+    remat: str = "full"                          # none | full
+    seq_shard: bool = True                       # SP: layer-boundary seq/TP
+    dtype: str = "bfloat16"
+    # long-context capability: sub-quadratic archs only (DESIGN.md §4)
+    supports_long_context: bool = False
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def block_kind(self, layer: int) -> str:
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    @property
+    def homogeneous(self) -> bool:
+        return len(self.block_pattern) == 1
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                                    # train | prefill | decode
+
+
+# The four assigned LM shapes (brief): decode/long lower serve_step.
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "rwkv6_3b",
+    "llama4_scout_17b_a16e",
+    "dbrx_132b",
+    "chameleon_34b",
+    "gemma_7b",
+    "mistral_nemo_12b",
+    "qwen1_5_0_5b",
+    "phi3_mini_3_8b",
+    "recurrentgemma_2b",
+    "whisper_small",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.smoke_config()
+
+
+def cells(archs=None, shapes=None):
+    """All (arch, shape) dry-run cells incl. sanctioned skips -> (id, reason)."""
+    out = []
+    for a in archs or ARCH_IDS:
+        cfg = get_config(a)
+        for s in shapes or SHAPES:
+            shape = SHAPES[s]
+            skip = None
+            if shape.name == "long_500k" and not cfg.supports_long_context:
+                skip = ("full-attention arch: 500k dense KV pass is "
+                        "quadratic; skipped per brief (DESIGN.md §4)")
+            out.append((a, s, skip))
+    return out

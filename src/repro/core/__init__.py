@@ -1,0 +1,15 @@
+"""Core PixHomology algorithm (the paper's primary contribution)."""
+from repro.core.pixhomology import (  # noqa: F401
+    Diagram,
+    batched_pixhomology,
+    exact_candidates,
+    merge_components,
+    num_candidates,
+    paper_candidates,
+    pixhomology,
+    reindex_components,
+    resolve_labels,
+    steepest_neighbors,
+    total_order_rank,
+)
+from repro.core.reference import diagram_to_array, persistence_oracle  # noqa: F401

@@ -1,0 +1,159 @@
+"""Parallel merge phase: Boruvka rounds instead of the sequential sweep.
+
+The paper's step 5 processes candidates one-by-one in descending order
+(inherently sequential; our faithful version is a fixed-length ``lax.scan``
+— 16384 sequential steps for a 1k x 1k astro image).  0-dim superlevel
+persistence is equivalent to elder-rule pairing on the *maximum spanning
+forest* of the saddle graph, which Boruvka builds in O(log C) fully-parallel
+rounds:
+
+  round:  every cluster finds its highest incident saddle edge (segment-max
+          via scatter-max, two passes for argmax);  every cluster whose best
+          edge leads to an older cluster DIES there (death = that saddle);
+          union pointers are resolved by pointer doubling.
+
+Correctness: "die" pointers always point to strictly larger birth keys, so
+the simultaneous merges form a forest (no cycles) and each dier's death
+saddle equals the one the sequential sweep would assign — the output is
+bit-identical to the union-find oracle (tests/test_parallel_merge.py).
+
+Edges are generated from the exact candidate set: per candidate pixel, a
+chain over its (masked) higher-neighbor basins — a spanning set of the
+clique of basins meeting at that pixel, so all merges at a value-v saddle
+still happen at value v.
+
+Depth: the scan is O(K) sequential steps with O(1) work; Boruvka is
+O(log C) rounds of O(E) parallel work — on a systolic/vector machine depth
+is what matters (EXPERIMENTS.md §Perf PH-2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pixhomology import NEIGHBOR_OFFSETS
+
+
+def candidate_edges(rank_flat, labels_flat, cand_flat, shape,
+                    max_candidates: int):
+    """Top-K candidates -> chained basin edges (K, 7, 3): [rank_x, a, b]."""
+    h, w = shape
+    n = h * w
+    k = min(max_candidates, n)
+    cand_rank = jnp.where(cand_flat, rank_flat, jnp.int32(-1))
+    top_ranks, top_pix = jax.lax.top_k(cand_rank, k)
+    valid = top_ranks >= 0
+
+    xr = top_pix // w
+    xc = top_pix % w
+    lbls = []
+    oks = []
+    for dr, dc in NEIGHBOR_OFFSETS:
+        rr, cc = xr + dr, xc + dc
+        inb = (rr >= 0) & (rr < h) & (cc >= 0) & (cc < w)
+        nid = jnp.clip(rr * w + cc, 0, n - 1)
+        higher = rank_flat[nid] > top_ranks
+        oks.append(inb & higher & valid)
+        lbls.append(labels_flat[nid])
+    ok = jnp.stack(oks, 1)       # (K, 8)
+    lbl = jnp.stack(lbls, 1)     # (K, 8)
+
+    # Chain consecutive valid slots: edge j connects slot j's basin to the
+    # previous valid slot's basin (spanning set of the per-candidate clique).
+    def chain(ok_row, lbl_row):
+        def step(prev, xs):
+            o, l = xs
+            a = jnp.where(o, prev, -1)
+            prev = jnp.where(o, l, prev)
+            return prev, a
+
+        _, prev_lbl = jax.lax.scan(step, jnp.int32(-1), (ok_row, lbl_row))
+        return prev_lbl            # (8,) previous valid basin or -1
+
+    prev_lbl = jax.vmap(chain)(ok, lbl)
+    edge_ok = ok & (prev_lbl >= 0) & (prev_lbl != lbl)
+    ranks = jnp.broadcast_to(top_ranks[:, None], ok.shape)
+    return (jnp.where(edge_ok, ranks, -1).reshape(-1),
+            jnp.where(edge_ok, lbl, 0).reshape(-1),
+            jnp.where(edge_ok, prev_lbl, 0).reshape(-1))
+
+
+def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
+                  max_candidates: int, max_rounds: int = 40):
+    """Parallel replacement for ``pixhomology.merge_components``."""
+    n = image_flat.shape[0]
+    e_rank, e_a, e_b = candidate_edges(rank_flat, labels_flat, cand_flat,
+                                       shape, max_candidates)
+    n_edges = e_rank.shape[0]
+    neg_inf = (-jnp.inf if jnp.issubdtype(image_flat.dtype, jnp.floating)
+               else jnp.iinfo(image_flat.dtype).min)
+
+    # Map candidate rank back to pixel id for death positions.
+    perm = jnp.argsort(rank_flat, stable=True)       # rank -> pixel id
+
+    parent0 = jnp.arange(n, dtype=jnp.int32)
+    dval0 = jnp.full(n, neg_inf, image_flat.dtype)
+    dpos0 = jnp.full(n, -1, jnp.int32)
+
+    def resolve(p):
+        def cond(q):
+            return jnp.any(q[q] != q)
+
+        def body(q):
+            return q[q]
+
+        return jax.lax.while_loop(cond, body, p)
+
+    def round_body(state):
+        parent, dval, dpos, _ = state
+        roots = resolve(parent)
+        ra = roots[e_a]
+        rb = roots[e_b]
+        alive = (e_rank >= 0) & (ra != rb)
+        key = jnp.where(alive, e_rank, -1)
+
+        # Pass 1: per-cluster best saddle rank (scatter-max on both ends).
+        best = jnp.full(n, -1, jnp.int32)
+        best = best.at[jnp.where(alive, ra, n)].max(key, mode="drop")
+        best = best.at[jnp.where(alive, rb, n)].max(key, mode="drop")
+        # Pass 2: per-cluster winning edge index among rank ties.
+        eidx = jnp.arange(n_edges, dtype=jnp.int32)
+        hit_a = alive & (key == best[ra])
+        hit_b = alive & (key == best[rb])
+        win = jnp.full(n, -1, jnp.int32)
+        win = win.at[jnp.where(hit_a, ra, n)].max(
+            jnp.where(hit_a, eidx, -1), mode="drop")
+        win = win.at[jnp.where(hit_b, rb, n)].max(
+            jnp.where(hit_b, eidx, -1), mode="drop")
+
+        # For each cluster with a best edge: other endpoint + die rule.
+        has = win >= 0
+        wi = jnp.clip(win, 0)
+        wa = roots[e_a[wi]]
+        wb = roots[e_b[wi]]
+        me = jnp.arange(n, dtype=jnp.int32)
+        other = jnp.where(wa == me, wb, wa)
+        saddle_rank = e_rank[wi]
+        die = has & (rank_flat[other] > rank_flat[me]) & (roots == me)
+        saddle_pix = perm[jnp.clip(saddle_rank, 0)]
+
+        parent = jnp.where(die, other, parent)
+        dval = jnp.where(die, image_flat[saddle_pix], dval)
+        dpos = jnp.where(die, saddle_pix, dpos)
+        any_alive = jnp.any(alive)
+        return parent, dval, dpos, any_alive
+
+    def cond(state):
+        return state[3]
+
+    def body(state):
+        return round_body(state)
+
+    state = (parent0, dval0, dpos0, jnp.asarray(True))
+    # Seed round + loop until no alive inter-cluster edges remain.
+    state = jax.lax.while_loop(cond, body, state)
+    _, dval, dpos, _ = state
+
+    n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
+    overflow = n_cand > min(max_candidates, n)
+    return dval, dpos, overflow

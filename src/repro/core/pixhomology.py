@@ -1,0 +1,401 @@
+"""PixHomology: 0-dimensional persistent homology of 2D images (paper §5.1).
+
+Superlevel-set filtration: components are born at local maxima and die when
+they merge into a component with an older (larger) birth (elder rule).  The
+essential class of the global maximum dies at the global minimum (paper's
+"ultimate death point").
+
+Implementation notes (see DESIGN.md §2/§6 for the TPU adaptation rationale):
+
+* Total order.  All comparisons use the strict total order on pixels
+  ``(value, flat_index)`` (value primary).  When the paper's precondition
+  holds (no 8-neighbor ties at local maxima) this coincides with the paper;
+  when it does not, the algorithm is still deterministic and agrees exactly
+  with the union-find oracle in ``reference.py`` which uses the same order.
+
+* Step 1+2 (concave components).  ``arg-maxpool2d`` gives each pixel a pointer
+  to its steepest-ascent neighbor; the paper then iterates ``M[x] <- M[M[x]]``
+  to a fixed point.  We implement this as *pointer doubling* on the flat
+  pointer array inside a ``lax.while_loop`` — O(log depth) iterations instead
+  of the paper's worst case O(n) — see EXPERIMENTS.md §Perf.
+
+* Step 3+4 (edges + distillation).  Two candidate generators:
+  ``candidate_mode="exact"`` keeps pixels whose *higher* 8-neighbors span >= 2
+  distinct basins — provably a superset of all merge points and a subset of
+  the paper's edge set; ``candidate_mode="paper"`` is the paper's literal
+  edge ∧ (local-min ∨ axis-saddle) distillation (kept for fidelity; the axis
+  saddle test can miss merge points on adversarial images — documented in
+  DESIGN.md).
+
+* Step 5 (merging).  Candidates are processed in descending total order by a
+  fixed-length ``lax.scan`` carrying a union-find parent array (path
+  compression after every step).  This is the paper-faithful sequential merge.
+  A parallel Boruvka variant lives in ``parallel_merge.py``.
+
+All shapes are static (jit/vmap/shard_map friendly): diagrams are padded to
+``max_features`` rows and candidate processing to ``max_candidates`` steps,
+with explicit overflow flags so a driver can detect undersized capacities and
+re-dispatch (fault-tolerance hook used by the pipeline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxpool import ops as pool_ops
+from repro.kernels.maxpool import ref as pool_ref
+
+# 8-neighborhood offsets (self excluded), fixed order: the union-find oracle
+# uses the same order so merge processing is bit-identical.
+NEIGHBOR_OFFSETS = [(-1, -1), (-1, 0), (-1, 1),
+                    (0, -1), (0, 1),
+                    (1, -1), (1, 0), (1, 1)]
+
+
+class Diagram(NamedTuple):
+    """Fixed-capacity persistence diagram (padded, shardable)."""
+
+    birth: jnp.ndarray     # (F,) image dtype, descending; padding = -inf
+    death: jnp.ndarray     # (F,) image dtype; -inf for padding/unmerged
+    p_birth: jnp.ndarray   # (F,) int32 flat pixel index of the maximum; -1 pad
+    p_death: jnp.ndarray   # (F,) int32 flat pixel index of the merge saddle
+    count: jnp.ndarray     # () int32 number of valid rows (components found)
+    n_unmerged: jnp.ndarray  # () int32 roots that never died (0 when exact)
+    overflow: jnp.ndarray  # () bool: capacity exceeded -> retry with bigger F/K
+
+
+# ---------------------------------------------------------------------------
+# Total order helpers
+# ---------------------------------------------------------------------------
+
+def total_order_rank(values_flat: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = position of pixel i in the ascending (value, index) order."""
+    n = values_flat.shape[0]
+    perm = jnp.argsort(values_flat, stable=True)  # ties -> ascending index
+    return jnp.zeros(n, jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def _shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
+    return pool_ref._shift(x, dr, dc, fill)
+
+
+# ---------------------------------------------------------------------------
+# Steps 1-2: steepest-ascent pointers and pointer-doubling label resolution
+# ---------------------------------------------------------------------------
+
+def steepest_neighbors(image: jnp.ndarray, *, use_pallas: bool | None = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """arg-maxpool2d(I): flat index of each pixel's 3x3 max (paper line 1)."""
+    _, arg = pool_ops.maxargmaxpool3x3(image, use_pallas=use_pallas,
+                                       interpret=interpret)
+    return arg.reshape(-1)
+
+
+def resolve_labels(pointers: jnp.ndarray) -> jnp.ndarray:
+    """Pointer-double ``M = M[M]`` to a fixed point (paper lines 2-4).
+
+    Returns labels[i] = flat index of pixel i's local maximum (basin root).
+    Converges in O(log(max basin depth)) iterations.
+    """
+    def cond(m):
+        return jnp.any(m[m] != m)
+
+    def body(m):
+        return m[m]
+
+    return jax.lax.while_loop(cond, body, pointers)
+
+
+# ---------------------------------------------------------------------------
+# Steps 3-4: candidate death points
+# ---------------------------------------------------------------------------
+
+def exact_candidates(rank2d: jnp.ndarray, labels2d: jnp.ndarray) -> jnp.ndarray:
+    """Pixels whose strictly-higher 8-neighbors span >= 2 distinct basins.
+
+    This is exactly the set of pixels at which the union-find sweep can merge
+    two components, so it is complete (no lost deaths) and is a strict subset
+    of the paper's step-3 edge set (tighter distillation).
+    """
+    n = rank2d.size
+    hi_max = jnp.full(rank2d.shape, -1, jnp.int32)
+    hi_min = jnp.full(rank2d.shape, n, jnp.int32)
+    for dr, dc in NEIGHBOR_OFFSETS:
+        nrank = _shift2d(rank2d, dr, dc, jnp.int32(-1))
+        nlbl = _shift2d(labels2d, dr, dc, jnp.int32(-1))
+        higher = nrank > rank2d  # border fill -1 is never higher
+        hi_max = jnp.where(higher, jnp.maximum(hi_max, nlbl), hi_max)
+        hi_min = jnp.where(higher, jnp.minimum(hi_min, nlbl), hi_min)
+    return (hi_max >= 0) & (hi_min < n) & (hi_max != hi_min)
+
+
+def paper_candidates(rank2d: jnp.ndarray, comp2d: jnp.ndarray,
+                     *, use_pallas: bool | None = None,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Paper-literal steps 3-4: component edges, then min/saddle distillation.
+
+    comp2d: re-indexed component image (incremental ids, paper step 2).
+    Edge:   maxpool2d(M) != -maxpool2d(-M)           (paper line 6)
+    Keep:   local minima or axis saddles of I        (paper "distillation")
+    """
+    n = rank2d.size
+    edge = (pool_ops.maxpool3x3(comp2d, use_pallas=use_pallas,
+                                interpret=interpret)
+            != pool_ops.minpool3x3(comp2d, use_pallas=use_pallas,
+                                   interpret=interpret))
+
+    # Neighbor ranks with directional fills: for "min along" tests a missing
+    # neighbor counts as higher (fill n); for "max along" as lower (fill -1).
+    def nb(dr, dc, fill):
+        return _shift2d(rank2d, dr, dc, jnp.int32(fill))
+
+    local_min = jnp.ones(rank2d.shape, bool)
+    for dr, dc in NEIGHBOR_OFFSETS:
+        local_min &= nb(dr, dc, n) > rank2d
+
+    axes = [(0, 1), (1, 0), (1, 1), (1, -1)]
+    min_along = []
+    max_along = []
+    for dr, dc in axes:
+        min_along.append((nb(dr, dc, n) > rank2d) & (nb(-dr, -dc, n) > rank2d))
+        max_along.append((nb(dr, dc, -1) < rank2d) & (nb(-dr, -dc, -1) < rank2d))
+    saddle = jnp.zeros(rank2d.shape, bool)
+    for a in range(len(axes)):
+        for b in range(len(axes)):
+            if a != b:
+                saddle |= min_along[a] & max_along[b]
+    return edge & (local_min | saddle)
+
+
+def reindex_components(rank_flat: jnp.ndarray, labels_flat: jnp.ndarray,
+                       is_root: jnp.ndarray) -> jnp.ndarray:
+    """Paper step 2 re-indexing: component ids 0..C-1 ascending by birth.
+
+    Returns per-pixel component id; id C-1 = component of the global maximum.
+    """
+    n = rank_flat.shape[0]
+    c = jnp.sum(is_root, dtype=jnp.int32)
+    root_key = jnp.where(is_root, rank_flat, jnp.int32(-1))
+    order = jnp.argsort(root_key)               # non-roots first, roots asc
+    slot = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    comp_of_root = slot - (jnp.int32(n) - c)    # roots -> 0..C-1
+    return comp_of_root[labels_flat]
+
+
+# ---------------------------------------------------------------------------
+# Step 5: sequential merge sweep (paper-faithful, fixed shape)
+# ---------------------------------------------------------------------------
+
+def _find_vec(parent: jnp.ndarray, start: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized union-find root lookup (parent is fixed during the search)."""
+    def cond(p):
+        return jnp.any(parent[p] != p)
+
+    def body(p):
+        return parent[p]
+
+    return jax.lax.while_loop(cond, body, start)
+
+
+def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
+                     labels_flat: jnp.ndarray, cand_flat: jnp.ndarray,
+                     shape: tuple[int, int], max_candidates: int,
+                     truncate_value=None):
+    """Process candidates in descending (value, index) order, union-find merge.
+
+    Returns (death_val, death_pos, overflow): per-root death records.
+    """
+    h, w = shape
+    n = h * w
+    k = min(max_candidates, n)
+
+    if truncate_value is not None:
+        # Variant 2 (paper §5.2.1): sub-threshold pixels are excluded from
+        # the analysis — merges below the threshold never run; the survivors
+        # are truncated at the threshold by the caller.
+        cand_flat = cand_flat & (image_flat >= truncate_value)
+    cand_rank = jnp.where(cand_flat, rank_flat, jnp.int32(-1))
+    n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
+    top_ranks, top_pix = jax.lax.top_k(cand_rank, k)  # descending order
+    overflow = n_cand > k
+
+    neg_inf = (-jnp.inf if jnp.issubdtype(image_flat.dtype, jnp.floating)
+               else jnp.iinfo(image_flat.dtype).min)
+
+    def step(carry, xs):
+        parent, dval, dpos = carry
+        x, xrank = xs
+        valid = xrank >= 0
+        xr = x // w
+        xc = x % w
+
+        oks, basins = [], []
+        for dr, dc in NEIGHBOR_OFFSETS:
+            rr, cc = xr + dr, xc + dc
+            inb = (rr >= 0) & (rr < h) & (cc >= 0) & (cc < w)
+            nid = jnp.clip(rr * w + cc, 0, n - 1)
+            higher = rank_flat[nid] > xrank
+            oks.append(inb & higher & valid)
+            basins.append(labels_flat[nid])
+        ok = jnp.stack(oks)            # (8,)
+        basin = jnp.stack(basins)      # (8,)
+
+        start = jnp.where(ok, basin, x)      # x is never a root: safe filler
+        roots = _find_vec(parent, start)
+        root_rank = jnp.where(ok, rank_flat[roots], jnp.int32(-1))
+        elder = roots[jnp.argmax(root_rank)]
+
+        # Deduplicate equal roots among the 8 slots; younger distinct roots die.
+        dup = jnp.zeros(8, bool)
+        for j in range(1, 8):
+            seen = (roots[:j] == roots[j]) & ok[:j]
+            dup = dup.at[j].set(jnp.any(seen))
+        die = ok & ~dup & (roots != elder)
+
+        drop = jnp.int32(n)  # scatter target for masked-out lanes
+        parent = parent.at[jnp.where(ok, roots, drop)].set(elder, mode="drop")
+        parent = parent.at[jnp.where(ok, basin, drop)].set(elder, mode="drop")
+        dval = dval.at[jnp.where(die, roots, drop)].set(
+            image_flat[x], mode="drop")
+        dpos = dpos.at[jnp.where(die, roots, drop)].set(x, mode="drop")
+        return (parent, dval, dpos), None
+
+    parent0 = jnp.arange(n, dtype=jnp.int32)
+    dval0 = jnp.full(n, neg_inf, image_flat.dtype)
+    dpos0 = jnp.full(n, -1, jnp.int32)
+    (parent, dval, dpos), _ = jax.lax.scan(
+        step, (parent0, dval0, dpos0), (top_pix, top_ranks))
+    del parent
+    return dval, dpos, overflow
+
+
+# ---------------------------------------------------------------------------
+# Full algorithm (paper Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_features", "max_candidates", "candidate_mode",
+                     "use_pallas", "interpret", "merge_impl"))
+def pixhomology(image: jnp.ndarray, truncate_value=None, *,
+                max_features: int = 256,
+                max_candidates: int = 4096,
+                candidate_mode: str = "exact",
+                use_pallas: bool | None = None,
+                interpret: bool = False,
+                merge_impl: str = "scan") -> Diagram:
+    """0-dim PH of a 2D image under the superlevel filtration (Algorithm 1).
+
+    Returns a fixed-capacity :class:`Diagram`, rows sorted by descending
+    (birth value, birth index); row 0 is the essential class of the global
+    maximum with death at the global minimum.
+
+    ``truncate_value`` (optional, traced): the paper's Variant-2 threshold.
+    Components born below it are dropped, merges below it are skipped, and
+    surviving non-essential components die at the threshold — the diagram
+    truncated at t.  Births/deaths >= t are bit-identical to the untruncated
+    run (tests/test_pipeline.py).
+    """
+    if image.ndim != 2:
+        raise ValueError(f"expected 2D image, got shape {image.shape}")
+    h, w = image.shape
+    n = h * w
+    vals = image.reshape(-1)
+    rank = total_order_rank(vals)
+
+    # Steps 1-2: basins via steepest ascent + pointer doubling.
+    pointers = steepest_neighbors(image, use_pallas=use_pallas,
+                                  interpret=interpret)
+    labels = resolve_labels(pointers)
+    is_root = labels == jnp.arange(n, dtype=jnp.int32)
+
+    # Steps 3-4: death-point candidates.
+    rank2d = rank.reshape(h, w)
+    if candidate_mode == "exact":
+        cand = exact_candidates(rank2d, labels.reshape(h, w)).reshape(-1)
+    elif candidate_mode == "paper":
+        comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
+        cand = paper_candidates(rank2d, comp2d, use_pallas=use_pallas,
+                                interpret=interpret).reshape(-1)
+    else:
+        raise ValueError(f"unknown candidate_mode {candidate_mode!r}")
+
+    # Step 5: merge sweep — faithful sequential scan, or the Boruvka
+    # parallel merge forest (beyond-paper; O(log C) rounds, bit-identical).
+    if merge_impl == "scan":
+        dval, dpos, overflow_k = merge_components(
+            vals, rank, labels, cand, (h, w), max_candidates,
+            truncate_value=truncate_value)
+    elif merge_impl == "boruvka":
+        from repro.core import parallel_merge
+        cand_b = cand if truncate_value is None else \
+            cand & (vals >= truncate_value)
+        dval, dpos, overflow_k = parallel_merge.boruvka_merge(
+            vals, rank, labels, cand_b, (h, w), max_candidates)
+    else:
+        raise ValueError(f"unknown merge_impl {merge_impl!r}")
+
+    if truncate_value is not None:
+        # Sub-threshold components are background; survivors die at t.
+        is_root = is_root & (vals >= truncate_value)
+        undied = is_root & (dpos < 0)
+        dval = jnp.where(undied, jnp.asarray(truncate_value, dval.dtype),
+                         dval)
+
+    # Essential class: global maximum dies at the global minimum (paper fig 3).
+    gmax = jnp.argmax(rank)
+    gmin = jnp.argmin(rank)
+    dval = dval.at[gmax].set(vals[gmin])
+    dpos = dpos.at[gmax].set(gmin)
+
+    # Step 6: persistence diagram, descending by birth.
+    f = min(max_features, n)
+    root_key = jnp.where(is_root, rank, jnp.int32(-1))
+    _, root_pix = jax.lax.top_k(root_key, f)
+    row_valid = jnp.arange(f) < jnp.sum(is_root, dtype=jnp.int32)
+
+    neg_inf = (-jnp.inf if jnp.issubdtype(vals.dtype, jnp.floating)
+               else jnp.iinfo(vals.dtype).min)
+    birth = jnp.where(row_valid, vals[root_pix], neg_inf)
+    death = jnp.where(row_valid, dval[root_pix], neg_inf)
+    p_birth = jnp.where(row_valid, root_pix, -1).astype(jnp.int32)
+    p_death = jnp.where(row_valid, dpos[root_pix], -1).astype(jnp.int32)
+
+    c = jnp.sum(is_root, dtype=jnp.int32)
+    n_unmerged = jnp.sum(is_root & (dpos < 0), dtype=jnp.int32)
+    overflow = overflow_k | (c > f)
+    return Diagram(birth, death, p_birth, p_death,
+                   jnp.minimum(c, f), n_unmerged, overflow)
+
+
+def batched_pixhomology(images: jnp.ndarray, truncate_values=None,
+                        **kwargs) -> Diagram:
+    """vmap'd PixHomology over a batch (B, H, W) — one executor task each.
+
+    ``truncate_values``: optional (B,) per-image Variant-2 thresholds."""
+    fn = functools.partial(pixhomology, **kwargs)
+    if truncate_values is None:
+        return jax.vmap(lambda im: fn(im))(images)
+    return jax.vmap(lambda im, t: fn(im, t))(images, truncate_values)
+
+
+def num_candidates(image: jnp.ndarray,
+                   candidate_mode: str = "exact",
+                   truncate_value=None) -> jnp.ndarray:
+    """Count death-point candidates (to size ``max_candidates``)."""
+    h, w = image.shape
+    vals = image.reshape(-1)
+    rank = total_order_rank(vals)
+    labels = resolve_labels(steepest_neighbors(image, use_pallas=False))
+    if candidate_mode == "exact":
+        cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
+    else:
+        is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
+        comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
+        cand = paper_candidates(rank.reshape(h, w), comp2d, use_pallas=False)
+    if truncate_value is not None:
+        cand = cand & (image >= truncate_value)
+    return jnp.sum(cand, dtype=jnp.int32)

@@ -1,0 +1,55 @@
+"""Deterministic synthetic LM token pipeline.
+
+Learnable structure (not uniform noise): a per-document order-2 Markov chain
+over the vocabulary derived from a hashed transition rule, so models show a
+decreasing loss curve.  Sharded "self-loading" (paper Variant 1): each call
+materializes only the requested global batch; per-device slices are
+deterministic in (step, position), so any host can regenerate any shard —
+this is also what makes data-pipeline restore trivial (state = step count).
+
+LPT note (DESIGN.md §4): for LM training the paper's Variant-3 scheduling
+maps to length-bucketed batch packing; documents here are fixed-length so
+packing is exact, but ``pack_documents`` shows the LPT path used for
+variable-length corpora.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pipeline.scheduler import part_lpt
+
+
+class TokenStream:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 *, seed: int = 0):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = global_batch
+        self.seed = seed
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        b, s, v = self.batch, self.seq, self.vocab
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, v, b)
+        toks[:, 1] = rng.integers(0, v, b)
+        mult = rng.integers(1, v, b)[:, None]
+        for t in range(2, s + 1):
+            # order-2 hashed markov chain + occasional random jumps
+            a = toks[:, t - 1].astype(np.int64)
+            c = toks[:, t - 2].astype(np.int64)
+            nxt = ((a * 1103515245 + c * 12345 + 6364136) % 2147483647) % v
+            jump = rng.random(b) < 0.05
+            nxt = np.where(jump, rng.integers(0, v, b), nxt)
+            toks[:, t] = nxt.astype(np.int32)
+        return {"inputs": toks[:, :-1], "targets": toks[:, 1:],
+                "mask": np.ones((b, s), np.float32)}
+
+
+def pack_documents(lengths, budget: int, m_bins: int):
+    """LPT-pack variable-length documents into m token-budget bins."""
+    ids = list(range(len(lengths)))
+    costs = {i: float(lengths[i]) for i in ids}
+    sched = part_lpt(ids, m_bins, costs)
+    return sched.queues

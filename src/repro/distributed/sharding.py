@@ -1,0 +1,236 @@
+"""Sharding rules: params / optimizer states / caches -> PartitionSpec trees.
+
+Strategy (DESIGN.md §5):
+* TP over `model`: column-parallel in-projections, row-parallel
+  out-projections (Megatron); vocab over `model`.
+* EP over `model`: MoE expert dim (E == 16 == axis size on the target mesh).
+* ZeRO/FSDP over `data`: optimizer moments always; parameters too for archs
+  whose model-sharded weights alone exceed the per-chip budget
+  (``fsdp_params`` — dbrx, llama4-scout, chameleon).
+* `pod` is pure data parallelism: params replicated across pods, one gradient
+  all-reduce per step (DCN-friendly).
+* Every rule is divisibility-guarded: an axis is applied to a dim only when
+  it divides evenly (uneven sharding is rejected by jit) — e.g. llama4's 40
+  heads don't split 16 ways, so its attention shards on the flattened feature
+  dim instead; whisper's 12-head attention stays replicated while its MLP
+  shards.
+
+Caches (decode): KV caches shard batch over `data` and the *sequence* dim
+over `model` (flash-decoding style: XLA turns the masked softmax over the
+sharded dim into partial reductions + a small combine), so 32k x 128 caches
+fit; recurrent states shard their channel dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Archs whose bf16 params exceed ~4 GB/chip with model-only sharding.
+FSDP_PARAM_ARCHS = {"dbrx_132b", "llama4_scout_17b_a16e", "chameleon_34b"}
+
+# trailing-dims rules: name -> ("col" | "row" | special)
+_COL = {"wq", "wk", "wv", "wg", "wr", "w_gate", "w_up", "w_in", "wa", "wx",
+        "tm_w1", "wd1", "conv_w"}
+_ROW = {"wo", "w_down", "w_out", "wv_cm", "wd2"}
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    if axis is None or dim is None:
+        return False
+    size = mesh.shape[axis] if isinstance(axis, str) else \
+        int(jnp.prod(jnp.array([mesh.shape[a] for a in axis])))
+    return dim % size == 0 and dim >= size
+
+
+def _axis_if(dim, mesh, axis):
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def param_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
+               *, fsdp: bool, tp: str | None = "model",
+               dp: str | None = "data") -> P:
+    """PartitionSpec for one parameter leaf (leading stack dims -> None)."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    nd = len(shape)
+    fs = dp if fsdp else None
+
+    def pad(trailing):  # fill leading (layer-stack) dims with None
+        return P(*([None] * (nd - len(trailing)) + list(trailing)))
+
+    if name == "embedding":                      # (V, D)
+        return pad([_axis_if(shape[-2], mesh, tp),
+                    _axis_if(shape[-1], mesh, fs)])
+    if name == "lm_head":                        # (D, V)
+        return pad([_axis_if(shape[-2], mesh, fs),
+                    _axis_if(shape[-1], mesh, tp)])
+    if name == "router":                         # (D, E) tiny, replicated
+        return pad([None, None])
+    if parent == "moe" or (name in ("w_gate", "w_up", "w_down")
+                           and nd >= 3 and path[-2] != "shared"):
+        if name in ("w_gate", "w_up"):           # (E, D, F)
+            return pad([_axis_if(shape[-3], mesh, tp), None,
+                        _axis_if(shape[-1], mesh, dp)])
+        if name == "w_down":                     # (E, F, D)
+            return pad([_axis_if(shape[-3], mesh, tp),
+                        _axis_if(shape[-2], mesh, dp), None])
+    if parent == "cm" and name == "wv":          # channelmix (F, D): row
+        return pad([_axis_if(shape[-2], mesh, tp),
+                    _axis_if(shape[-1], mesh, fs)])
+    if name in _COL and nd >= 2:                 # (.., in, out): col-parallel
+        return pad([_axis_if(shape[-2], mesh, fs),
+                    _axis_if(shape[-1], mesh, tp)])
+    if name in _ROW and nd >= 2:                 # (.., in, out): row-parallel
+        return pad([_axis_if(shape[-2], mesh, tp),
+                    _axis_if(shape[-1], mesh, fs)])
+    if name == "tm_w2":                          # (5, LORA, D)
+        return pad([None, _axis_if(shape[-1], mesh, tp)] if nd == 2 else
+                   [None, None, _axis_if(shape[-1], mesh, tp)])
+    # norms, biases, gates, u, lam, maa*: replicated
+    return P(*([None] * nd))
+
+
+def param_specs(shapes_tree, mesh, arch_name: str, *, tp="model", dp="data",
+                fsdp: bool | None = None):
+    """PartitionSpec tree matching a params pytree (of ShapeDtypeStructs)."""
+    if fsdp is None:
+        fsdp = arch_name in FSDP_PARAM_ARCHS
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+
+    def keyname(k):
+        if isinstance(k, jax.tree_util.DictKey):
+            return str(k.key)
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            return k.name
+        if isinstance(k, jax.tree_util.SequenceKey):
+            return str(k.idx)
+        return str(k)
+
+    specs = []
+    for kp, leaf in flat:
+        path = tuple(keyname(k) for k in kp)
+        specs.append(param_spec(path, tuple(leaf.shape), mesh,
+                                fsdp=fsdp, tp=tp, dp=dp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(pspec_tree, shapes_tree, mesh, *, dp="data"):
+    """Moments: param spec + `data` on the largest still-replicated dim."""
+    def one(spec: P, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        has_dp = any(p == dp or (isinstance(p, tuple) and dp in p)
+                     for p in parts)
+        if has_dp:
+            return P(*parts)
+        # find largest unsharded dim divisible by |data|
+        cands = [(leaf.shape[i], i) for i in range(len(parts))
+                 if parts[i] is None and _fits(leaf.shape[i], mesh, dp)]
+        if cands:
+            _, i = max(cands)
+            parts[i] = dp
+        return P(*parts)
+
+    return jax.tree.map(one, pspec_tree, shapes_tree)
+
+
+def batch_specs(batch_tree, mesh, dp_axes=("data",)):
+    """Input batches: dim 0 (global batch) over the dp axes when divisible."""
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        ax = dp_axes if all(m in mesh.shape for m in dp_axes) else None
+        size = 1
+        for a in dp_axes:
+            size *= mesh.shape[a]
+        if leaf.shape[0] % size == 0 and leaf.shape[0] >= size:
+            return P(dp_axes, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_specs(cache_tree, mesh, *, tp="model", dp_axes=("data",)):
+    """Decode caches: named-dim rules (see module docstring)."""
+    dp = dp_axes
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+
+    def keyname(k):
+        if isinstance(k, jax.tree_util.DictKey):
+            return str(k.key)
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            return k.name
+        if isinstance(k, jax.tree_util.SequenceKey):
+            return str(k.idx)
+        return str(k)
+
+    dpsize = 1
+    for a in dp_axes:
+        dpsize *= mesh.shape[a]
+
+    def dp_if(dim):
+        return dp if dim % dpsize == 0 and dim >= dpsize else None
+
+    specs = []
+    for kp, leaf in flat:
+        name = keyname(kp[-1]) if kp else ""
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if name in ("k", "v") and nd >= 4:
+            # (..., B, S, KV, hd): B -> data, S -> model (flash-decoding)
+            lead = [None] * (nd - 4)
+            specs.append(P(*lead, dp_if(shape[-4]),
+                           _axis_if(shape[-3], mesh, tp), None, None))
+        elif name == "wkv" and nd >= 4:
+            # (..., B, H, K, K): B -> data, K -> model
+            lead = [None] * (nd - 4)
+            specs.append(P(*lead, dp_if(shape[-4]), None,
+                           _axis_if(shape[-2], mesh, tp), None))
+        elif name in ("tm_x", "cm_x", "h") and nd >= 2:
+            lead = [None] * (nd - 2)
+            specs.append(P(*lead, dp_if(shape[-2]),
+                           _axis_if(shape[-1], mesh, tp)))
+        elif name == "conv" and nd >= 3:
+            lead = [None] * (nd - 3)
+            specs.append(P(*lead, dp_if(shape[-3]), None,
+                           _axis_if(shape[-1], mesh, tp)))
+        elif name == "length" or nd <= 1:
+            specs.append(P(*([None] * nd)))
+        else:
+            specs.append(P(*([None] * nd)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, ctx, parts):
+    """``with_sharding_constraint`` with divisibility guards.
+
+    ``parts``: one entry per dim of x — an axis name, a tuple of axis
+    names, or None.  Axes that don't divide the dim are dropped (uneven
+    sharding is rejected by XLA).  ``ctx=None`` is a no-op so model code
+    stays runnable without a mesh.
+    """
+    if ctx is None or ctx.mesh is None:
+        return x
+    mesh = ctx.mesh
+    fixed = []
+    for dim, p in zip(x.shape, tuple(parts) + (None,) * x.ndim):
+        if p is None:
+            fixed.append(None)
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        size = 1
+        ok = True
+        for a in axes:
+            if a not in mesh.shape:
+                ok = False
+                break
+            size *= mesh.shape[a]
+        fixed.append(p if ok and dim % size == 0 and dim >= size else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,137 @@
+"""Pallas TPU flash attention (forward), GQA-aware.
+
+Grid (B, H, n_q, n_kv) with the KV dimension innermost/sequential; online
+softmax state (running max m, normalizer l, f32 accumulator) lives in VMEM
+scratch and survives across KV grid steps; the output block is written once
+at the final KV step.  K/V BlockSpecs index ``head // group`` so grouped
+query heads share one KV stream — K/V are never repeated to H heads.
+
+Block sizes default to (q_block, kv_block) = (128, 128): the MXU sees
+(128, hd) x (hd, 128) tiles (lane-aligned for hd in {64, 128, 256}); the
+VMEM working set is q + k + v + acc ≈ 4 * 128 * hd * 4 B plus the (128, 128)
+f32 score tile — well under 1 MB, leaving the Pallas pipeline room to
+double-buffer the K/V streams against the MXU.
+
+Causal skipping: KV blocks entirely above the diagonal are skipped via
+``pl.when`` (no MXU work), so the causal forward does ~half the rectangle's
+FLOPs — this is the structural win over the XLA masked path whose HLO does
+the full rectangle (see EXPERIMENTS.md §Roofline, useful-flops ratio).
+
+Backward: ``ops.flash_attention`` wraps this in a ``jax.custom_vjp`` whose
+backward recomputes attention with the blockwise-XLA path (flash-style
+recompute; no O(S^2) residuals are ever stored).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               q_block: int, kv_block: int, n_kv: int, causal: bool,
+               window: int | None, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * q_block
+    k_start = ik * kv_block
+    # Causal: skip blocks strictly above the diagonal; window: skip blocks
+    # entirely older than the window.
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + q_block - 1
+    if window is not None:
+        relevant = relevant & (k_start + kv_block - 1
+                               > q_start - window)
+
+    @pl.when(relevant)
+    def compute():
+        q = q_ref[0, 0]                                # (qb, hd)
+        k = k_ref[0, 0]                                # (kb, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (qb, kb)
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1)
+        mask = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: int | None = None, q_block: int = 128,
+                        kv_block: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Skv, hd). Returns (B, H, Sq, hd)."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    if sq % qb or skv % kb:
+        raise ValueError(f"seq lens ({sq},{skv}) must tile into blocks "
+                         f"({qb},{kb}); pad upstream")
+    n_q, n_kv = sq // qb, skv // kb
+
+    kernel = functools.partial(
+        _fa_kernel, q_block=qb, kv_block=kb, n_kv=n_kv, causal=causal,
+        window=window, scale=hd ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, kb, hd),
+                         lambda b_, h_, i, j, g=g: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, kb, hd),
+                         lambda b_, h_, i, j, g=g: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=_scratch(qb, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(qb, hd):
+    from jax.experimental.pallas import tpu as pltpu
+    return [pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, hd), jnp.float32)]

@@ -1,0 +1,41 @@
+"""Public flash attention op: Pallas forward + flash-style recompute backward.
+
+``flash_attention(q, k, v, causal=..., window=...)`` — layout (B, H, S, hd)
+for q and (B, KV, S, hd) for k/v.  On non-TPU backends (this container) the
+kernel runs in interpret mode inside tests; production model code uses the
+XLA blockwise path by default and flips to this op on TPU
+(models/attention.py dispatch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, window=None, interpret=False):
+    return kernel.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                      interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    out = kernel.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                     interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    # Flash-style backward: recompute attention (O(S) memory) through the
+    # reference contraction and differentiate it.
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

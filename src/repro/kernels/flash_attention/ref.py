@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Materialized softmax attention with GQA, causal and local-window masking.
+Layout: q (B, H, Sq, hd); k/v (B, KV, Skv, hd).  f32 accumulation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None):
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    q5 = q.reshape(b, kvh, g, sq, hd)
+    s = jnp.einsum("bngqd,bnkd->bngqk", q5, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngqk,bnkd->bngqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, sq, hd).astype(q.dtype)

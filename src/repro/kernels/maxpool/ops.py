@@ -1,0 +1,55 @@
+"""Jit'd public wrappers for the 3x3 pooling ops with backend dispatch.
+
+`use_pallas=None` (default) auto-selects: the Pallas TPU kernel on TPU
+backends, the pure-jnp reference elsewhere (this container is CPU-only, so CI
+exercises the kernel via interpret mode in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxpool import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def maxargmaxpool3x3(x: jnp.ndarray, *, use_pallas: bool | None = None,
+                     interpret: bool = False):
+    """Fused 3x3 (maxpool, argmaxpool), stride 1, pad 1.
+
+    Returns (max: x.dtype, argmax: int32 flat index), shapes == x.shape.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        from repro.kernels.maxpool import kernel
+        return kernel.maxargmaxpool3x3(x, interpret=interpret or not _on_tpu())
+    return ref.maxargmaxpool3x3(x)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def maxpool3x3(x: jnp.ndarray, *, use_pallas: bool | None = None,
+               interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        from repro.kernels.maxpool import kernel
+        return kernel.maxpool3x3(x, interpret=interpret or not _on_tpu())
+    return ref.maxpool3x3(x)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def minpool3x3(x: jnp.ndarray, *, use_pallas: bool | None = None,
+               interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        from repro.kernels.maxpool import kernel
+        return kernel.minpool3x3(x, interpret=interpret or not _on_tpu())
+    return ref.minpool3x3(x)

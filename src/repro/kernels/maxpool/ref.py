@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the 3x3 max/argmax pooling ops (paper Alg. 1 lines 1, 6).
+
+These are the reference semantics the Pallas kernel (kernel.py) must match
+bit-exactly.  All ops use a 3x3 window, stride 1, padding 1 (same-size output),
+matching the paper's ``maxpool2d`` / ``arg-maxpool2d`` with kernel=3, stride=1,
+pad=1.
+
+Argmax tie-breaking uses the *total order* (value, flat_index): among equal
+values the neighbor with the LARGEST flat index wins.  This makes every
+operation deterministic even when the paper's strict-local-max precondition is
+violated, and the union-find oracle uses the same total order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# (dr, dc) offsets of the 3x3 window, self included.
+OFFSETS = [(-1, -1), (-1, 0), (-1, 1),
+           (0, -1), (0, 0), (0, 1),
+           (1, -1), (1, 0), (1, 1)]
+
+
+def _shift(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
+    """Return y with y[r, c] = x[r + dr, c + dc], `fill` outside."""
+    h, w = x.shape
+    padded = jnp.pad(x, 1, constant_values=fill)
+    return padded[1 + dr : 1 + dr + h, 1 + dc : 1 + dc + w]
+
+
+def _neg_inf(dtype) -> jnp.ndarray:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def _pos_inf(dtype) -> jnp.ndarray:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def maxpool3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3/stride-1/pad-1 max pool; works for float and int dtypes."""
+    fill = _neg_inf(x.dtype)
+    out = x
+    for dr, dc in OFFSETS:
+        if (dr, dc) == (0, 0):
+            continue
+        out = jnp.maximum(out, _shift(x, dr, dc, fill))
+    return out
+
+
+def minpool3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3/stride-1/pad-1 min pool (= -maxpool2d(-x) in the paper)."""
+    fill = _pos_inf(x.dtype)
+    out = x
+    for dr, dc in OFFSETS:
+        if (dr, dc) == (0, 0):
+            continue
+        out = jnp.minimum(out, _shift(x, dr, dc, fill))
+    return out
+
+
+def argmaxpool3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """Flat index (int32) of the 3x3-window max under (value, index) order.
+
+    out[r, c] = flat index of the neighbor (self included) with the largest
+    (value, flat_index) key.  Border windows are truncated (out-of-image
+    candidates never win).
+    """
+    h, w = x.shape
+    rows = jnp.arange(h, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, :]
+    flat = rows * w + cols
+
+    fill = _neg_inf(x.dtype)
+    best_val = x
+    best_idx = flat
+    for dr, dc in OFFSETS:
+        if (dr, dc) == (0, 0):
+            continue
+        v = _shift(x, dr, dc, fill)
+        i = _shift(flat, dr, dc, jnp.int32(-1))
+        better = (v > best_val) | ((v == best_val) & (i > best_idx))
+        best_val = jnp.where(better, v, best_val)
+        best_idx = jnp.where(better, i, best_idx)
+    return best_idx
+
+
+def maxargmaxpool3x3(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused (maxpool3x3, argmaxpool3x3) — what the Pallas kernel computes."""
+    return maxpool3x3(x), argmaxpool3x3(x)

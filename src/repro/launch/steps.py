@@ -1,0 +1,118 @@
+"""Jitted, sharded train / prefill / decode steps shared by the dry-run,
+the training driver and the serving driver."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding
+from repro.distributed.context import DistContext
+from repro.models.model import Model, build_model
+from repro.optim.adamw import AdamW, OptState
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A lowered/compilable step with its arg specs (ShapeDtypeStructs)."""
+    fn: Any                  # jitted function
+    args: tuple              # ShapeDtypeStructs to .lower() with
+    description: str
+
+
+def train_bundle(cfg: ModelConfig, shape: ShapeConfig, ctx: DistContext,
+                 opt: AdamW | None = None) -> StepBundle:
+    model = build_model(cfg)
+    opt = opt or AdamW()
+    mesh = ctx.mesh
+
+    params_sds = model.param_shapes()
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    batch_sds = model.input_specs(shape)
+
+    pspec = sharding.param_specs(params_sds, mesh, cfg.name)
+    mspec = sharding.opt_state_specs(pspec, params_sds, mesh)
+    ospec = OptState(mspec, mspec, jax.sharding.PartitionSpec())
+    bspec = sharding.batch_specs(batch_sds, mesh, ctx.dp_axes)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, ctx), has_aux=True)(params)
+        new_params, new_opt, opt_metrics = opt.update(params, grads,
+                                                      opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    named = lambda spec: sharding.to_named(spec, mesh)
+    fn = jax.jit(train_step,
+                 in_shardings=(named(pspec), named(ospec), named(bspec)),
+                 out_shardings=(named(pspec), named(ospec), None),
+                 donate_argnums=(0, 1))
+    return StepBundle(fn, (params_sds, opt_sds, batch_sds),
+                      f"train_step {cfg.name} {shape.name}")
+
+
+def prefill_bundle(cfg: ModelConfig, shape: ShapeConfig,
+                   ctx: DistContext) -> StepBundle:
+    model = build_model(cfg)
+    mesh = ctx.mesh
+    params_sds = model.param_shapes()
+    batch_sds = model.input_specs(shape)
+
+    pspec = sharding.param_specs(params_sds, mesh, cfg.name)
+    bspec = sharding.batch_specs(batch_sds, mesh, ctx.dp_axes)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch, ctx,
+                                       max_len=shape.seq_len)
+        return jnp.argmax(logits, -1).astype(jnp.int32), caches
+
+    cache_sds = jax.eval_shape(prefill_step, params_sds, batch_sds)[1]
+    cspec = sharding.cache_specs(cache_sds, mesh, dp_axes=ctx.dp_axes)
+
+    named = lambda spec: sharding.to_named(spec, mesh)
+    fn = jax.jit(prefill_step,
+                 in_shardings=(named(pspec), named(bspec)),
+                 out_shardings=(None, named(cspec)))
+    return StepBundle(fn, (params_sds, batch_sds),
+                      f"prefill {cfg.name} {shape.name}")
+
+
+def decode_bundle(cfg: ModelConfig, shape: ShapeConfig,
+                  ctx: DistContext) -> StepBundle:
+    """serve_step: one new token against a seq_len KV cache (per brief)."""
+    model = build_model(cfg)
+    mesh = ctx.mesh
+    params_sds = model.param_shapes()
+    specs = model.input_specs(shape)
+    token_sds, cache_sds = specs["token"], specs["caches"]
+
+    pspec = sharding.param_specs(params_sds, mesh, cfg.name)
+    tspec = sharding.batch_specs(token_sds, mesh, ctx.dp_axes)
+    cspec = sharding.cache_specs(cache_sds, mesh, dp_axes=ctx.dp_axes)
+
+    def serve_step(params, token, caches):
+        logits, new_caches = model.decode_step(params, token, caches, ctx)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_caches
+
+    named = lambda spec: sharding.to_named(spec, mesh)
+    fn = jax.jit(serve_step,
+                 in_shardings=(named(pspec), named(tspec), named(cspec)),
+                 out_shardings=(named(tspec), named(cspec)),
+                 donate_argnums=(2,))
+    return StepBundle(fn, (params_sds, token_sds, cache_sds),
+                      f"serve_step {cfg.name} {shape.name}")
+
+
+def bundle_for(cfg: ModelConfig, shape: ShapeConfig,
+               ctx: DistContext) -> StepBundle:
+    if shape.kind == "train":
+        return train_bundle(cfg, shape, ctx)
+    if shape.kind == "prefill":
+        return prefill_bundle(cfg, shape, ctx)
+    if shape.kind == "decode":
+        return decode_bundle(cfg, shape, ctx)
+    raise ValueError(shape.kind)

@@ -1,0 +1,442 @@
+"""Attention: GQA/MQA/MHA with RoPE, qk-norm, local windows, KV-cache decode.
+
+Full-sequence attention uses a blockwise online-softmax formulation (flash
+attention re-expressed in pure lax: vmap over query blocks, scan over KV
+blocks, f32 running max/sum) so 32k-token sequences never materialize the
+(S, S) score matrix.  The Pallas TPU kernel in ``kernels/flash_attention``
+implements the same contraction for the hot path; this XLA path is the
+reference and the dry-run/compile path.
+
+Layout conventions: activations (B, S, D); q/k/v (B, S, H, hd); KV caches
+(B, S_max, Hkv, hd) written at ``pos`` via dynamic_update_slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float | None = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    causal: bool = True
+    window: int | None = None           # local attention window (None = full)
+    q_block: int = 512
+    kv_block: int = 1024
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S_max, Hkv, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32 — tokens currently valid
+
+
+def init_attention(key, spec: AttnSpec, *, dtype=jnp.float32):
+    d, h, hk, hd = spec.d_model, spec.num_heads, spec.num_kv_heads, spec.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": layers.dense_init(ks[1], (d, hk * hd), dtype=dtype),
+        "wv": layers.dense_init(ks[2], (d, hk * hd), dtype=dtype),
+        "wo": layers.dense_init(ks[3], (h * hd, d), dtype=dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hk * hd,), dtype)
+        p["bv"] = jnp.zeros((hk * hd,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = layers.rmsnorm_init(hd, dtype=dtype)
+        p["k_norm"] = layers.rmsnorm_init(hd, dtype=dtype)
+    return p
+
+
+def _project_qkv(params, x, kv_src, positions, kv_positions, spec: AttnSpec):
+    b = x.shape[0]
+    kv_in = x if kv_src is None else kv_src
+    q = layers.matmul(x, params["wq"])
+    k = layers.matmul(kv_in, params["wk"])
+    v = layers.matmul(kv_in, params["wv"])
+    if spec.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, -1, spec.num_heads, spec.head_dim)
+    k = k.reshape(b, -1, spec.num_kv_heads, spec.head_dim)
+    v = v.reshape(b, -1, spec.num_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q)
+        k = layers.rmsnorm(params["k_norm"], k)
+    if spec.rope_theta is not None:
+        q = layers.rope(q, positions, theta=spec.rope_theta)
+        k = layers.rope(k, kv_positions, theta=spec.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, *, q_positions, kv_positions, causal, window,
+                        kv_valid_len=None, q_block=512, kv_block=1024):
+    """Flash attention in pure XLA (custom_vjp): never materializes the
+    (Sq, Skv) matrix in either direction.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd).  Forward: vmap over query
+    blocks (parallel => the query-sequence dim stays shardable for
+    context-parallel attention, §Perf LM-4) x scan over KV blocks with an
+    online softmax.  Backward: custom_vjp recomputes probabilities per block
+    from the saved (q, k, v, out, lse) — O(S) residuals, no per-step scan
+    carries (a vmap-of-scans autodiff pins O(S^2/kb) f32 carries: measured
+    295 GB/device for a 0.5B model at 4k — §Perf LM-2 log).
+
+    Positions must be 0..S-1 (standard full-sequence layout; offsets are
+    handled by the decode path, which doesn't use this function).
+    """
+    del q_positions, kv_positions  # global arange layout (see docstring)
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    nq = -(-sq // qb)
+    nk = -(-skv // kb)
+
+    def pad_to(x, m, axis):
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, m - x.shape[axis])
+        return jnp.pad(x, pad) if m != x.shape[axis] else x
+
+    qp = pad_to(q, nq * qb, 1)
+    kp = pad_to(k, nk * kb, 1)
+    vp = pad_to(v, nk * kb, 1)
+    skv_valid = int(skv if kv_valid_len is None else kv_valid_len) \
+        if not hasattr(kv_valid_len, "dtype") else skv
+    out = _flash(qp, kp, vp, causal, window, qb, kb, skv_valid)
+    return out[:, :sq].astype(v.dtype)
+
+
+def _mask_for(iq, ik, qb, kb, causal, window, skv_valid):
+    qpos = iq * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    kpos = ik * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    mask = kpos < skv_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask[None, None, None]          # (1, 1, 1, qb, kb)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, qb, kb, skv_valid):
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nq, nk = sq // qb, skv // kb
+    scale = hd ** -0.5
+
+    q_blocks = q.reshape(b, nq, qb, h, hd).transpose(1, 0, 2, 3, 4)
+    k_blocks = k.reshape(b, nk, kb, hkv, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(b, nk, kb, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(iq, qi):
+        # GQA-grouped: q (B, qb, KV, G, hd) against (B, kb, KV, hd) — K/V
+        # never repeated to H heads (§Perf LM-3); bf16 MXU, f32 accum.
+        q5 = qi.reshape(b, qb, hkv, g, hd)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry                        # (B, KV, G, qb[, hd])
+            ik, kj, vj = xs
+            s = jnp.einsum("bqngd,bknd->bngqk", q5, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(iq, ik, qb, kb, causal, window, skv_valid)
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bngqk,bknd->bngqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk, dtype=jnp.int32), k_blocks, v_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(l > 0, jnp.where(jnp.isfinite(m), m, 0.0)
+                        + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+        return (out.transpose(0, 3, 1, 2, 4).reshape(b, qb, h, hd),
+                lse)                                  # lse: (B, KV, G, qb)
+
+    outs, lses = jax.vmap(one_q_block)(
+        jnp.arange(nq, dtype=jnp.int32), q_blocks)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+    return out.astype(v.dtype), lses                  # lses: (nq, B, KV, G, qb)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, qb, kb, skv_valid):
+    return _flash_fwd_impl(q, k, v, causal, window, qb, kb, skv_valid)[0]
+
+
+def _flash_fwd(q, k, v, causal, window, qb, kb, skv_valid):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, qb, kb, skv_valid)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, qb, kb, skv_valid, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nq, nk = sq // qb, skv // kb
+    scale = hd ** -0.5
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                          # (B, S, H)
+    delta = delta.reshape(b, sq, hkv, g).transpose(1, 0, 2, 3) \
+        .reshape(nq, qb, b, hkv, g).transpose(0, 2, 3, 4, 1)  # (nq,B,KV,G,qb)
+
+    def blocks(x, n, blk, heads):
+        return x.reshape(b, n, blk, heads, hd).transpose(1, 0, 2, 3, 4)
+
+    q_blocks = blocks(q, nq, qb, h)
+    k_blocks = blocks(k, nk, kb, hkv)
+    v_blocks = blocks(v, nk, kb, hkv)
+    do_blocks = blocks(dout, nq, qb, h)
+
+    def p_of(iq, ik, q5, kj, lse_i):
+        s = jnp.einsum("bqngd,bknd->bngqk", q5, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_for(iq, ik, qb, kb, causal, window, skv_valid)
+        lse_safe = jnp.where(jnp.isfinite(lse_i), lse_i, 0.0)
+        p = jnp.exp(s - lse_safe[..., None])
+        p = jnp.where(mask & jnp.isfinite(lse_i)[..., None], p, 0.0)
+        return p                                      # (B, KV, G, qb, kb)
+
+    # dq: for each q block, scan kv blocks.
+    def dq_block(iq, qi, doi, lse_i, delta_i):
+        q5 = qi.reshape(b, qb, hkv, g, hd)
+        do5 = doi.reshape(b, qb, hkv, g, hd)
+
+        def step(acc, xs):
+            ik, kj, vj = xs
+            p = p_of(iq, ik, q5, kj, lse_i)
+            dvp = jnp.einsum("bqngd,bknd->bngqk", do5, vj,
+                             preferred_element_type=jnp.float32)
+            ds = p * (dvp - delta_i[..., None])
+            acc = acc + jnp.einsum("bngqk,bknd->bqngd", ds.astype(kj.dtype),
+                                   kj, preferred_element_type=jnp.float32)
+            return acc, None
+
+        acc0 = jnp.zeros((b, qb, hkv, g, hd), jnp.float32)
+        acc, _ = jax.lax.scan(step, acc0, (jnp.arange(nk, dtype=jnp.int32),
+                                           k_blocks, v_blocks))
+        return (acc * scale).reshape(b, qb, h, hd)
+
+    lse_blocks = _flash_lse_reshape(lse, nq)
+    dq_blocks = jax.vmap(dq_block)(jnp.arange(nq, dtype=jnp.int32),
+                                   q_blocks, do_blocks, lse_blocks, delta)
+    dq = dq_blocks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+    # dk/dv: for each kv block, scan q blocks.
+    def dkv_block(ik, kj, vj):
+        def step(carry, xs):
+            dk_acc, dv_acc = carry
+            iq, qi, doi, lse_i, delta_i = xs
+            q5 = qi.reshape(b, qb, hkv, g, hd)
+            do5 = doi.reshape(b, qb, hkv, g, hd)
+            p = p_of(iq, ik, q5, kj, lse_i)
+            dv_acc = dv_acc + jnp.einsum(
+                "bngqk,bqngd->bknd", p.astype(do5.dtype), do5,
+                preferred_element_type=jnp.float32)
+            dvp = jnp.einsum("bqngd,bknd->bngqk", do5, vj,
+                             preferred_element_type=jnp.float32)
+            ds = p * (dvp - delta_i[..., None])
+            dk_acc = dk_acc + jnp.einsum(
+                "bngqk,bqngd->bknd", ds.astype(q5.dtype), q5,
+                preferred_element_type=jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, kb, hkv, hd), jnp.float32)
+        (dk_acc, dv_acc), _ = jax.lax.scan(
+            step, (z, z),
+            (jnp.arange(nq, dtype=jnp.int32), q_blocks, do_blocks,
+             lse_blocks, delta))
+        return dk_acc * scale, dv_acc
+
+    dk_blocks, dv_blocks = jax.vmap(dkv_block)(
+        jnp.arange(nk, dtype=jnp.int32), k_blocks, v_blocks)
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, hd)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _flash_lse_reshape(lse, nq):
+    return lse                                        # already (nq, B, KV, G, qb)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _constrain_qkv(q, k, v, ctx):
+    """Pin the attention-core layout: batch over the data axes plus either
+
+    * heads over `model` (Megatron) when the head count divides the TP
+      degree, or
+    * the *query sequence* over `model` (context-parallel: each TP rank
+      computes its query rows against replicated K/V) when it does not —
+      llama4's 40 heads and whisper's 12 heads vs 16-way TP would otherwise
+      run the whole attention rectangle replicated on every rank (measured
+      16x compute overhead on llama4 prefill_32k — EXPERIMENTS §Perf LM-4).
+
+    Without any constraint, XLA's propagation loses head sharding across
+    the q/k/v reshapes and emits per-layer all-to-all storms (LM-1)."""
+    if ctx is None:
+        return q, k, v
+    from repro.distributed.sharding import constrain
+    dp, tp = ctx.dp_axes, ctx.tp_axis
+    tp_size = ctx.axis_size(tp)
+    if q.shape[2] % max(tp_size, 1) == 0:
+        q = constrain(q, ctx, (dp, None, tp, None))
+        k = constrain(k, ctx, (dp, None, tp, None))
+        v = constrain(v, ctx, (dp, None, tp, None))
+    else:
+        q = constrain(q, ctx, (dp, tp, None, None))
+        k = constrain(k, ctx, (dp, None, None, None))
+        v = constrain(v, ctx, (dp, None, None, None))
+    return q, k, v
+
+
+def _flash_kernel_ok(q, k, spec: AttnSpec) -> bool:
+    """Use the Pallas kernel on TPU when the shapes tile into its blocks."""
+    if jax.default_backend() != "tpu":
+        return False
+    sq, skv = q.shape[1], k.shape[1]
+    return (sq % 128 == 0 and skv % 128 == 0
+            and spec.head_dim in (64, 128, 256))
+
+
+def apply_attention(params, x, *, spec: AttnSpec, positions=None,
+                    kv_src=None, kv_positions=None, ctx=None):
+    """Full-sequence attention (train / prefill without cache)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = (positions if kv_src is None
+                        else jnp.arange(kv_src.shape[1], dtype=jnp.int32))
+    q, k, v = _project_qkv(params, x, kv_src, positions, kv_positions, spec)
+    q, k, v = _constrain_qkv(q, k, v, ctx)
+    if _flash_kernel_ok(q, k, spec):
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), spec.causal and kv_src is None,
+            spec.window).transpose(0, 2, 1, 3)
+    else:
+        out = blockwise_attention(
+            q, k, v, q_positions=positions, kv_positions=kv_positions,
+            causal=spec.causal and kv_src is None, window=spec.window,
+            q_block=spec.q_block, kv_block=spec.kv_block)
+    out = out.reshape(b, s, spec.num_heads * spec.head_dim)
+    if ctx is not None:
+        from repro.distributed.sharding import constrain
+        out = constrain(out, ctx, (ctx.dp_axes, None, ctx.tp_axis))
+    return layers.matmul(out, params["wo"])
+
+
+def cache_len(max_len: int, spec: AttnSpec) -> int:
+    """Physical cache length: local-window layers keep a ring of `window`."""
+    return min(max_len, spec.window) if spec.window is not None else max_len
+
+
+def init_cache(batch, max_len, spec: AttnSpec, *, dtype) -> KVCache:
+    shape = (batch, cache_len(max_len, spec), spec.num_kv_heads, spec.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def prefill_attention(params, x, cache: KVCache, *, spec: AttnSpec,
+                      ctx=None):
+    """Full attention over a prompt, writing (the tail of) K/V to the cache.
+
+    Ring caches (local-window layers) keep the last `cache_len` tokens, each
+    stored at slot ``abs_pos % cache_len`` so decode writes stay aligned.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, None, positions, positions, spec)
+    q, k, v = _constrain_qkv(q, k, v, ctx)
+    c = cache.k.shape[1]
+    ktail = k[:, -c:].astype(cache.k.dtype)
+    vtail = v[:, -c:].astype(cache.v.dtype)
+    if s >= c and s % c:
+        ktail = jnp.roll(ktail, s % c, axis=1)
+        vtail = jnp.roll(vtail, s % c, axis=1)
+    knew = jax.lax.dynamic_update_slice(cache.k, ktail, (0, 0, 0, 0))
+    vnew = jax.lax.dynamic_update_slice(cache.v, vtail, (0, 0, 0, 0))
+    out = blockwise_attention(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        causal=spec.causal, window=spec.window,
+        q_block=spec.q_block, kv_block=spec.kv_block)
+    out = out.reshape(b, s, spec.num_heads * spec.head_dim)
+    out = layers.matmul(out, params["wo"])
+    return out, KVCache(knew, vnew, jnp.asarray(s, jnp.int32))
+
+
+def decode_attention(params, x, cache: KVCache, *, spec: AttnSpec,
+                     kv_src_cache: KVCache | None = None):
+    """One-token decode against the cache. x: (B, 1, D)."""
+    b = x.shape[0]
+    pos = jnp.asarray(cache.length, jnp.int32)
+    positions = pos[None]
+
+    if kv_src_cache is None:
+        q, k, v = _project_qkv(params, x, None, positions, positions, spec)
+        c = cache.k.shape[1]
+        slot = pos % c
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        new_cache = KVCache(ck, cv, cache.length + 1)
+        keys, vals = ck, cv
+        valid = jnp.minimum(pos + 1, c)
+    else:
+        # Cross attention: keys/values fixed (encoder outputs), no rope.
+        q = layers.matmul(x, params["wq"])
+        if spec.qkv_bias:
+            q = q + params["bq"]
+        q = q.reshape(b, 1, spec.num_heads, spec.head_dim)
+        if spec.qk_norm:
+            q = layers.rmsnorm(params["q_norm"], q)
+        if spec.rope_theta is not None:
+            q = layers.rope(q, positions, theta=spec.rope_theta)
+        new_cache = cache
+        keys, vals = kv_src_cache.k, kv_src_cache.v
+        valid = kv_src_cache.length
+
+    g = spec.num_heads // spec.num_kv_heads
+    # GQA-grouped: contract against the cache without repeating K/V to H
+    # heads (LM-3; the repeat materialized (B, S_cache, H, hd) f32).
+    q5 = q.reshape(b, spec.num_kv_heads, g, spec.head_dim)
+    s = jnp.einsum("bngd,bknd->bngk", q5, keys,
+                   preferred_element_type=jnp.float32)
+    s = s * spec.head_dim ** -0.5                    # (B, KV, G, S_cache)
+    idx = jnp.arange(keys.shape[1], dtype=jnp.int32)
+    mask = idx[None, None, None, :] < valid
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngk,bknd->bngd", p.astype(vals.dtype), vals,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, spec.num_heads * spec.head_dim).astype(x.dtype)
+    return layers.matmul(out, params["wo"]), new_cache

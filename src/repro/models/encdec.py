@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the brief, the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D).  Positions are sinusoidal on both
+sides (whisper's decoder uses learned positions up to 448; we substitute
+sinusoidal so assigned shapes up to 32k decode positions need no parameter
+resizing — noted in DESIGN.md §4).
+
+Encoder: bidirectional attention + GELU MLP.  Decoder: causal self-attention
+(+KV cache) + cross-attention against cached encoder K/V + GELU MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers
+
+
+def _spec(cfg: ModelConfig, *, causal: bool) -> attention.AttnSpec:
+    return attention.AttnSpec(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=None, qkv_bias=cfg.qkv_bias, causal=causal)
+
+
+def sinusoidal(positions, d):
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    return {"norm1": layers.layernorm_init(cfg.d_model, dtype=dt),
+            "attn": attention.init_attention(ks[0], _spec(cfg, causal=False),
+                                             dtype=dt),
+            "norm2": layers.layernorm_init(cfg.d_model, dtype=dt),
+            "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu",
+                                   dtype=dt)}
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {"norm1": layers.layernorm_init(cfg.d_model, dtype=dt),
+            "self_attn": attention.init_attention(
+                ks[0], _spec(cfg, causal=True), dtype=dt),
+            "norm2": layers.layernorm_init(cfg.d_model, dtype=dt),
+            "cross_attn": attention.init_attention(
+                ks[1], _spec(cfg, causal=False), dtype=dt),
+            "norm3": layers.layernorm_init(cfg.d_model, dtype=dt),
+            "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu",
+                                   dtype=dt)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_enc, k_dec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": layers.embed_init(k_embed, cfg.padded_vocab, cfg.d_model,
+                                   dtype=dt),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_final_norm": layers.layernorm_init(cfg.d_model, dtype=dt),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": layers.layernorm_init(cfg.d_model, dtype=dt),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_enc, D) stub embeddings -> encoder output."""
+    s = frames.shape[1]
+    x = frames + sinusoidal(jnp.arange(s), cfg.d_model).astype(frames.dtype)
+    spec = _spec(cfg, causal=False)
+
+    def body(h, p):
+        a = attention.apply_attention(
+            p["attn"], layers.layernorm(p["norm1"], h), spec=spec)
+        h = h + a
+        h = h + layers.mlp_apply(p["mlp"],
+                                 layers.layernorm(p["norm2"], h), "gelu")
+        return h, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.layernorm(params["enc_final_norm"], x)
+
+
+def _dec_block(p, x, cfg, enc_out=None, *, self_cache=None, cross_cache=None,
+               decode=False):
+    spec_self = _spec(cfg, causal=True)
+    spec_cross = _spec(cfg, causal=False)
+    h = layers.layernorm(p["norm1"], x)
+    if self_cache is None:
+        a = attention.apply_attention(p["self_attn"], h, spec=spec_self)
+        new_self = None
+    elif decode:
+        a, new_self = attention.decode_attention(p["self_attn"], h,
+                                                 self_cache, spec=spec_self)
+    else:
+        a, new_self = attention.prefill_attention(p["self_attn"], h,
+                                                  self_cache, spec=spec_self)
+    x = x + a
+    h = layers.layernorm(p["norm2"], x)
+    if decode:
+        c, _ = attention.decode_attention(p["cross_attn"], h, self_cache,
+                                          spec=spec_cross,
+                                          kv_src_cache=cross_cache)
+    else:
+        c = attention.apply_attention(p["cross_attn"], h, kv_src=enc_out,
+                                      spec=spec_cross)
+    x = x + c
+    h = layers.layernorm(p["norm3"], x)
+    x = x + layers.mlp_apply(p["mlp"], h, "gelu")
+    return x, new_self
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx):
+    """batch: frames (B,S_enc,D), inputs/targets/mask (B,S_dec)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    s = batch["inputs"].shape[1]
+    x = layers.embed_apply(params["embed"], batch["inputs"])
+    x = x + sinusoidal(jnp.arange(s), cfg.d_model).astype(x.dtype)
+
+    def body(h, p):
+        h, _ = _dec_block(p, h, cfg, enc_out)
+        return h, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layers.layernorm(params["final_norm"], x)
+    ce = layers.chunked_softmax_xent(
+        x, params["embed"]["embedding"].T, batch["targets"], batch["mask"],
+        valid_vocab=cfg.vocab_size)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def make_cross_caches(params, enc_out, cfg: ModelConfig):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    spec = _spec(cfg, causal=False)
+    b, s, _ = enc_out.shape
+
+    def one(p):
+        k = layers.matmul(enc_out, p["cross_attn"]["wk"])
+        v = layers.matmul(enc_out, p["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            k = k + p["cross_attn"]["bk"]
+            v = v + p["cross_attn"]["bv"]
+        k = k.reshape(b, s, spec.num_kv_heads, spec.head_dim)
+        v = v.reshape(b, s, spec.num_kv_heads, spec.head_dim)
+        return attention.KVCache(k, v, jnp.asarray(s, jnp.int32))
+
+    return jax.vmap(one)(params["dec_blocks"])
+
+
+def prefill(params, frames, tokens, cfg: ModelConfig, ctx, *, max_len: int):
+    enc_out = encode(params, frames, cfg)
+    cross = make_cross_caches(params, enc_out, cfg)
+    b, s = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens)
+    x = x + sinusoidal(jnp.arange(s), cfg.d_model).astype(x.dtype)
+    self0 = jax.vmap(
+        lambda _: attention.init_cache(b, max_len, _spec(cfg, causal=True),
+                                       dtype=jnp.dtype(cfg.dtype))
+    )(jnp.arange(cfg.num_layers))
+
+    def body(h, xs):
+        p, sc = xs
+        h, new_sc = _dec_block(p, h, cfg, enc_out, self_cache=sc,
+                               decode=False)
+        return h, new_sc
+
+    x, self_caches = jax.lax.scan(body, x, (params["dec_blocks"], self0))
+    x = layers.layernorm(params["final_norm"], x[:, -1:, :])
+    logits = layers.unembed(params["embed"], x)
+    return logits, (self_caches, cross)
+
+
+def decode_step(params, token, caches, cfg: ModelConfig, ctx):
+    self_caches, cross = caches
+    b = token.shape[0]
+    pos = self_caches.length[0]
+    x = layers.embed_apply(params["embed"], token)
+    x = x + sinusoidal(pos[None].astype(jnp.int32),
+                       cfg.d_model).astype(x.dtype)
+
+    def body(h, xs):
+        p, sc, cc = xs
+        h, new_sc = _dec_block(p, h, cfg, self_cache=sc, cross_cache=cc,
+                               decode=True)
+        return h, new_sc
+
+    x, self_caches = jax.lax.scan(body, x,
+                                  (params["dec_blocks"], self_caches, cross))
+    x = layers.layernorm(params["final_norm"], x)
+    logits = layers.unembed(params["embed"], x)
+    return logits, (self_caches, cross)

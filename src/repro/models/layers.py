@@ -1,0 +1,201 @@
+"""Shared neural-net layers (pure functions over param pytrees, no flax).
+
+Params are nested dicts of jnp arrays.  Initializers take an explicit PRNG
+key.  All matmuls accumulate in f32 (``preferred_element_type``) and cast
+back to the activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, *, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (stddev 1/sqrt(fan_in) by default)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def matmul(x, w, *, out_dtype=None):
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def einsum(spec, *args, out_dtype=None):
+    out = jnp.einsum(spec, *args, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or args[0].dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, *, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params, x, *, eps=1e-6):
+    """RMSNorm with (1 + scale) parameterization (gemma convention; scale
+    init 0 == identity, matching scale-init-1 of the usual convention)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d, *, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * (1.0 + params["scale"].astype(jnp.float32))
+    out = out + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def make_norm(norm_type: str):
+    if norm_type == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if norm_type == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, *, theta: float = 10000.0):
+    """Apply RoPE. x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]                             # (..., S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, mlp_type, *, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+                "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+                "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype)}
+    if mlp_type == "gelu":
+        return {"w_in": dense_init(k1, (d_model, d_ff), dtype=dtype),
+                "b_in": jnp.zeros((d_ff,), dtype),
+                "w_out": dense_init(k2, (d_ff, d_model), dtype=dtype),
+                "b_out": jnp.zeros((d_model,), dtype)}
+    raise ValueError(mlp_type)
+
+
+def mlp_apply(params, x, mlp_type):
+    if mlp_type == "swiglu":
+        gate = jax.nn.silu(matmul(x, params["w_gate"]))
+        return matmul(gate * matmul(x, params["w_up"]), params["w_down"])
+    if mlp_type == "geglu":
+        gate = jax.nn.gelu(matmul(x, params["w_gate"]), approximate=True)
+        return matmul(gate * matmul(x, params["w_up"]), params["w_down"])
+    if mlp_type == "gelu":
+        h = jax.nn.gelu(matmul(x, params["w_in"]) + params["b_in"],
+                        approximate=True)
+        return matmul(h, params["w_out"]) + params["b_out"]
+    raise ValueError(mlp_type)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, *, dtype=jnp.float32):
+    # std d^-0.5: unit-variance activations after gemma's sqrt(d) embed
+    # scaling AND ~unit-std logits under tied unembedding.
+    return {"embedding": dense_init(key, (vocab, d_model),
+                                    scale=d_model ** -0.5, dtype=dtype)}
+
+
+def embed_apply(params, tokens, *, scale_by_sqrt_dim=False):
+    emb = params["embedding"][tokens]
+    if scale_by_sqrt_dim:
+        emb = emb * jnp.asarray(emb.shape[-1] ** 0.5, emb.dtype)
+    return emb
+
+
+def unembed(params, x, *, head=None):
+    """Logits: tied (embedding.T) unless a separate head matrix is given."""
+    w = head if head is not None else params["embedding"].T
+    return jnp.matmul(x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy_loss(logits_f32, targets, mask, *, z_loss: float = 1e-4):
+    """Mean masked token cross-entropy (+ z-loss for logit drift control)."""
+    lse = jax.nn.logsumexp(logits_f32, axis=-1)
+    gold = jnp.take_along_axis(logits_f32, targets[..., None],
+                               axis=-1).squeeze(-1)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_softmax_xent(h, w, targets, mask, *, valid_vocab: int,
+                         chunk: int = 4096, z_loss: float = 1e-4):
+    """Cross-entropy without materializing full (tokens, V) f32 logits.
+
+    h: (B, S, D) final hidden states; w: (D, V) unembedding; the token dim is
+    scanned in chunks with per-chunk remat, so peak memory is
+    O(chunk x V / shards) instead of O(B x S x V) — the full-logit form costs
+    ~300 GB/device at (B=128, S=4k, V=152k) f32 (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = h.shape
+    n = b * s
+    v = w.shape[-1]
+    hf = h.reshape(n, d)
+    tf = targets.reshape(n)
+    mf = mask.reshape(n).astype(jnp.float32)
+    c = min(chunk, n)
+    if n % c:
+        pad = c - n % c
+        hf = jnp.pad(hf, ((0, pad), (0, 0)))
+        tf = jnp.pad(tf, (0, pad))
+        mf = jnp.pad(mf, (0, pad))
+        n += pad
+    nchunks = n // c
+    vocab_ok = jnp.arange(v) < valid_vocab
+
+    def step(acc, xs):
+        h_c, t_c, m_c = xs
+        logits = jnp.matmul(h_c, w.astype(h_c.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(vocab_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[:, None], axis=-1)[:, 0]
+        nll = lse - gold
+        if z_loss:
+            nll = nll + z_loss * lse ** 2
+        return acc + jnp.sum(nll * m_c), None
+
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(
+        step, jnp.zeros((), jnp.float32),
+        (hf.reshape(nchunks, c, d), tf.reshape(nchunks, c),
+         mf.reshape(nchunks, c)))
+    return total / jnp.maximum(jnp.sum(mf), 1.0)

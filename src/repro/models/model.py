@@ -1,0 +1,96 @@
+"""Model facade: uniform init/loss/prefill/decode_step/input_specs interface
+over decoder-only and encoder-decoder families (selected by config)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._mod = encdec if cfg.is_encdec else transformer
+
+    # -- parameters --------------------------------------------------------
+    def init(self, rng):
+        return self._mod.init_params(rng, self.cfg)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda k: self.init(k),
+                              jax.random.PRNGKey(0))
+
+    # -- steps --------------------------------------------------------------
+    def loss_fn(self, params, batch, ctx):
+        return self._mod.loss_fn(params, batch, self.cfg, ctx)
+
+    def prefill(self, params, batch, ctx, *, max_len: int):
+        if self.cfg.is_encdec:
+            return encdec.prefill(params, batch["frames"], batch["tokens"],
+                                  self.cfg, ctx, max_len=max_len)
+        return transformer.prefill(params, batch["tokens"], self.cfg, ctx,
+                                   max_len=max_len)
+
+    def decode_step(self, params, token, caches, ctx):
+        return self._mod.decode_step(params, token, caches, self.cfg, ctx)
+
+    def init_caches(self, batch: int, max_len: int):
+        if self.cfg.is_encdec:
+            # (self-attn caches, cross caches) — shapes via eval_shape users.
+            raise NotImplementedError(
+                "enc-dec caches come from prefill(); see decode_specs()")
+        return transformer.init_caches(self.cfg, batch, max_len)
+
+    # -- dry-run input specs (ShapeDtypeStruct stand-ins, no allocation) ----
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        dt = jnp.dtype(cfg.dtype)
+
+        if shape.kind == "train":
+            batch = {"inputs": sds((b, s), i32), "targets": sds((b, s), i32),
+                     "mask": sds((b, s), jnp.float32)}
+            if cfg.is_encdec:
+                batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), dt)
+            return batch
+
+        if shape.kind == "prefill":
+            batch = {"tokens": sds((b, s), i32)}
+            if cfg.is_encdec:
+                batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), dt)
+            return batch
+
+        if shape.kind == "decode":
+            # One new token against a cache of seq_len tokens.
+            if cfg.is_encdec:
+                caches = _encdec_cache_specs(cfg, b, s)
+            else:
+                caches = jax.eval_shape(
+                    lambda: transformer.init_caches(cfg, b, s))
+            return {"token": sds((b, 1), i32), "caches": caches}
+
+        raise ValueError(shape.kind)
+
+
+def _encdec_cache_specs(cfg: ModelConfig, b: int, max_len: int):
+    from repro.models import attention
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    ld = cfg.num_layers
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    self_caches = attention.KVCache(
+        sds((ld, b, max_len, hk, hd), dt), sds((ld, b, max_len, hk, hd), dt),
+        sds((ld,), jnp.int32))
+    cross = attention.KVCache(
+        sds((ld, b, cfg.encoder_seq, hk, hd), dt),
+        sds((ld, b, cfg.encoder_seq, hk, hd), dt),
+        sds((ld,), jnp.int32))
+    return (self_caches, cross)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,233 @@
+"""Mixture-of-Experts layer with expert parallelism over the `model` axis.
+
+Distribution design (DESIGN.md §5):
+
+* Experts are sharded over the `model` mesh axis (EP).  Inside the layer the
+  *sequence* dim is first split across the same axis, so each model-rank
+  dispatches only S/ep of the tokens (router math is divided by ep instead of
+  replicated) — then a capacity-bounded sort-based dispatch builds per-peer
+  buffers and a single ``all_to_all`` delivers tokens to their experts; the
+  reverse ``all_to_all`` + an ``all_gather`` over the sequence split restore
+  the replicated activation layout.  XLA overlaps the (a2a -> expert GEMM ->
+  a2a) chain across the grid automatically; buffer sizes are bounded by
+  ``capacity_factor`` (dropped tokens fall back to the residual path, the
+  standard Switch behaviour).
+
+* Decode (S == 1) cannot split the sequence; the layer switches to a
+  psum-combine path: every rank computes its local experts' contribution for
+  all tokens and the partial outputs are summed over the `model` axis.
+
+Both paths are exact for the same routing decisions and run unchanged on a
+(1, 1) mesh (all_to_all/psum degenerate), which is how smoke tests cover them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map_mod
+    shard_map = jax.shard_map
+except (ImportError, AttributeError):  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_type: str = "softmax"    # softmax (renormalized top-k) | sigmoid
+    aux_loss_weight: float = 0.01
+
+
+def init_moe(key, spec: MoESpec, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, d, f = spec.num_experts, spec.d_model, spec.d_ff
+    return {
+        "router": layers.dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": layers.dense_init(ks[1], (e, d, f), dtype=dtype),
+        "w_up": layers.dense_init(ks[2], (e, d, f), dtype=dtype),
+        "w_down": layers.dense_init(ks[3], (e, f, d), dtype=dtype),
+    }
+
+
+def _route(x_tokens, router, spec: MoESpec):
+    """x_tokens: (T, D) -> (gates (T, k), idx (T, k) int32, aux_probs (T, E))."""
+    logits = jnp.einsum("td,de->te", x_tokens.astype(jnp.float32), router)
+    if spec.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        gates, idx = jax.lax.top_k(scores, spec.top_k)
+        probs = scores / jnp.maximum(
+            jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, spec.top_k)
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, idx.astype(jnp.int32), probs
+
+
+def _dispatch_indices(idx, spec: MoESpec, capacity: int):
+    """Sort-based capacity assignment.
+
+    idx: (T, k) expert ids.  Returns (token_sorted, e_sorted, pos, keep):
+    flattened (T*k,) arrays; position of each kept (token, slot) within its
+    expert's capacity buffer, first-come-first-served by token order.
+    """
+    t, k = idx.shape
+    e_flat = idx.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)           # group by expert
+    e_sorted = e_flat[order]
+    counts = jnp.zeros(spec.num_experts, jnp.int32).at[e_flat].add(1)
+    offsets = jnp.cumsum(counts) - counts              # exclusive
+    pos = jnp.arange(t * k, dtype=jnp.int32) - offsets[e_sorted]
+    keep = pos < capacity
+    token_sorted = order // k
+    slot_sorted = order % k
+    return token_sorted, slot_sorted, e_sorted, pos, keep
+
+
+def _expert_ffn(tokens, w_gate, w_up, w_down):
+    """tokens: (E_local, C', D); weights (E_local, D, F)/(E_local, F, D)."""
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", tokens, w_gate,
+                                  preferred_element_type=jnp.float32))
+    up = jnp.einsum("ecd,edf->ecf", tokens, w_up,
+                    preferred_element_type=jnp.float32)
+    h = (gate * up).astype(tokens.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_down,
+                      preferred_element_type=jnp.float32).astype(tokens.dtype)
+
+
+def _aux_loss(probs, idx, spec: MoESpec, axes):
+    """Switch-style load-balance loss, averaged over all participating axes."""
+    e = spec.num_experts
+    top1 = idx[:, 0]
+    f = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * p)
+    if axes:
+        aux = jax.lax.pmean(aux, axes)
+    return aux * spec.aux_loss_weight
+
+
+def moe_apply(params, x, spec: MoESpec, ctx, *, decode: bool = False):
+    """x: (B, S, D) with batch sharded over ctx.dp_axes. Returns (y, aux)."""
+    ep_axis = ctx.tp_axis
+    ep = ctx.axis_size(ep_axis)
+    all_axes = tuple(ctx.dp_axes) + ((ep_axis,) if ep_axis else ())
+    b, s, d = x.shape
+
+    if decode or s % max(ep, 1) or s < ep:
+        in_specs = (P(*[ctx.dp_axes, None, None]),
+                    P(), P(ep_axis), P(ep_axis), P(ep_axis))
+        out_specs = (P(*[ctx.dp_axes, None, None]), P())
+        fn = lambda xx, router, wg, wu, wd: _moe_psum_path(
+            xx, router, wg, wu, wd, spec, ep_axis, all_axes)
+    else:
+        # Sequence-split EP: the shard_map consumes the activation already
+        # sequence-sharded over the EP axis (free under SP boundaries) and
+        # returns it the same way — no gather on either side.
+        in_specs = (P(*[ctx.dp_axes, ep_axis, None]),
+                    P(), P(ep_axis), P(ep_axis), P(ep_axis))
+        out_specs = (P(*[ctx.dp_axes, ep_axis, None]), P())
+        fn = lambda xx, router, wg, wu, wd: _moe_a2a_path(
+            xx, router, wg, wu, wd, spec, ep_axis, all_axes)
+
+    y, aux = shard_map(
+        fn, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    return y, aux
+
+
+def _moe_a2a_path(x, router, w_gate, w_up, w_down, spec, ep_axis, all_axes):
+    """Sequence-split + all_to_all expert parallelism (train / prefill).
+
+    x arrives already sequence-sharded over the EP axis: (b, s_local, d)."""
+    b, s, d = x.shape
+    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    e_local = spec.num_experts // max(ep, 1)
+
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    capacity = max(1, int(t * spec.top_k * spec.capacity_factor
+                          / spec.num_experts))
+
+    gates, idx, probs = _route(tokens, router, spec)
+    aux = _aux_loss(probs, idx, spec, all_axes)
+    tok_s, slot_s, e_s, pos, keep = _dispatch_indices(idx, spec, capacity)
+
+    # Scatter kept tokens into per-expert capacity buffers.
+    buf = jnp.zeros((spec.num_experts * capacity, d), tokens.dtype)
+    dest = jnp.where(keep, e_s * capacity + pos,
+                     spec.num_experts * capacity)
+    buf = buf.at[dest].set(tokens[tok_s], mode="drop")
+    buf = buf.reshape(ep, e_local, capacity, d)
+
+    if ep > 1:
+        recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+    else:
+        recv = buf
+    # recv[p, e, c, :] = peer p's tokens for my local expert e.
+    expert_in = recv.transpose(1, 0, 2, 3).reshape(e_local, ep * capacity, d)
+    expert_out = _expert_ffn(expert_in, w_gate, w_up, w_down)
+    send = expert_out.reshape(e_local, ep, capacity, d).transpose(1, 0, 2, 3)
+    if ep > 1:
+        back = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+    else:
+        back = send
+    outs = back.reshape(spec.num_experts * capacity, d)
+
+    # Combine: gather each kept (token, slot) output, weight, scatter-add.
+    src = jnp.where(keep, e_s * capacity + pos, 0)
+    contrib = outs[src] * jnp.where(keep, gates[tok_s, slot_s],
+                                    0.0)[:, None].astype(outs.dtype)
+    y_tokens = jnp.zeros((t, d), x.dtype).at[tok_s].add(
+        contrib.astype(x.dtype))
+    return y_tokens.reshape(b, s, d), aux
+
+
+def _moe_psum_path(x, router, w_gate, w_up, w_down, spec, ep_axis, all_axes):
+    """Local-expert + psum combine (decode / non-divisible sequences)."""
+    b, s, d = x.shape
+    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    rank = jax.lax.axis_index(ep_axis) if ep_axis else 0
+    e_local = spec.num_experts // max(ep, 1)
+
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    capacity = max(1, int(-(-t * spec.top_k * spec.capacity_factor
+                            // spec.num_experts)))
+
+    gates, idx, probs = _route(tokens, router, spec)
+    aux = _aux_loss(probs, idx, spec, all_axes)
+    tok_s, slot_s, e_s, pos, keep = _dispatch_indices(idx, spec, capacity)
+
+    # Keep only (token, slot) pairs owned by this rank's experts.
+    mine = keep & (e_s // e_local == rank)
+    e_rel = e_s - rank * e_local
+    buf = jnp.zeros((e_local * capacity, d), tokens.dtype)
+    dest = jnp.where(mine, e_rel * capacity + pos, e_local * capacity)
+    buf = buf.at[dest].set(tokens[tok_s], mode="drop")
+    expert_out = _expert_ffn(buf.reshape(e_local, capacity, d),
+                             w_gate, w_up, w_down)
+    outs = expert_out.reshape(e_local * capacity, d)
+
+    src = jnp.where(mine, e_rel * capacity + pos, 0)
+    contrib = outs[src] * jnp.where(mine, gates[tok_s, slot_s],
+                                    0.0)[:, None].astype(outs.dtype)
+    y_tokens = jnp.zeros((t, d), x.dtype).at[tok_s].add(
+        contrib.astype(x.dtype))
+    if ep_axis:
+        y_tokens = jax.lax.psum(y_tokens, ep_axis)
+    return y_tokens.reshape(b, s, d), aux

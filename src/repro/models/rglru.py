@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [Wx -> conv1d(width 4) -> RG-LRU]  *  gelu(Wgate x) -> Wout.
+
+RG-LRU (diagonal gated linear recurrence):
+    r_t = sigmoid(x_t W_a + b_a)            recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Because the recurrence is diagonal it is evaluated with
+``jax.lax.associative_scan`` (log-depth, fully parallel) for sequences and a
+single fused step for decode — this is the TPU-native adaptation (DESIGN.md
+§2): the GPU reference implementation uses a sequential CUDA scan kernel.
+
+Decode state per layer: dict(conv (B, W-1, rnn), h (B, rnn) f32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+RGLRU_C = 8.0
+
+
+def init_recurrent_block(key, d_model, rnn_width, conv_width,
+                         *, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(Lambda)^c is in (0.9, 0.999) — standard.
+    u = jax.random.uniform(ks[0], (rnn_width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (-1.0 / RGLRU_C) - 1.0) * -1.0  # sigmoid^-1(u^(1/c))
+    return {
+        "w_in": layers.dense_init(ks[1], (d_model, rnn_width), dtype=dtype),
+        "w_gate": layers.dense_init(ks[2], (d_model, rnn_width), dtype=dtype),
+        "w_out": layers.dense_init(ks[3], (rnn_width, d_model), dtype=dtype),
+        "conv_w": layers.dense_init(ks[4], (conv_width, rnn_width),
+                                    scale=conv_width ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((rnn_width,), dtype),
+        "wa": layers.dense_init(ks[5], (rnn_width, rnn_width), dtype=dtype),
+        "ba": jnp.zeros((rnn_width,), dtype),
+        "wx": layers.dense_init(jax.random.fold_in(key, 7),
+                                (rnn_width, rnn_width), dtype=dtype),
+        "bx": jnp.zeros((rnn_width,), dtype),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _causal_conv1d(p, x, state):
+    """Depthwise-ish causal conv (width W): y_t = sum_w x_{t-W+1+w} * conv_w[w].
+
+    x: (B, T, R); state: (B, W-1, R) history (zeros at start).
+    Returns (y, new_state).
+    """
+    wlen = p["conv_w"].shape[0]
+    full = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, T+W-1, R)
+    y = jnp.zeros_like(x)
+    t = x.shape[1]
+    for i in range(wlen):
+        y = y + full[:, i:i + t, :] * p["conv_w"][i]
+    y = y + p["conv_b"]
+    new_state = full[:, -(wlen - 1):, :] if wlen > 1 else state
+    return y, new_state
+
+
+def rglru(p, x, h0):
+    """x: (B, T, R); h0: (B, R) f32. Parallel associative scan over T."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(layers.matmul(xf, p["wa"].astype(jnp.float32))
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.matmul(xf, p["wx"].astype(jnp.float32))
+                       + p["bx"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r       # (B, T, R)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, None)) * (i * xf)
+
+    # h_t = a_t h_{t-1} + b_t with h_{-1} = h0: fold h0 into b_0.
+    b = gated.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_sc
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p, x, h0):
+    """Single decode step. x: (B, 1, R); h0: (B, R) f32."""
+    xf = x[:, 0, :].astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["wx"].astype(jnp.float32)
+                       + p["bx"].astype(jnp.float32))
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"]) * r)
+    h = a * h0 + jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, None)) * (i * xf)
+    return h.astype(x.dtype)[:, None, :], h
+
+
+def recurrent_block_apply(p, x, state, *, decode: bool = False):
+    """x: (B, T, D) -> (B, T, D).  state: dict(conv, h)."""
+    gate = jax.nn.gelu(layers.matmul(x, p["w_gate"]), approximate=True)
+    xin = layers.matmul(x, p["w_in"])
+    conv, conv_state = _causal_conv1d(p, xin, state["conv"])
+    if decode:
+        y, h = rglru_step(p, conv, state["h"])
+    else:
+        y, h = rglru(p, conv, state["h"])
+    out = layers.matmul(y * gate, p["w_out"])
+    return out, {"conv": conv_state, "h": h}
+
+
+def init_recurrent_state(batch, rnn_width, conv_width, *, dtype=jnp.float32):
+    return {"conv": jnp.zeros((batch, conv_width - 1, rnn_width), dtype),
+            "h": jnp.zeros((batch, rnn_width), jnp.float32)}

@@ -1,0 +1,217 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): data-dependent decay linear
+attention (TimeMix) + squared-relu channel mixing (ChannelMix).
+
+Two WKV evaluation paths:
+
+* ``wkv_scan`` — faithful per-token recurrence ``S_t = diag(w_t) S_{t-1} +
+  k_t v_t^T`` via ``lax.scan`` (O(T) sequential outer products).  Baseline.
+* ``wkv_chunked`` — chunk-parallel form (beyond-paper optimization, see
+  EXPERIMENTS.md §Perf): within a chunk of C tokens the recurrence unrolls to
+  MXU-friendly matmuls with cumulative decay products; chunks are combined by
+  a short scan carrying the (H, K, V) state.  Exact same math (f32 accum).
+
+State layout per layer (decode): dict(tm_x (B,D), cm_x (B,D),
+wkv (B,H,K,K) f32).  head size K = 64 (RWKV convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+HEAD_K = 64
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_timemix(key, d, *, dtype=jnp.float32):
+    h = d // HEAD_K
+    ks = jax.random.split(key, 12)
+    return {
+        "maa_base": jnp.zeros((d,), dtype),
+        "maa": jnp.zeros((5, d), dtype),           # r,k,v,w,g token-shift mixes
+        "tm_w1": layers.dense_init(ks[0], (d, 5 * LORA_MIX), dtype=dtype),
+        "tm_w2": layers.dense_init(ks[1], (5, LORA_MIX, d),
+                                   scale=LORA_MIX ** -0.5, dtype=dtype),
+        "w0": jnp.zeros((d,), dtype),
+        "wd1": layers.dense_init(ks[2], (d, LORA_DECAY), dtype=dtype),
+        "wd2": layers.dense_init(ks[3], (LORA_DECAY, d),
+                                 scale=LORA_DECAY ** -0.5, dtype=dtype),
+        "u": jnp.zeros((h, HEAD_K), dtype),
+        "wr": layers.dense_init(ks[4], (d, d), dtype=dtype),
+        "wk": layers.dense_init(ks[5], (d, d), dtype=dtype),
+        "wv": layers.dense_init(ks[6], (d, d), dtype=dtype),
+        "wg": layers.dense_init(ks[7], (d, d), dtype=dtype),
+        "wo": layers.dense_init(ks[8], (d, d), dtype=dtype),
+        "ln_x": {"scale": jnp.zeros((d,), dtype),
+                 "bias": jnp.zeros((d,), dtype)},
+    }
+
+
+def init_channelmix(key, d, d_ff, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "maa_k": jnp.zeros((d,), dtype),
+        "maa_r": jnp.zeros((d,), dtype),
+        "wk": layers.dense_init(ks[0], (d, d_ff), dtype=dtype),
+        "wv": layers.dense_init(ks[1], (d_ff, d), dtype=dtype),
+        "wr": layers.dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _group_norm(p, x, h):
+    """Per-head groupnorm on (B, T, D) reshaped to (B, T, H, K)."""
+    b, t, d = x.shape
+    xs = x.reshape(b, t, h, HEAD_K).astype(jnp.float32)
+    mu = jnp.mean(xs, axis=-1, keepdims=True)
+    var = jnp.var(xs, axis=-1, keepdims=True)
+    xs = (xs - mu) * jax.lax.rsqrt(var + 1e-5)
+    xs = xs.reshape(b, t, d)
+    out = xs * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _token_shift(x, prev):
+    """shifted[t] = x[t-1]; slot 0 <- prev (zeros at sequence start)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Faithful recurrence. r/k/v/w: (B, T, H, K); state: (B, H, K, K) f32.
+
+    Returns (out (B, T, H, K), new_state).
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (B, H, K)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B, H, K, K)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         s + uf[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    state, out = jax.lax.scan(step, state, xs)
+    return out.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, w, u, state, *, chunk: int = 32):
+    """Chunk-parallel WKV (exact).  Within each chunk of C tokens:
+
+      decay_prod[t] = prod_{s<=t} w_s      (cumulative, exclusive of s=t? see below)
+      S_in contribution:   out_t += r_t (prod_{s<t} w_s) . S_in
+      intra-chunk:         out_t += sum_{j<t} r_t (prod_{j<s<t} w_s) k_j v_j^T
+                                  + r_t (u*k_t) v_t^T
+      state update:        S_out = (prod_all w) S_in + sum_j (prod_{s>j} w_s) k_j v_j^T
+    """
+    b, t, h, kk = r.shape
+    c = min(chunk, t)
+    if t % c:
+        pad = c - t % c
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        t_pad = t + pad
+    else:
+        t_pad = t
+    n = t_pad // c
+
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def reshape(a):
+        return a.reshape(b, n, c, h, kk).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = (reshape(a) for a in (rf, kf, vf, wf))
+
+    logw = jnp.log(jnp.clip(wc, 1e-30, 1.0))          # (n, B, C, H, K)
+    cum = jnp.cumsum(logw, axis=2)                    # inclusive prefix sums
+
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)        # strict lower triangle
+
+    def chunk_step(s, xs):
+        rj, kj, vj, cum_j, logw_j = xs                # (B, C, H, K) each
+        # All decay factors are exp(non-positive) — never overflow; the
+        # factored w_excl/w_incl form does (EXPERIMENTS.md §Perf).
+        ce = cum_j - logw_j                           # log prod_{s<t} w_s
+        we = jnp.exp(ce)
+        wt_ = jnp.exp(cum_j[:, -1:] - cum_j)          # prod_{s>t} w_s
+        w_all = jnp.exp(cum_j[:, -1])                 # prod over whole chunk
+        # Inter-chunk: r_t decayed against the carried state.
+        inter = jnp.einsum("bchk,bhkv->bchv", rj * we, s)
+        # Intra-chunk: pairwise decay in log space, masked BEFORE exp.
+        delta = ce[:, :, None, :, :] - cum_j[:, None, :, :, :]  # (B,i,j,H,K)
+        delta = jnp.where(tri[None, :, :, None, None], delta, -jnp.inf)
+        decay = jnp.exp(delta)
+        scores = jnp.einsum("bihk,bijhk,bjhk->bhij", rj, decay, kj)
+        intra = jnp.einsum("bhcd,bdhv->bchv", scores, vj)
+        diag = jnp.einsum("bchk,bchk,bchv->bchv",
+                          rj, uf[None, None] * kj, vj)
+        out = inter + intra + diag
+        # State: S_out = (prod_all w) S_in + sum_j (prod_{s>j} w) k_j v_j^T
+        s_new = w_all[..., :, None] * s + jnp.einsum(
+            "bchk,bchv->bhkv", kj * wt_, vj)
+        return s_new, out
+
+    state, out = jax.lax.scan(
+        chunk_step, state, (rc, kc, vc, cum, logw))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, t_pad, h, kk)
+    return out[:, :t].astype(r.dtype), state
+
+
+def timemix_apply(p, x, state_x, state_wkv, *, wkv_impl: str = "scan",
+                  chunk: int = 32):
+    """x: (B, T, D). state_x: (B, D) prev token; state_wkv: (B, H, K, K)."""
+    b, t, d = x.shape
+    h = d // HEAD_K
+    sx = _token_shift(x, state_x) - x
+
+    xw = x + sx * p["maa_base"]
+    lora = jnp.tanh(layers.matmul(xw, p["tm_w1"]))            # (B,T,5*32)
+    lora = lora.reshape(b, t, 5, LORA_MIX).transpose(2, 0, 1, 3)
+    deltas = jnp.einsum("sbtl,sld->sbtd", lora.astype(jnp.float32),
+                        p["tm_w2"].astype(jnp.float32)).astype(x.dtype)
+    mixed = x[None] + sx[None] * (p["maa"][:, None, None, :] + deltas)
+    xr, xk, xv, xw_, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+
+    r = layers.matmul(xr, p["wr"]).reshape(b, t, h, HEAD_K)
+    k = layers.matmul(xk, p["wk"]).reshape(b, t, h, HEAD_K)
+    v = layers.matmul(xv, p["wv"]).reshape(b, t, h, HEAD_K)
+    g = jax.nn.silu(layers.matmul(xg, p["wg"]))
+
+    dec = (p["w0"].astype(jnp.float32)
+           + jnp.tanh(layers.matmul(xw_, p["wd1"])).astype(jnp.float32)
+           @ p["wd2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, HEAD_K)       # (0, 1)
+
+    if wkv_impl == "scan":
+        out, new_wkv = wkv_scan(r, k, v, w.astype(r.dtype), p["u"], state_wkv)
+    elif wkv_impl == "chunked":
+        out, new_wkv = wkv_chunked(r, k, v, w.astype(r.dtype), p["u"],
+                                   state_wkv, chunk=chunk)
+    else:
+        raise ValueError(wkv_impl)
+
+    out = _group_norm(p["ln_x"], out.reshape(b, t, d), h)
+    out = layers.matmul(out * g, p["wo"])
+    return out, x[:, -1, :], new_wkv
+
+
+def channelmix_apply(p, x, state_x):
+    sx = _token_shift(x, state_x) - x
+    xk = x + sx * p["maa_k"]
+    xr = x + sx * p["maa_r"]
+    kk = jnp.square(jax.nn.relu(layers.matmul(xk, p["wk"])))
+    kv = layers.matmul(kk, p["wv"])
+    return jax.nn.sigmoid(layers.matmul(xr, p["wr"])) * kv, x[:, -1, :]
+
+
+def init_rwkv_state(batch, d, *, dtype=jnp.float32):
+    h = d // HEAD_K
+    return {"tm_x": jnp.zeros((batch, d), dtype),
+            "cm_x": jnp.zeros((batch, d), dtype),
+            "wkv": jnp.zeros((batch, h, HEAD_K, HEAD_K), jnp.float32)}

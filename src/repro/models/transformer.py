@@ -1,0 +1,301 @@
+"""Decoder-only LM assembly: block registry, layer scan, loss, prefill/decode.
+
+Blocks (cfg.block_pattern, cycled over layers):
+  attn  — GQA attention + dense MLP            (dense / vlm archs)
+  moe   — GQA attention + mixture-of-experts   (llama4, dbrx)
+  rwkv  — RWKV6 TimeMix + ChannelMix           (rwkv6)
+  rec   — RG-LRU recurrent block + MLP         (recurrentgemma)
+  lattn — local-window attention + MLP         (recurrentgemma 1:2 pattern)
+
+Homogeneous stacks are scanned (`lax.scan` over stacked params: compact HLO,
+O(1) compile cost in depth) with per-layer remat; heterogeneous stacks are
+python loops.  Decode threads a per-layer cache (KV cache or recurrent state)
+through the same machinery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe as moe_lib, rglru, rwkv6
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def attn_spec(cfg: ModelConfig, *, local: bool = False) -> attention.AttnSpec:
+    return attention.AttnSpec(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        qkv_bias=cfg.qkv_bias, causal=True,
+        window=cfg.local_window if local else None)
+
+
+def moe_spec(cfg: ModelConfig) -> moe_lib.MoESpec:
+    return moe_lib.MoESpec(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, num_experts=cfg.num_experts,
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        router_type=cfg.router_type)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply / decode, dispatched on kind
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    dt = _dtype(cfg)
+    norm_init, _ = layers.make_norm(cfg.norm_type)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "lattn", "moe"):
+        p = {"norm1": norm_init(d, dtype=dt),
+             "attn": attention.init_attention(
+                 ks[0], attn_spec(cfg, local=kind == "lattn"), dtype=dt),
+             "norm2": norm_init(d, dtype=dt)}
+        if kind == "moe":
+            p["moe"] = moe_lib.init_moe(ks[1], moe_spec(cfg), dtype=dt)
+            if cfg.moe_shared_expert:
+                p["shared"] = layers.mlp_init(ks[2], d, cfg.d_ff,
+                                              cfg.mlp_type, dtype=dt)
+        else:
+            p["mlp"] = layers.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_type,
+                                       dtype=dt)
+        return p
+    if kind == "rwkv":
+        return {"norm1": norm_init(d, dtype=dt),
+                "tm": rwkv6.init_timemix(ks[0], d, dtype=dt),
+                "norm2": norm_init(d, dtype=dt),
+                "cm": rwkv6.init_channelmix(ks[1], d, cfg.d_ff, dtype=dt)}
+    if kind == "rec":
+        return {"norm1": norm_init(d, dtype=dt),
+                "rec": rglru.init_recurrent_block(
+                    ks[0], d, cfg.rnn_width, cfg.conv_width, dtype=dt),
+                "norm2": norm_init(d, dtype=dt),
+                "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_type,
+                                       dtype=dt)}
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    if kind in ("attn", "moe", "lattn"):
+        return attention.init_cache(
+            batch, max_len, attn_spec(cfg, local=kind == "lattn"), dtype=dt)
+    if kind == "rwkv":
+        return rwkv6.init_rwkv_state(batch, cfg.d_model, dtype=dt)
+    if kind == "rec":
+        state = rglru.init_recurrent_state(batch, cfg.rnn_width,
+                                           cfg.conv_width, dtype=dt)
+        return state
+    raise ValueError(kind)
+
+
+def block_apply(p, x, cfg: ModelConfig, kind: str, ctx, *, cache=None,
+                decode: bool = False):
+    """Full-seq (cache=None), prefill (cache given, decode=False) or
+    one-token decode.  Returns (x, aux, new_cache)."""
+    _, norm = layers.make_norm(cfg.norm_type)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    if kind in ("attn", "moe", "lattn"):
+        spec = attn_spec(cfg, local=kind == "lattn")
+        h = norm(p["norm1"], x)
+        if cache is None:
+            a = attention.apply_attention(p["attn"], h, spec=spec, ctx=ctx)
+        elif decode:
+            a, new_cache = attention.decode_attention(p["attn"], h, cache,
+                                                      spec=spec)
+        else:
+            a, new_cache = attention.prefill_attention(p["attn"], h, cache,
+                                                       spec=spec, ctx=ctx)
+        x = x + a
+        h = norm(p["norm2"], x)
+        if kind == "moe":
+            m, aux = moe_lib.moe_apply(p["moe"], h, moe_spec(cfg), ctx,
+                                       decode=decode)
+            if cfg.moe_shared_expert:
+                m = m + layers.mlp_apply(p["shared"], h, cfg.mlp_type)
+        else:
+            m = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+        return x + m, aux, new_cache
+
+    if kind == "rwkv":
+        st = cache or rwkv6.init_rwkv_state(x.shape[0], cfg.d_model,
+                                            dtype=x.dtype)
+        h = norm(p["norm1"], x)
+        tm_out, tm_x, wkv = rwkv6.timemix_apply(
+            p["tm"], h, st["tm_x"], st["wkv"], wkv_impl=cfg.wkv_impl)
+        x = x + tm_out
+        h = norm(p["norm2"], x)
+        cm_out, cm_x = rwkv6.channelmix_apply(p["cm"], h, st["cm_x"])
+        x = x + cm_out
+        return x, aux, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+    if kind == "rec":
+        st = cache or rglru.init_recurrent_state(
+            x.shape[0], cfg.rnn_width, cfg.conv_width, dtype=x.dtype)
+        h = norm(p["norm1"], x)
+        r, new_st = rglru.recurrent_block_apply(p["rec"], h, st,
+                                                decode=decode)
+        x = x + r
+        h = norm(p["norm2"], x)
+        x = x + layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+        return x, aux, new_st
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    norm_init, _ = layers.make_norm(cfg.norm_type)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "embed": layers.embed_init(k_embed, cfg.padded_vocab, cfg.d_model,
+                                   dtype=dt),
+        "final_norm": norm_init(cfg.d_model, dtype=dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, (cfg.d_model, cfg.padded_vocab), dtype=dt)
+
+    keys = jax.random.split(k_blocks, cfg.num_layers)
+    if cfg.homogeneous and cfg.scan_layers:
+        kind = cfg.block_pattern[0]
+        params["blocks"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind))(keys)
+    else:
+        params["blocks"] = [init_block(keys[i], cfg, cfg.block_kind(i))
+                            for i in range(cfg.num_layers)]
+    return params
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def backbone(params, x, cfg: ModelConfig, ctx, *, caches=None,
+             decode: bool = False):
+    """Run all blocks. Returns (x, aux_total, new_caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def bnd(h):
+        """Sequence-parallel layer boundary: activations (B: dp, S: tp, D).
+        Converts the per-layer TP all-reduce into reduce-scatter/all-gather
+        and divides saved layer-boundary activations (the backward-pass
+        residency) by |model| — EXPERIMENTS.md §Perf iteration LM-2."""
+        if cfg.seq_shard and ctx is not None and not decode:
+            from repro.distributed.sharding import constrain
+            return constrain(h, ctx, (ctx.dp_axes, ctx.tp_axis, None))
+        return h
+
+    x = bnd(x)
+
+    if cfg.homogeneous and cfg.scan_layers:
+        kind = cfg.block_pattern[0]
+
+        if caches is None:
+            def body(carry, p_l):
+                h, aux = carry
+                h, a, _ = block_apply(p_l, h, cfg, kind, ctx)
+                return (bnd(h), aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                _maybe_remat(body, cfg), (x, aux_total), params["blocks"])
+            return x, aux_total, None
+
+        def body(carry, xs):
+            h, aux = carry
+            p_l, cache_l = xs
+            h, a, new_cache = block_apply(p_l, h, cfg, kind, ctx,
+                                          cache=cache_l, decode=decode)
+            return (bnd(h), aux + a), new_cache
+
+        (x, aux_total), new_caches = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, aux_total),
+            (params["blocks"], caches))
+        return x, aux_total, new_caches
+
+    new_caches = []
+    for i, p_l in enumerate(params["blocks"]):
+        kind = cfg.block_kind(i)
+        cache_l = None if caches is None else caches[i]
+        fn = _maybe_remat(
+            functools.partial(block_apply, cfg=cfg, kind=kind, ctx=ctx,
+                              decode=decode), cfg)
+        x, a, new_cache = fn(p_l, x, cache=cache_l)
+        x = bnd(x)
+        aux_total = aux_total + a
+        new_caches.append(new_cache)
+    return x, aux_total, (None if caches is None else new_caches)
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig):
+    _, norm = layers.make_norm(cfg.norm_type)
+    h = norm(params["final_norm"], x)
+    head = params.get("lm_head")
+    logits = layers.unembed(params["embed"], h, head=head)  # f32
+    # Mask padded vocab rows out of the softmax.
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return layers.embed_apply(params["embed"], tokens,
+                              scale_by_sqrt_dim=cfg.embed_scale_sqrt_dim)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx):
+    """batch: dict(inputs (B,S) int32, targets (B,S) int32, mask (B,S))."""
+    x = embed_tokens(params, batch["inputs"], cfg)
+    x, aux, _ = backbone(params, x, cfg, ctx)
+    _, norm = layers.make_norm(cfg.norm_type)
+    h = norm(params["final_norm"], x)
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"]["embedding"].T
+    ce = layers.chunked_softmax_xent(h, w, batch["targets"], batch["mask"],
+                                     valid_vocab=cfg.vocab_size)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.homogeneous and cfg.scan_layers:
+        kind = cfg.block_pattern[0]
+        one = init_block_cache(cfg, kind, batch, max_len)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+            one)
+    return [init_block_cache(cfg, cfg.block_kind(i), batch, max_len)
+            for i in range(cfg.num_layers)]
+
+
+def prefill(params, tokens, cfg: ModelConfig, ctx, *, max_len: int):
+    """Prompt pass; returns (last-token logits, caches)."""
+    caches = init_caches(cfg, tokens.shape[0], max_len)
+    x = embed_tokens(params, tokens, cfg)
+    x, _, caches = backbone(params, x, cfg, ctx, caches=caches, decode=False)
+    logits = logits_from_hidden(params, x[:, -1:, :], cfg)
+    return logits, caches
+
+
+def decode_step(params, token, caches, cfg: ModelConfig, ctx):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new caches)."""
+    x = embed_tokens(params, token, cfg)
+    x, _, caches = backbone(params, x, cfg, ctx, caches=caches, decode=True)
+    return logits_from_hidden(params, x, cfg), caches

@@ -1,0 +1,78 @@
+"""AdamW with f32 moments over (possibly bf16) params, ZeRO-shardable.
+
+Hand-rolled (no optax in this environment).  Moments are stored f32 and
+sharded with an extra `data` axis (distributed/sharding.opt_state_specs) so
+the update lowers to reduce-scatter(grads) + sharded update + all-gather
+(params) — ZeRO-1 — without any explicit collective in this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any        # f32, like params
+    nu: Any        # f32, like params
+    count: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+    def init(self, params) -> OptState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(zeros, jax.tree.map(jnp.copy, zeros),
+                        jnp.zeros((), jnp.int32))
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (self.min_lr_ratio
+                                 + (1 - self.min_lr_ratio) * cos)
+
+    def update(self, params, grads, state: OptState):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(jax.tree.reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g)), grads, jnp.zeros(())))
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        count = state.count + 1
+        lr = self.schedule(count)
+        c1 = 1 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                step_ = step_ + lr * self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(new_mu, new_nu, count), \
+            {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,81 @@
+"""Executor layer: sharded batched PixHomology over the device mesh.
+
+One SPMD program per round: a (M, H, W) image batch sharded over the data
+axes, vmapped PixHomology per device (the paper's ``process_image`` map).
+Images are *generated/loaded per executor* (Variant 1 ``load_self``): the
+driver passes image ids, each host materializes only its shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import Diagram, batched_pixhomology
+from repro.data import astro
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def make_sharded_ph(ctx, **kw):
+    """shard_map'd batched PixHomology: per-image work is embarrassingly
+    parallel, so we pin it inside shard_map over the data axes — XLA's
+    sharding propagation otherwise replicates the merge-scan carries and
+    emits ~70 TB of all-gathers per batch (EXPERIMENTS.md §Perf iteration
+    PH-1: collective term 1407 s -> ~0)."""
+    fn = functools.partial(batched_pixhomology, **kw)
+    dp = ctx.dp_axes
+    out_specs = Diagram(P(dp, None), P(dp, None), P(dp, None), P(dp, None),
+                        P(dp), P(dp), P(dp))
+    return shard_map(lambda imgs, t: fn(imgs, t), mesh=ctx.mesh,
+                     in_specs=(P(dp, None, None), P(dp)),
+                     out_specs=out_specs, check_vma=False)
+
+
+@dataclasses.dataclass
+class ExecutorPool:
+    ctx: object                     # DistContext
+    image_size: int = 512
+    max_features: int = 8192
+    max_candidates: int = 32768
+    filter_level: str = "filter_std"
+
+    def __post_init__(self):
+        self._fn = jax.jit(make_sharded_ph(
+            self.ctx, max_features=self.max_features,
+            max_candidates=self.max_candidates))
+        self._spec = NamedSharding(self.ctx.mesh,
+                                   P(self.ctx.dp_axes, None, None))
+
+    @property
+    def num_executors(self) -> int:
+        return self.ctx.dp_size
+
+    def load_self(self, image_ids) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Variant 1: executors materialize their own images (here: the
+        host generates shards deterministically from ids; on a real cluster
+        each process generates/loads only its addressable shard).  Also
+        computes the Variant-2 thresholds and Variant-3 costs."""
+        imgs, thresholds, costs = [], [], {}
+        for i in image_ids:
+            img = astro.generate_image(i, self.image_size)
+            t, _ = astro.filter_threshold(img, self.filter_level)
+            imgs.append(img)
+            thresholds.append(-np.inf if t is None else t)
+            costs[i] = astro.estimate_cost(img)
+        return np.stack(imgs), np.asarray(thresholds, np.float32), costs
+
+    def run_round(self, images: np.ndarray, thresholds: np.ndarray):
+        """images: (M, H, W) with M == num_executors (padded by driver)."""
+        batch = jax.device_put(jnp.asarray(images), self._spec)
+        tspec = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes))
+        tvals = jax.device_put(jnp.asarray(thresholds), tspec)
+        with self.ctx.mesh:
+            return jax.tree.map(np.asarray, self._fn(batch, tvals))

@@ -1,0 +1,98 @@
+"""Workload partitioning strategies (paper §5.2.1 Variant 3).
+
+Spark semantics -> SPMD adaptation (DESIGN.md §2): executors are mesh
+devices and work proceeds in synchronized *rounds* (one image per executor
+per round).  A strategy turns (image ids, cost estimates, m executors) into
+per-executor queues; the driver zips queues into rounds.  Makespan under
+this model is sum over rounds of the max per-round cost, which the
+schedulers below minimize the same way they do in the paper:
+
+* part_executors — shuffle, one contiguous chunk per executor (static).
+* part_images   — one partition per image, round-robin over executors as
+  they free up (Spark's default dynamic assignment; simulated greedily).
+* part_LPT      — Longest-Processing-Time over estimated costs (Graham):
+  sort descending, repeatedly assign to the least-loaded executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Schedule:
+    strategy: str
+    queues: list[list[int]]          # per-executor ordered image ids
+
+    @property
+    def num_rounds(self) -> int:
+        return max((len(q) for q in self.queues), default=0)
+
+    def rounds(self):
+        """Yield per-round lists of (executor, image_id)."""
+        for r in range(self.num_rounds):
+            yield [(e, q[r]) for e, q in enumerate(self.queues)
+                   if r < len(q)]
+
+    def makespan(self, costs: dict[int, float]) -> float:
+        """Lockstep-round makespan: sum of per-round maxima."""
+        total = 0.0
+        for rnd in self.rounds():
+            total += max(costs[i] for _, i in rnd)
+        return total
+
+    def queue_makespan(self, costs: dict[int, float]) -> float:
+        """Classic (asynchronous-executor) makespan: max queue sum."""
+        return max((sum(costs[i] for i in q) for q in self.queues),
+                   default=0.0)
+
+
+def part_executors(ids, m: int, *, seed: int = 0) -> Schedule:
+    ids = list(ids)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(ids))
+    chunks = np.array_split(perm, m)
+    return Schedule("part_executors",
+                    [[ids[i] for i in c] for c in chunks])
+
+
+def part_images(ids, m: int, costs=None) -> Schedule:
+    """Greedy dynamic assignment: next image goes to the executor whose
+    queue finishes first (equal costs -> round robin, like Spark default)."""
+    ids = list(ids)
+    loads = [0.0] * m
+    queues: list[list[int]] = [[] for _ in range(m)]
+    for i in ids:
+        e = int(np.argmin(loads))
+        queues[e].append(i)
+        loads[e] += 1.0 if costs is None else costs[i]
+    return Schedule("part_images", queues)
+
+
+def part_lpt(ids, m: int, costs) -> Schedule:
+    """Graham's LPT rule on estimated processing times."""
+    order = sorted(ids, key=lambda i: -costs[i])
+    loads = [0.0] * m
+    queues: list[list[int]] = [[] for _ in range(m)]
+    for i in order:
+        e = int(np.argmin(loads))
+        queues[e].append(i)
+        loads[e] += costs[i]
+    return Schedule("part_LPT", queues)
+
+
+STRATEGIES = {"part_executors": part_executors, "part_images": part_images,
+              "part_LPT": part_lpt}
+
+
+def make_schedule(strategy: str, ids, m: int, costs=None, seed: int = 0):
+    if strategy == "part_executors":
+        return part_executors(ids, m, seed=seed)
+    if strategy == "part_images":
+        return part_images(ids, m, costs)
+    if strategy == "part_LPT":
+        if costs is None:
+            raise ValueError("part_LPT needs cost estimates (Variant 3)")
+        return part_lpt(ids, m, costs)
+    raise ValueError(strategy)

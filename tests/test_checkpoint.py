@@ -1,0 +1,92 @@
+"""Checkpoint: save/restore round-trip, rotation, async, elastic re-shard."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"w": jnp.ones((4, 4), jnp.bfloat16) * 1.5,
+                  "n": jnp.asarray(7, jnp.int32)},
+            "l": [jnp.zeros((2,), jnp.float32),
+                  jnp.full((2, 2), -3.0, jnp.float32)]}
+
+
+def assert_tree_equal(x, y):
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), x, y)
+
+
+def test_roundtrip_bf16_and_ints(tmp_path):
+    t = tree()
+    ckpt.save(tmp_path, 5, t, metadata={"k": "v"})
+    restored, meta, step = ckpt.restore(tmp_path, t)
+    assert step == 5 and meta == {"k": "v"}
+    assert restored["b"]["w"].dtype == jnp.bfloat16
+    assert_tree_equal(t, restored)
+
+
+def test_rotation_keeps_latest(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ckpt.AsyncCheckpointer()
+    t = tree()
+    saver.save(tmp_path, 1, t)
+    saver.save(tmp_path, 2, t)     # joins the previous write
+    saver.join()
+    assert ckpt.latest_step(tmp_path) == 2
+    restored, _, _ = ckpt.restore(tmp_path, t)
+    assert_tree_equal(t, restored)
+
+
+def test_missing_leaf_and_shape_mismatch(tmp_path):
+    t = tree()
+    ckpt.save(tmp_path, 1, t)
+    bad = dict(t, extra=jnp.zeros((1,)))
+    with pytest.raises(KeyError):
+        ckpt.restore(tmp_path, bad)
+    bad2 = dict(t, a=jnp.zeros((9, 9)))
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, bad2)
+
+
+def test_elastic_reshard_subprocess(tmp_path):
+    """Save on 1 device, restore re-sharded onto a 2x4 host-device mesh
+    (the elastic-scaling path).  Runs in a subprocess so the 8-device
+    XLA_FLAGS doesn't leak into this process."""
+    import subprocess
+    import sys
+
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import ckpt
+
+t = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+ckpt.save(r"{tmp_path}", 1, t)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
+restored, _, _ = ckpt.restore(r"{tmp_path}", t, shardings=sh)
+assert restored["w"].sharding.spec == P("data", "model")
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+print("ELASTIC_OK")
+"""
+    import os
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=180,
+                         env=env, cwd="/root/repo")
+    assert "ELASTIC_OK" in res.stdout, res.stderr[-2000:]

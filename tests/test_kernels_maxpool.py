@@ -1,0 +1,63 @@
+"""Pallas maxpool kernel vs pure-jnp oracle: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.maxpool import kernel, ref
+
+SHAPES = [(1, 1), (1, 7), (7, 1), (3, 3), (8, 8), (5, 130), (17, 129),
+          (32, 32), (33, 257), (64, 64)]
+DTYPES = [np.float32, np.int32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == np.int32:
+        return rng.integers(-1000, 1000, size=shape).astype(np.int32)
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_maxargmax_matches_ref(shape, dtype):
+    x = jnp.asarray(_rand(shape, dtype, hash(shape) % 1000))
+    kv, ka = kernel.maxargmaxpool3x3(x, interpret=True)
+    rv, ra = ref.maxargmaxpool3x3(x)
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_min_max_pool_match_ref(shape):
+    x = jnp.asarray(_rand(shape, np.float32, 0))
+    np.testing.assert_array_equal(
+        np.asarray(kernel.maxpool3x3(x, interpret=True)),
+        np.asarray(ref.maxpool3x3(x)))
+    np.testing.assert_array_equal(
+        np.asarray(kernel.minpool3x3(x, interpret=True)),
+        np.asarray(ref.minpool3x3(x)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 24), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([1, 2, 4, 8, 16]))
+def test_property_ties_and_blocks(h, w, seed, block_rows):
+    """Heavy ties + arbitrary block sizes: tie-break must equal the total order."""
+    x = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 3, size=(h, w)).astype(np.float32))
+    kv, ka = kernel.maxargmaxpool3x3(x, interpret=True, block_rows=block_rows)
+    rv, ra = ref.maxargmaxpool3x3(x)
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(ra))
+
+
+def test_pixhomology_with_pallas_pools_matches():
+    """End-to-end: core algorithm using the Pallas kernel (interpret) == oracle."""
+    from repro.core import diagram_to_array, persistence_oracle, pixhomology
+    img = np.random.default_rng(11).normal(size=(24, 18)).astype(np.float32)
+    d = pixhomology(jnp.asarray(img), max_features=512, max_candidates=512,
+                    use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(diagram_to_array(d),
+                                  persistence_oracle(img))

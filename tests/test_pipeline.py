@@ -1,0 +1,184 @@
+"""Distributed PH pipeline: scheduling, fault tolerance, work-log resume."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import astro
+from repro.distributed.context import single_device_ctx
+from repro.pipeline.driver import FailureInjector, run_pipeline
+from repro.pipeline.executor import ExecutorPool
+from repro.pipeline.scheduler import (make_schedule, part_executors,
+                                      part_images, part_lpt)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 12), st.integers(0, 2 ** 20))
+def test_schedules_cover_all_images_exactly_once(n, m, seed):
+    rng = np.random.default_rng(seed)
+    ids = list(range(n))
+    costs = {i: float(rng.uniform(1, 100)) for i in ids}
+    for strat in ("part_executors", "part_images", "part_LPT"):
+        sched = make_schedule(strat, ids, m, costs, seed=seed)
+        flat = [i for q in sched.queues for i in q]
+        assert sorted(flat) == ids, strat
+        assert len(sched.queues) == m
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 80), st.integers(2, 10), st.integers(0, 2 ** 20))
+def test_lpt_beats_or_matches_static_on_skewed_costs(n, m, seed):
+    """Paper fig 6: LPT's queue makespan <= static chunking, and is within
+    the Graham 4/3 bound of the lower bound."""
+    rng = np.random.default_rng(seed)
+    ids = list(range(n))
+    # heavy-tailed costs => stragglers exist
+    costs = {i: float(rng.pareto(1.5) + 0.1) for i in ids}
+    lpt = part_lpt(ids, m, costs).queue_makespan(costs)
+    static = part_executors(ids, m, seed=seed).queue_makespan(costs)
+    dynamic = part_images(ids, m, costs).queue_makespan(costs)
+    lower = max(max(costs.values()), sum(costs.values()) / m)
+    # Graham's theorems: LPT within 4/3 - 1/(3m) of OPT (>= lower bound);
+    # greedy list scheduling within 2 - 1/m.
+    assert lpt <= (4 / 3 - 1 / (3 * m)) * lower + 1e-6
+    assert dynamic <= (2 - 1 / m) * lower + 1e-6
+    # static is a valid schedule, so it can never beat the lower bound
+    assert static >= lower - 1e-9
+    assert lpt <= static * (4 / 3) + 1e-6
+
+
+def test_lpt_beats_static_on_strong_skew():
+    """Deterministic instance with a straggler: LPT clearly wins (fig 6)."""
+    costs = {i: 1.0 for i in range(32)}
+    costs[0] = 30.0
+    ids = list(costs)
+    m = 8
+    lpt = part_lpt(ids, m, costs).queue_makespan(costs)
+    static = np.mean([part_executors(ids, m, seed=s).queue_makespan(costs)
+                      for s in range(10)])
+    assert lpt == 30.0               # straggler isolated on its own executor
+    assert static > lpt + 1.0        # chunking stacks work behind it
+
+
+def test_lpt_requires_costs():
+    with pytest.raises(ValueError):
+        make_schedule("part_LPT", [1, 2], 2, None)
+
+
+# ---------------------------------------------------------------------------
+# Driver: fault tolerance + resume
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pool():
+    return ExecutorPool(single_device_ctx(), image_size=128,
+                        max_features=2048, max_candidates=8192)
+
+
+def test_pipeline_completes_and_counts_objects(pool):
+    res = run_pipeline(pool, list(range(4)), strategy="part_LPT")
+    assert len(res.diagrams) == 4
+    for d in res.diagrams.values():
+        assert d["count"] > 0 and not d["overflow"]
+
+
+def test_failure_recovery(pool):
+    inj = FailureInjector([0])       # first round dies once
+    res = run_pipeline(pool, list(range(3)), strategy="part_images",
+                       failure_injector=inj)
+    assert res.failures == 1
+    assert len(res.diagrams) == 3    # everything still computed
+
+
+def test_worklog_resume(tmp_path, pool):
+    log = tmp_path / "work.jsonl"
+    res1 = run_pipeline(pool, [0, 1], work_log=log)
+    assert len(res1.diagrams) == 2
+    lines_before = log.read_text().count("\n")
+    # Second run with a superset: already-done images are NOT recomputed.
+    res2 = run_pipeline(pool, [0, 1, 2], work_log=log)
+    assert len(res2.diagrams) == 3
+    new_lines = log.read_text().count("\n") - lines_before
+    assert new_lines == 1            # only image 2 was processed
+
+
+def test_pipeline_results_deterministic(pool):
+    r1 = run_pipeline(pool, [5, 6], strategy="part_executors")
+    r2 = run_pipeline(pool, [5, 6], strategy="part_LPT")
+    for i in (5, 6):                 # schedule must not change the math
+        assert r1.diagrams[i]["top_births"] == r2.diagrams[i]["top_births"]
+        assert r1.diagrams[i]["count"] == r2.diagrams[i]["count"]
+
+
+# ---------------------------------------------------------------------------
+# Variant 2 data + filtering
+# ---------------------------------------------------------------------------
+
+def test_astro_images_deterministic_and_filterable():
+    a = astro.generate_image(3, 128)
+    b = astro.generate_image(3, 128)
+    np.testing.assert_array_equal(a, b)
+    c = astro.generate_image(4, 128)
+    assert not np.array_equal(a, c)
+
+    dropped = {}
+    for level in ("vanilla", "filter_light", "filter_std", "filter_heavy"):
+        _, frac = astro.filter_threshold(a, level)
+        dropped[level] = frac
+    assert dropped["vanilla"] == 0.0
+    assert dropped["filter_light"] <= dropped["filter_std"] <= \
+        dropped["filter_heavy"]
+    assert dropped["filter_heavy"] > 0.5   # background dominates star fields
+
+
+def test_truncation_preserves_above_threshold_pairs():
+    """Variant 2 must not change births OR deaths above the threshold
+    (table 1: 'no relevant degradation in output quality'), and must
+    shrink the sequential merge sweep (the speedup mechanism)."""
+    import jax.numpy as jnp
+    from repro.core import num_candidates, pixhomology
+
+    img = astro.generate_image(7, 128)
+    t, frac = astro.filter_threshold(img, "filter_std")
+    assert frac > 0.5
+    d0 = pixhomology(jnp.asarray(img), max_features=4096,
+                     max_candidates=16384)
+    d1 = pixhomology(jnp.asarray(img), t, max_features=4096,
+                     max_candidates=16384)
+    assert not bool(d1.overflow)
+
+    def rows(d):
+        c = int(d.count)
+        return np.stack([np.asarray(d.birth)[:c], np.asarray(d.death)[:c],
+                         np.asarray(d.p_birth)[:c]], 1)
+
+    r0, r1 = rows(d0), rows(d1)
+    # every truncated row's birth is above t
+    assert np.all(r1[:, 0] >= t)
+    # rows with death >= t are bit-identical between the two runs
+    keep0 = r0[r0[:, 1] >= t]
+    keep1 = r1[r1[:, 1] >= t]
+    np.testing.assert_array_equal(keep0, keep1)
+    # births above t all survive truncation (deaths clipped at t)
+    np.testing.assert_array_equal(r0[r0[:, 0] >= t][:, [0, 2]],
+                                  r1[:, [0, 2]])
+    # and the sequential sweep got shorter
+    k0 = int(num_candidates(jnp.asarray(img)))
+    k1 = int(num_candidates(jnp.asarray(img), truncate_value=t))
+    assert k1 < 0.25 * k0, (k0, k1)
+
+
+def test_cost_estimate_correlates_with_true_cost():
+    """Variant 3: the schedule-time estimate must rank images usefully."""
+    est, true = [], []
+    for i in range(12):
+        img = astro.generate_image(i, 128)
+        est.append(astro.estimate_cost_from_id(i, 128))
+        true.append(astro.estimate_cost(img))
+    r = np.corrcoef(est, true)[0, 1]
+    assert r > 0.5, f"cost model too weak: r={r:.2f}"

@@ -1,0 +1,170 @@
+"""Correctness of the PixHomology core vs the classical union-find oracle.
+
+The paper validates against Ripser with bottleneck distance 0 (fig 7); we
+assert *exact* equality (values AND pixel coordinates) against the oracle,
+which is stronger, plus property-based sweeps with hypothesis.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Diagram,
+    batched_pixhomology,
+    diagram_to_array,
+    num_candidates,
+    persistence_oracle,
+    pixhomology,
+)
+
+
+def run_exact(img: np.ndarray, mode: str = "exact") -> np.ndarray:
+    h, w = img.shape
+    d = pixhomology(jnp.asarray(img), max_features=h * w,
+                    max_candidates=h * w, candidate_mode=mode)
+    assert not bool(d.overflow)
+    return diagram_to_array(d)
+
+
+# ---------------------------------------------------------------------------
+# Exact equality with the oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 14), st.integers(1, 14), st.integers(0, 2 ** 31 - 1))
+def test_matches_oracle_gaussian(h, w, seed):
+    img = np.random.default_rng(seed).normal(size=(h, w)).astype(np.float32)
+    got = run_exact(img)
+    want = persistence_oracle(img)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(0, 2 ** 31 - 1),
+       st.integers(2, 4))
+def test_matches_oracle_heavy_ties(h, w, seed, levels):
+    """Tiny integer range => massive value ties; the paper's strict-max
+    precondition is violated, the total order must still make both sides agree."""
+    img = np.random.default_rng(seed).integers(
+        0, levels, size=(h, w)).astype(np.float32)
+    np.testing.assert_array_equal(run_exact(img), persistence_oracle(img))
+
+
+def test_matches_oracle_integer_dtype():
+    img = np.random.default_rng(3).integers(0, 50, size=(17, 9)).astype(np.int32)
+    got = run_exact(img)
+    np.testing.assert_array_equal(got, persistence_oracle(img))
+
+
+def test_constant_image():
+    img = np.zeros((6, 7), np.float32)
+    got = run_exact(img)
+    want = persistence_oracle(img)
+    np.testing.assert_array_equal(got, want)
+    assert got.shape[0] == 1  # single component, pure tie-break order
+
+
+def test_single_pixel():
+    img = np.array([[3.5]], np.float32)
+    got = run_exact(img)
+    assert got.shape == (1, 4)
+    assert got[0, 0] == got[0, 1] == pytest.approx(3.5)
+
+
+def test_monotone_ramp():
+    img = np.arange(30, dtype=np.float32).reshape(5, 6)
+    got = run_exact(img)
+    assert got.shape[0] == 1
+    np.testing.assert_array_equal(got, persistence_oracle(img))
+
+
+def test_two_gaussian_blobs_known_saddle():
+    """Two bumps joined by a col: the younger dies exactly at the col value."""
+    yy, xx = np.mgrid[0:41, 0:81].astype(np.float32)
+    img = (2.0 * np.exp(-((yy - 20) ** 2 + (xx - 20) ** 2) / 40.0)
+           + 1.5 * np.exp(-((yy - 20) ** 2 + (xx - 60) ** 2) / 40.0))
+    img += np.random.default_rng(0).normal(scale=1e-4, size=img.shape).astype(np.float32)
+    got = run_exact(img)
+    want = persistence_oracle(img)
+    np.testing.assert_array_equal(got, want)
+    # Row 0: essential class born at the global max; row 1: the smaller bump.
+    assert got[0, 0] == pytest.approx(2.0, abs=0.05)
+    assert got[1, 0] == pytest.approx(1.5, abs=0.05)
+    assert got[1, 1] < got[1, 0]
+
+
+# ---------------------------------------------------------------------------
+# Paper-literal distillation: births exact, deaths may only move DOWN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 12), st.integers(3, 12), st.integers(0, 2 ** 31 - 1))
+def test_paper_mode_births_exact_deaths_lower(h, w, seed):
+    img = np.random.default_rng(seed).normal(size=(h, w)).astype(np.float32)
+    got = run_exact(img, mode="paper")
+    want = persistence_oracle(img)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(got[:, [0, 2]], want[:, [0, 2]])  # births
+    # A missed saddle can only postpone a merge to a lower value.
+    assert np.all(got[:, 1] <= want[:, 1] + 0)
+
+
+# ---------------------------------------------------------------------------
+# Batched / capacity / diagnostics behaviour
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_single():
+    rng = np.random.default_rng(7)
+    imgs = rng.normal(size=(4, 10, 11)).astype(np.float32)
+    batched = batched_pixhomology(jnp.asarray(imgs), max_features=128,
+                                  max_candidates=128)
+    for i in range(imgs.shape[0]):
+        single = pixhomology(jnp.asarray(imgs[i]), max_features=128,
+                             max_candidates=128)
+        for a, b in zip(batched, single):
+            np.testing.assert_array_equal(np.asarray(a[i]), np.asarray(b))
+
+
+def test_feature_overflow_flag():
+    img = np.random.default_rng(0).normal(size=(16, 16)).astype(np.float32)
+    full = pixhomology(jnp.asarray(img), max_features=256, max_candidates=256)
+    c = int(full.count)
+    assert c > 4
+    small = pixhomology(jnp.asarray(img), max_features=4, max_candidates=256)
+    assert bool(small.overflow)
+    assert int(small.count) == 4
+    # The 4 retained rows are the highest-birth ones, in the same order.
+    np.testing.assert_array_equal(np.asarray(small.birth),
+                                  np.asarray(full.birth[:4]))
+
+
+def test_candidate_overflow_flag():
+    img = np.random.default_rng(1).normal(size=(16, 16)).astype(np.float32)
+    k = int(num_candidates(jnp.asarray(img)))
+    assert k > 2
+    d = pixhomology(jnp.asarray(img), max_features=256, max_candidates=2)
+    assert bool(d.overflow)
+
+
+def test_diagram_is_sorted_and_padded():
+    img = np.random.default_rng(2).normal(size=(12, 12)).astype(np.float32)
+    d = pixhomology(jnp.asarray(img), max_features=512, max_candidates=512)
+    c = int(d.count)
+    b = np.asarray(d.birth)
+    assert np.all(np.diff(b[:c]) <= 0)          # descending births
+    assert np.all(b[c:] == -np.inf)             # padding
+    assert np.all(np.asarray(d.p_birth)[c:] == -1)
+    assert int(d.n_unmerged) == 0
+    # All finite deaths lie strictly below their births (superlevel PD is
+    # below the diagonal in (birth, death) with death < birth).
+    dd = np.asarray(d.death)[:c]
+    assert np.all(dd[1:] < b[1:c] + 1e-9)
+
+
+def test_jit_cache_stable_across_shapes():
+    # Different shapes are distinct jit traces; results stay correct.
+    for shape in [(5, 9), (9, 5), (7, 7)]:
+        img = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        np.testing.assert_array_equal(run_exact(img), persistence_oracle(img))
