@@ -32,6 +32,11 @@ def main() -> None:
         derived = ";".join(f"{k}={v}" for k, v in r.items())
         print(f"{name},{t_s * 1e6:.1f},{derived}")
 
+    # Engine plan-cache summary: every table above shares compiled plans
+    # through repro.ph.PHEngine, so traces << calls.
+    cache = paper_tables.plan_cache_summary()
+    print("# plan cache: " + ";".join(f"{k}={v}" for k, v in cache.items()))
+
     # Roofline summary (from dry-run artifacts, if present)
     try:
         from benchmarks import roofline_report

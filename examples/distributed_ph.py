@@ -2,31 +2,30 @@
 
     PYTHONPATH=src python examples/distributed_ph.py
 
-Runs the full Spark-equivalent pipeline on the local device pool:
+Runs the full Spark-equivalent pipeline on the local device pool through
+the ``repro.ph`` facade:
   * Variant 1 (load_self): executors generate/load their own images,
   * Variant 2 (filter_std): per-image threshold, background excluded,
   * Variant 3 (part_LPT): cost-estimated LPT scheduling,
   * fault tolerance: an injected executor failure + work-log recovery,
   * output: per-image persistence summaries (object counts, top births).
 
-On a real pod the same driver runs with ``make_context()`` (256/512 chips);
+On a real pod the same engine runs over ``make_context()`` (256/512 chips);
 here it uses whatever devices exist.
 """
 import json
 
-from repro.distributed.context import single_device_ctx
-from repro.pipeline.driver import FailureInjector, run_pipeline
-from repro.pipeline.executor import ExecutorPool
+from repro.pipeline.driver import FailureInjector
+from repro.ph import FilterLevel, PHConfig, PHEngine
 
 
 def main():
-    pool = ExecutorPool(single_device_ctx(), image_size=256,
-                        max_features=8192, max_candidates=32768,
-                        filter_level="filter_std")
-    print(f"executors: {pool.num_executors}")
+    config = PHConfig(max_features=8192, max_candidates=32768,
+                      filter_level=FilterLevel.STD)
+    engine = PHEngine(config)
 
-    result = run_pipeline(
-        pool, image_ids=list(range(12)), strategy="part_LPT",
+    result = engine.run_distributed(
+        list(range(12)), image_size=256, strategy="part_LPT",
         work_log="/tmp/ph_worklog.jsonl",
         failure_injector=FailureInjector([2]),   # round 2 dies once
         verbose=True)
@@ -34,6 +33,7 @@ def main():
     print(f"\ncompleted {len(result.diagrams)} images in {result.rounds} "
           f"rounds, recovered from {result.failures} failure(s), "
           f"{result.elapsed_s:.1f}s")
+    print(f"plan cache: {engine.plan_stats()}")
     sample = result.diagrams[0]
     print("image 0 summary:", json.dumps(sample, indent=1)[:400])
 

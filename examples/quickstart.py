@@ -3,33 +3,42 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Generates a synthetic star field (paper §6.2 recipe), computes its
-persistence diagram with PixHomology (Algorithm 1), validates it against
-the classical union-find oracle, and prints the most persistent objects.
+persistence diagram through the ``repro.ph`` facade — deliberately starting
+from undersized capacities so the engine's overflow auto-regrow kicks in —
+validates the result against the classical union-find oracle, and prints
+the most persistent objects.
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import diagram_to_array, persistence_oracle, pixhomology
-from repro.data import astro
+from repro.core import persistence_oracle
+from repro.ph import PHConfig, PHEngine
 
 
 def main():
+    from repro.data import astro
     img = astro.generate_image(image_id=42, size=256)
     print(f"image: {img.shape}, sky≈{np.median(img):.1f}, "
           f"max={img.max():.1f}")
 
-    diag = pixhomology(jnp.asarray(img), max_features=8192,
-                       max_candidates=32768)
-    n = int(diag.count)
+    # Undersized on purpose: the engine re-dispatches at doubled capacities
+    # until the diagram fits (see src/repro/ph/README.md for the policy).
+    engine = PHEngine(PHConfig(max_features=512, max_candidates=1024))
+    result = engine.run(img)
+    n = int(result.diagram.count)
     print(f"\nPixHomology found {n} components "
-          f"(overflow={bool(diag.overflow)})")
+          f"(regrow attempts={result.regrow.attempts}, final capacities="
+          f"{result.config.max_features}/{result.config.max_candidates})")
 
-    rows = diagram_to_array(diag)
+    rows = result.to_array()
     print("\ntop-10 by birth (birth, death, persistence, y, x):")
     w = img.shape[1]
     for b, d, pb, pd in rows[:10]:
         print(f"  birth={b:9.2f} death={d:9.2f} pers={b - d:9.2f} "
               f"at ({int(pb) // w:4d},{int(pb) % w:4d})")
+
+    # Repeated same-shape calls reuse the compiled plan (no re-trace).
+    engine.run(astro.generate_image(image_id=43, size=256))
+    print(f"\nplan cache: {engine.plan_stats()}")
 
     # Validate against the classical algorithm — exact equality, which is
     # stronger than the paper's bottleneck-distance-0 check (fig 7).

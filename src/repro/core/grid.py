@@ -1,0 +1,23 @@
+"""Shared 2D grid utilities for the 8-neighborhood stencils.
+
+``shift2d`` is the single source of truth for neighbor access: the maxpool
+reference oracle, the PixHomology candidate generators, and any future
+stencil all shift through here so border semantics (constant fill, one-pixel
+halo) stay bit-identical across layers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
+    """Return y with ``y[r, c] = x[r + dr, c + dc]``, ``fill`` outside.
+
+    Supports the 3x3 stencil offsets ``dr, dc in {-1, 0, 1}`` (one-pixel
+    constant-value halo, same-size output).
+    """
+    if not (-1 <= dr <= 1 and -1 <= dc <= 1):
+        raise ValueError(f"shift2d supports |dr|,|dc| <= 1, got ({dr}, {dc})")
+    h, w = x.shape
+    padded = jnp.pad(x, 1, constant_values=fill)
+    return padded[1 + dr : 1 + dr + h, 1 + dc : 1 + dc + w]

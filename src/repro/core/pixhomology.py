@@ -45,8 +45,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.grid import shift2d
 from repro.kernels.maxpool import ops as pool_ops
-from repro.kernels.maxpool import ref as pool_ref
 
 # 8-neighborhood offsets (self excluded), fixed order: the union-find oracle
 # uses the same order so merge processing is bit-identical.
@@ -76,10 +76,6 @@ def total_order_rank(values_flat: jnp.ndarray) -> jnp.ndarray:
     n = values_flat.shape[0]
     perm = jnp.argsort(values_flat, stable=True)  # ties -> ascending index
     return jnp.zeros(n, jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
-
-
-def _shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
-    return pool_ref._shift(x, dr, dc, fill)
 
 
 # ---------------------------------------------------------------------------
@@ -124,8 +120,8 @@ def exact_candidates(rank2d: jnp.ndarray, labels2d: jnp.ndarray) -> jnp.ndarray:
     hi_max = jnp.full(rank2d.shape, -1, jnp.int32)
     hi_min = jnp.full(rank2d.shape, n, jnp.int32)
     for dr, dc in NEIGHBOR_OFFSETS:
-        nrank = _shift2d(rank2d, dr, dc, jnp.int32(-1))
-        nlbl = _shift2d(labels2d, dr, dc, jnp.int32(-1))
+        nrank = shift2d(rank2d, dr, dc, jnp.int32(-1))
+        nlbl = shift2d(labels2d, dr, dc, jnp.int32(-1))
         higher = nrank > rank2d  # border fill -1 is never higher
         hi_max = jnp.where(higher, jnp.maximum(hi_max, nlbl), hi_max)
         hi_min = jnp.where(higher, jnp.minimum(hi_min, nlbl), hi_min)
@@ -150,7 +146,7 @@ def paper_candidates(rank2d: jnp.ndarray, comp2d: jnp.ndarray,
     # Neighbor ranks with directional fills: for "min along" tests a missing
     # neighbor counts as higher (fill n); for "max along" as lower (fill -1).
     def nb(dr, dc, fill):
-        return _shift2d(rank2d, dr, dc, jnp.int32(fill))
+        return shift2d(rank2d, dr, dc, jnp.int32(fill))
 
     local_min = jnp.ones(rank2d.shape, bool)
     for dr, dc in NEIGHBOR_OFFSETS:

@@ -78,8 +78,17 @@ FILTER_FACTORS = {"vanilla": None, "filter_light": 0.3, "filter_std": 1.0,
                   "filter_heavy": 1.3}
 
 
-def filter_threshold(img: np.ndarray, level: str) -> tuple[float | None,
-                                                            float]:
+def _level_name(level) -> str:
+    """Accept a plain string or a ``repro.ph.FilterLevel`` enum member."""
+    name = getattr(level, "value", level)
+    if name not in FILTER_FACTORS:
+        raise ValueError(f"unknown filter level {level!r}; expected one of "
+                         f"{sorted(FILTER_FACTORS)}")
+    return name
+
+
+def filter_threshold(img: np.ndarray, level) -> tuple[float | None,
+                                                       float]:
     """Variant 2: per-image exclusion threshold.
 
     Returns (truncate_value or None, dropped pixel fraction).  The threshold
@@ -90,16 +99,16 @@ def filter_threshold(img: np.ndarray, level: str) -> tuple[float | None,
     the image would be, and it shortens the sequential merge sweep, which is
     the actual Variant-2 win on TPU (EXPERIMENTS.md table 1).
     """
-    factor = FILTER_FACTORS[level]
+    factor = FILTER_FACTORS[_level_name(level)]
     if factor is None:
         return None, 0.0
     t = estimate_threshold(img) * factor
     return float(t), float((img < t).mean())
 
 
-def estimate_cost(img: np.ndarray, level: str = "filter_std") -> float:
+def estimate_cost(img: np.ndarray, level="filter_std") -> float:
     """Variant 3 LPT cost proxy: number of non-background pixels."""
-    factor = FILTER_FACTORS.get(level) or 1.0
+    factor = FILTER_FACTORS[_level_name(level)] or 1.0
     t = estimate_threshold(img) * factor
     return float((img >= t).sum())
 

@@ -14,17 +14,16 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.grid import shift2d
+
 # (dr, dc) offsets of the 3x3 window, self included.
 OFFSETS = [(-1, -1), (-1, 0), (-1, 1),
            (0, -1), (0, 0), (0, 1),
            (1, -1), (1, 0), (1, 1)]
 
-
-def _shift(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
-    """Return y with y[r, c] = x[r + dr, c + dc], `fill` outside."""
-    h, w = x.shape
-    padded = jnp.pad(x, 1, constant_values=fill)
-    return padded[1 + dr : 1 + dr + h, 1 + dc : 1 + dc + w]
+# Deprecated alias kept for one release; the shared util lives in
+# repro.core.grid so PixHomology and the pooling oracle use one shift.
+_shift = shift2d
 
 
 def _neg_inf(dtype) -> jnp.ndarray:
@@ -46,7 +45,7 @@ def maxpool3x3(x: jnp.ndarray) -> jnp.ndarray:
     for dr, dc in OFFSETS:
         if (dr, dc) == (0, 0):
             continue
-        out = jnp.maximum(out, _shift(x, dr, dc, fill))
+        out = jnp.maximum(out, shift2d(x, dr, dc, fill))
     return out
 
 
@@ -57,7 +56,7 @@ def minpool3x3(x: jnp.ndarray) -> jnp.ndarray:
     for dr, dc in OFFSETS:
         if (dr, dc) == (0, 0):
             continue
-        out = jnp.minimum(out, _shift(x, dr, dc, fill))
+        out = jnp.minimum(out, shift2d(x, dr, dc, fill))
     return out
 
 
@@ -79,8 +78,8 @@ def argmaxpool3x3(x: jnp.ndarray) -> jnp.ndarray:
     for dr, dc in OFFSETS:
         if (dr, dc) == (0, 0):
             continue
-        v = _shift(x, dr, dc, fill)
-        i = _shift(flat, dr, dc, jnp.int32(-1))
+        v = shift2d(x, dr, dc, fill)
+        i = shift2d(flat, dr, dc, jnp.int32(-1))
         better = (v > best_val) | ((v == best_val) & (i > best_idx))
         best_val = jnp.where(better, v, best_val)
         best_idx = jnp.where(better, i, best_idx)

@@ -90,6 +90,8 @@ def _analyze(compiled, cfg, shape) -> dict:
                               - ma.alias_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):             # older jax: one dict per device
+        ca = ca[0] if ca else {}
     out["cost_analysis"] = {"flops": float(ca.get("flops", 0.0)),
                             "bytes_accessed":
                                 float(ca.get("bytes accessed", 0.0))}
@@ -127,21 +129,18 @@ def _run_pixhomology(ctx, shape_name: str) -> dict:
     """The paper's own workload as a dry-run cell: a sharded image batch."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.pipeline.executor import make_sharded_ph
+    from repro.ph import PHConfig, PHEngine
 
     presets = {"ph_batch_1k": (512, 1024, 1024, 16384, 8192),
                "ph_batch_4k": (512, 4096, 4096, 65536, 32768)}
     b, h, w, k, f = presets[shape_name]
-    fn = make_sharded_ph(ctx, max_features=f, max_candidates=k,
-                         use_pallas=False)
-    spec = NamedSharding(ctx.mesh, P(ctx.dp_axes, None, None))
-    tspec = NamedSharding(ctx.mesh, P(ctx.dp_axes))
-    jfn = jax.jit(fn, in_shardings=(spec, tspec))
+    engine = PHEngine(PHConfig(max_features=f, max_candidates=k,
+                               use_pallas=False, auto_regrow=False))
+    plan = engine.sharded_plan(ctx, (b, h, w), jnp.dtype(jnp.float32), f, k)
     sds = jax.ShapeDtypeStruct((b, h, w), jnp.float32)
     tsds = jax.ShapeDtypeStruct((b,), jnp.float32)
     with ctx.mesh:
-        lowered = jfn.lower(sds, tsds)
+        lowered = plan.fn.lower(sds, tsds)
         compiled = lowered.compile()
     out = {"lower_ok": True, "compile_ok": True}
     out.update(_analyze(compiled, None, None))

@@ -34,3 +34,12 @@ def make_small_context(data: int = 1, model: int = 1) -> DistContext:
     """Small mesh over however many (host) devices exist — tests/examples."""
     mesh = jax.make_mesh((data, model), ("data", "model"))
     return DistContext(mesh=mesh, dp_axes=("data",), tp_axis="model")
+
+
+def auto_context() -> DistContext:
+    """Context over whatever devices exist: one data axis across all local
+    devices, model axis 1 (the PH pipeline's default executor mesh)."""
+    from repro.distributed.context import single_device_ctx
+    n = len(jax.devices())
+    return make_small_context(data=n, model=1) if n > 1 \
+        else single_device_ctx()

@@ -5,19 +5,16 @@
 Runs the full paper pipeline on whatever devices exist: LPT (or other
 Variant-3 strategy) scheduling, executor self-loading (Variant 1),
 threshold filtering (Variant 2), work-log fault tolerance, per-image
-persistence diagram summaries.
+persistence diagram summaries.  All PH computation is constructed through
+the :mod:`repro.ph` facade (``PHConfig`` + ``PHEngine``).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-
-from repro.distributed.context import single_device_ctx
-from repro.launch.mesh import make_small_context
-from repro.pipeline.driver import FailureInjector, run_pipeline
-from repro.pipeline.executor import ExecutorPool
+from repro.pipeline.driver import FailureInjector
+from repro.ph import PHConfig, PHEngine
 
 
 def main():
@@ -34,27 +31,29 @@ def main():
                     help="round indices to fail once (recovery demo)")
     ap.add_argument("--max-features", type=int, default=8192)
     ap.add_argument("--max-candidates", type=int, default=32768)
+    ap.add_argument("--candidate-mode", choices=["exact", "paper"])
+    ap.add_argument("--merge-impl", choices=["scan", "boruvka"])
+    ap.add_argument("--no-regrow", action="store_true",
+                    help="surface overflow instead of auto-regrowing")
     args = ap.parse_args()
 
-    n_dev = len(jax.devices())
-    ctx = make_small_context(data=n_dev, model=1) if n_dev > 1 \
-        else single_device_ctx()
-    pool = ExecutorPool(ctx, image_size=args.size,
-                        max_features=args.max_features,
-                        max_candidates=args.max_candidates,
-                        filter_level=args.filter)
+    config = PHConfig.from_flags(args)
+    engine = PHEngine(config)
     injector = (FailureInjector(args.inject_failure)
                 if args.inject_failure else None)
-    res = run_pipeline(pool, list(range(args.images)),
-                       strategy=args.strategy, work_log=args.work_log,
-                       failure_injector=injector, verbose=True)
+    res = engine.run_distributed(
+        list(range(args.images)), image_size=args.size,
+        strategy=args.strategy, work_log=args.work_log,
+        failure_injector=injector, verbose=True)
     total_objects = sum(d["count"] for d in res.diagrams.values())
+    stats = engine.plan_stats()
     print(json.dumps({
+        "config": json.loads(config.to_json()),
         "images": len(res.diagrams), "rounds": res.rounds,
         "failures_recovered": res.failures, "elapsed_s": round(res.elapsed_s, 2),
-        "executors": pool.num_executors,
         "total_objects": total_objects,
         "mean_objects_per_image": total_objects / max(len(res.diagrams), 1),
+        "plan_cache": stats,
     }, indent=1))
 
 

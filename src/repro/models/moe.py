@@ -28,13 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.context import shard_map_compat
 from repro.models import layers
-
-try:  # jax >= 0.6 exports shard_map at top level
-    from jax import shard_map as _shard_map_mod
-    shard_map = jax.shard_map
-except (ImportError, AttributeError):  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +112,17 @@ def _aux_loss(probs, idx, spec: MoESpec, axes):
     return aux * spec.aux_loss_weight
 
 
+def _named_axis_size(axis) -> int:
+    """Size of a named mesh axis inside shard_map, across jax versions
+    (``jax.lax.axis_size`` is new; ``psum(1, axis)`` is the classic idiom)."""
+    if not axis:
+        return 1
+    try:
+        return jax.lax.axis_size(axis)
+    except AttributeError:
+        return jax.lax.psum(1, axis)
+
+
 def moe_apply(params, x, spec: MoESpec, ctx, *, decode: bool = False):
     """x: (B, S, D) with batch sharded over ctx.dp_axes. Returns (y, aux)."""
     ep_axis = ctx.tp_axis
@@ -140,9 +146,8 @@ def moe_apply(params, x, spec: MoESpec, ctx, *, decode: bool = False):
         fn = lambda xx, router, wg, wu, wd: _moe_a2a_path(
             xx, router, wg, wu, wd, spec, ep_axis, all_axes)
 
-    y, aux = shard_map(
+    y, aux = shard_map_compat(
         fn, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"],
       params["w_down"])
     return y, aux
@@ -153,7 +158,7 @@ def _moe_a2a_path(x, router, w_gate, w_up, w_down, spec, ep_axis, all_axes):
 
     x arrives already sequence-sharded over the EP axis: (b, s_local, d)."""
     b, s, d = x.shape
-    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    ep = _named_axis_size(ep_axis)
     e_local = spec.num_experts // max(ep, 1)
 
     tokens = x.reshape(b * s, d)
@@ -200,7 +205,7 @@ def _moe_a2a_path(x, router, w_gate, w_up, w_down, spec, ep_axis, all_axes):
 def _moe_psum_path(x, router, w_gate, w_up, w_down, spec, ep_axis, all_axes):
     """Local-expert + psum combine (decode / non-divisible sequences)."""
     b, s, d = x.shape
-    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    ep = _named_axis_size(ep_axis)
     rank = jax.lax.axis_index(ep_axis) if ep_axis else 0
     e_local = spec.num_experts // max(ep, 1)
 

@@ -1,0 +1,27 @@
+"""Public facade for PixHomology computation (the only supported entry).
+
+    from repro.ph import PHConfig, PHEngine, FilterLevel
+
+    engine = PHEngine(PHConfig(filter_level=FilterLevel.STD))
+    result = engine.run(image)                  # single image, auto-regrow
+    batch = engine.run_batch(images)            # vmap'd (B, H, W)
+    job = engine.run_distributed(range(64))     # sharded pipeline
+
+Lower layers (``repro.core``, ``repro.pipeline``) remain importable for
+tests and internals, but applications, examples, launch scripts, and
+benchmarks go through this package.
+"""
+from repro.ph.config import (  # noqa: F401
+    CANDIDATE_MODES,
+    DTYPES,
+    MERGE_IMPLS,
+    FilterLevel,
+    PHConfig,
+)
+from repro.ph.engine import (  # noqa: F401
+    PHEngine,
+    PHResult,
+    Plan,
+    RegrowStats,
+    threshold_dtype,
+)

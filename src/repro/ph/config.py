@@ -1,0 +1,145 @@
+"""Typed, frozen configuration for the PH engine (the single public knob set).
+
+Every capacity, mode string, and backend toggle that used to travel as raw
+kwargs through ``pixhomology`` / ``ExecutorPool`` / ``run_pipeline`` lives
+here exactly once.  ``PHConfig`` is hashable, so it can key compiled-plan
+caches directly, and JSON round-trippable, so launch scripts and work logs
+can persist the exact configuration of a run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Any
+
+CANDIDATE_MODES = ("exact", "paper")
+MERGE_IMPLS = ("scan", "boruvka")
+DTYPES = (None, "float32", "float64", "int32", "bfloat16")
+
+
+class FilterLevel(str, enum.Enum):
+    """Variant-2 background filtering level (paper Table 1)."""
+
+    VANILLA = "vanilla"            # no filtering
+    LIGHT = "filter_light"         # 0.3 x (median + 2 MAD-sigma)
+    STD = "filter_std"             # 1.0 x
+    HEAVY = "filter_heavy"         # 1.3 x
+
+    def __str__(self) -> str:  # argparse/json friendliness
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class PHConfig:
+    """Frozen configuration of one PH computation family.
+
+    Capacity fields (``max_features``, ``max_candidates``) are *initial*
+    capacities: with ``auto_regrow`` on, the engine doubles them on overflow
+    up to ``regrow_*_ceiling`` (``None`` = the image pixel count, at which
+    overflow is impossible) at most ``max_regrows`` times.
+    """
+
+    # Diagram / merge-sweep capacities (static shapes; padded).
+    max_features: int = 8192
+    max_candidates: int = 32768
+    # Algorithm variants.
+    candidate_mode: str = "exact"          # "exact" | "paper"
+    merge_impl: str = "scan"               # "scan" | "boruvka"
+    filter_level: FilterLevel = FilterLevel.VANILLA
+    # Dtype policy: cast inputs before compute (None = keep input dtype).
+    dtype: str | None = None
+    # Backend toggles (forwarded to the maxpool kernels).
+    use_pallas: bool | None = None
+    interpret: bool = False
+    # Overflow auto-regrow policy.
+    auto_regrow: bool = True
+    regrow_factor: int = 2
+    max_regrows: int = 8
+    regrow_features_ceiling: int | None = None
+    regrow_candidates_ceiling: int | None = None
+
+    def __post_init__(self):
+        if isinstance(self.filter_level, str) and \
+                not isinstance(self.filter_level, FilterLevel):
+            object.__setattr__(self, "filter_level",
+                               FilterLevel(self.filter_level))
+        if self.candidate_mode not in CANDIDATE_MODES:
+            raise ValueError(f"candidate_mode must be one of "
+                             f"{CANDIDATE_MODES}, got {self.candidate_mode!r}")
+        if self.merge_impl not in MERGE_IMPLS:
+            raise ValueError(f"merge_impl must be one of {MERGE_IMPLS}, "
+                             f"got {self.merge_impl!r}")
+        if self.dtype not in DTYPES:
+            raise ValueError(f"dtype must be one of {DTYPES}, "
+                             f"got {self.dtype!r}")
+        for field in ("max_features", "max_candidates", "regrow_factor"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{field} must be a positive int, got {v!r}")
+        if self.regrow_factor < 2:
+            raise ValueError("regrow_factor must be >= 2")
+        if self.max_regrows < 0:
+            raise ValueError("max_regrows must be >= 0")
+        if self.regrow_features_ceiling is not None and \
+                self.regrow_features_ceiling < self.max_features:
+            raise ValueError("regrow_features_ceiling < max_features")
+        if self.regrow_candidates_ceiling is not None and \
+                self.regrow_candidates_ceiling < self.max_candidates:
+            raise ValueError("regrow_candidates_ceiling < max_candidates")
+
+    # -- derived ----------------------------------------------------------
+
+    def replace(self, **changes) -> "PHConfig":
+        return dataclasses.replace(self, **changes)
+
+    def plan_key(self) -> tuple:
+        """The config fields that affect *compiled executables*.
+
+        Regrow policy and filter level are host-side decisions and are
+        deliberately excluded (plan caches are per-:class:`PHEngine`, so
+        share one engine to reuse plans across those knobs).  Capacities
+        are passed separately by the engine (regrow re-dispatches at
+        larger capacities under the same config).
+        """
+        return (self.candidate_mode, self.merge_impl, self.dtype,
+                self.use_pallas, self.interpret)
+
+    # -- construction / serialization -------------------------------------
+
+    @classmethod
+    def from_flags(cls, args: Any, **overrides) -> "PHConfig":
+        """Build from an argparse ``Namespace`` (or any attribute bag).
+
+        Recognized attributes (all optional): ``max_features``,
+        ``max_candidates``, ``candidate_mode``, ``merge_impl``, ``filter``
+        or ``filter_level``, ``dtype``, ``use_pallas``, ``interpret``,
+        ``no_regrow``/``auto_regrow``, ``max_regrows``.
+        """
+        kw: dict[str, Any] = {}
+        for name in ("max_features", "max_candidates", "candidate_mode",
+                     "merge_impl", "dtype", "use_pallas", "interpret",
+                     "max_regrows", "auto_regrow", "regrow_factor",
+                     "regrow_features_ceiling", "regrow_candidates_ceiling"):
+            v = getattr(args, name, None)
+            if v is not None:
+                kw[name] = v
+        level = getattr(args, "filter_level", None) or getattr(
+            args, "filter", None)
+        if level is not None:
+            kw["filter_level"] = FilterLevel(level)
+        if getattr(args, "no_regrow", False):
+            kw["auto_regrow"] = False
+        kw.update(overrides)
+        return cls(**kw)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["filter_level"] = self.filter_level.value
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PHConfig":
+        d = json.loads(s)
+        d["filter_level"] = FilterLevel(d.get("filter_level", "vanilla"))
+        return cls(**d)

@@ -1,0 +1,366 @@
+"""PHEngine: the single entry point for PixHomology computation.
+
+The engine owns three things the call sites used to re-implement:
+
+* a **compiled-plan cache** keyed by ``(kind, shape, dtype, capacities,
+  config.plan_key())`` — repeated single-image, ``vmap``-batched, and
+  ``shard_map``-sharded calls reuse one jitted executable instead of
+  re-tracing (every plan carries a trace counter, so tests and benchmarks
+  can assert reuse);
+
+* **overflow auto-regrow** — the ``Diagram.overflow`` flag triggers
+  re-dispatch at doubled ``max_features``/``max_candidates`` up to a
+  configurable ceiling (default: the image pixel count, at which overflow
+  is impossible), with per-call :class:`RegrowStats`;
+
+* the **distributed pipeline** — ``run_distributed`` subsumes the old
+  ``ExecutorPool`` + ``run_pipeline`` pair: scheduler strategy, work-log
+  fault tolerance, and failure injection all hang off the engine.
+
+See ``src/repro/ph/README.md`` for the cache-keying and regrow policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Diagram, batched_pixhomology, diagram_to_array, \
+    pixhomology
+from repro.distributed.context import shard_map_compat
+from repro.ph.config import FilterLevel, PHConfig
+
+
+def threshold_dtype(image_dtype):
+    """Dtype for Variant-2 thresholds: the image dtype for floats, float32
+    for integer images (so fractional thresholds and the -inf "no
+    truncation" sentinel are not destroyed by an integer cast; comparisons
+    in the core promote)."""
+    return image_dtype if jnp.issubdtype(image_dtype, jnp.floating) \
+        else jnp.float32
+
+
+class Plan:
+    """One cached compiled executable plus its trace/call counters."""
+
+    __slots__ = ("fn", "key", "traces", "calls")
+
+    def __init__(self, fn: Callable, key: tuple):
+        self.fn = fn
+        self.key = key
+        self.traces = 0
+        self.calls = 0
+
+    def __call__(self, *args):
+        self.calls += 1
+        return self.fn(*args)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegrowStats:
+    """What the overflow auto-regrow loop did for one run."""
+
+    attempts: int                  # re-dispatches performed (0 = first try fit)
+    final_max_features: int
+    final_max_candidates: int
+    overflow: bool                 # residual overflow after the final attempt
+
+    @property
+    def regrown(self) -> bool:
+        return self.attempts > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PHResult:
+    """Diagram plus the effective configuration that produced it."""
+
+    diagram: Diagram
+    config: PHConfig               # capacities reflect any regrow
+    regrow: RegrowStats
+    # Variant-2 threshold(s) actually applied: a scalar for run(), a (B,)
+    # array for run_batch(), None when no filtering was in effect.
+    threshold: Any = None
+
+    def to_array(self) -> np.ndarray:
+        return diagram_to_array(self.diagram)
+
+
+class PHEngine:
+    """Config-driven PH computation with plan caching and auto-regrow.
+
+    One engine per configuration family; engines are cheap to construct but
+    the plan cache only pays off when reused, so share an engine across
+    calls of the same workload.
+    """
+
+    def __init__(self, config: PHConfig | None = None):
+        self.config = config if config is not None else PHConfig()
+        if not isinstance(self.config, PHConfig):
+            raise TypeError(f"config must be a PHConfig, "
+                            f"got {type(self.config).__name__}")
+        self._plans: dict[tuple, Plan] = {}
+        # Largest regrown capacities seen per (kind, shape, dtype): later
+        # calls start there instead of re-walking the doubling chain.
+        self._grown: dict[tuple, tuple[int, int]] = {}
+        self._hits = 0
+        self._misses = 0
+        self.regrow_log: list[dict] = []
+
+    # -- plan cache --------------------------------------------------------
+
+    def get_plan(self, key: tuple, builder: Callable[[Plan], Callable]) -> Plan:
+        """Fetch or build the compiled plan for ``key``.
+
+        ``builder(plan)`` returns the callable; it receives the plan object
+        so traced wrappers can bump ``plan.traces`` at trace time.
+        """
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = Plan(None, key)
+            plan.fn = builder(plan)
+            self._plans[key] = plan
+            self._misses += 1
+        else:
+            self._hits += 1
+        return plan
+
+    def plan_stats(self) -> dict:
+        return {
+            "plans": len(self._plans),
+            "traces": sum(p.traces for p in self._plans.values()),
+            "calls": sum(p.calls for p in self._plans.values()),
+            "hits": self._hits,
+            "misses": self._misses,
+            "regrows": len(self.regrow_log),
+        }
+
+    def _ph_kwargs(self, mf: int, mc: int) -> dict:
+        cfg = self.config
+        return dict(max_features=mf, max_candidates=mc,
+                    candidate_mode=cfg.candidate_mode,
+                    merge_impl=cfg.merge_impl,
+                    use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+
+    def _local_plan(self, kind: str, shape, dtype, mf: int, mc: int,
+                    truncated: bool) -> Plan:
+        """Plan for the non-sharded entry points: ``kind`` selects the
+        callee ("single" -> pixhomology, "batched" -> its vmap)."""
+        callee = pixhomology if kind == "single" else batched_pixhomology
+        key = (kind, shape, str(dtype), mf, mc, truncated,
+               self.config.plan_key())
+
+        def build(plan: Plan):
+            kw = self._ph_kwargs(mf, mc)
+
+            def compute(x, tv=None):
+                plan.traces += 1   # python side effect: runs per (re)trace
+                return callee(x, tv, **kw)
+
+            if truncated:
+                return jax.jit(lambda im, tv: compute(im, tv))
+            return jax.jit(lambda im: compute(im))
+
+        return self.get_plan(key, build)
+
+    def sharded_plan(self, ctx, shape, dtype, mf: int, mc: int) -> Plan:
+        """shard_map'd batched PH over ``ctx.dp_axes`` (always thresholded:
+        vanilla rounds pass -inf, which is a no-op for float images).
+
+        Per-image work is embarrassingly parallel, so it is pinned inside
+        shard_map — XLA's sharding propagation otherwise replicates the
+        merge-scan carries and emits ~70 TB of all-gathers per batch
+        (EXPERIMENTS.md §Perf iteration PH-1: collective 1407 s -> ~0).
+        """
+        key = ("sharded", ctx, shape, str(dtype), mf, mc,
+               self.config.plan_key())
+
+        def build(plan: Plan):
+            from jax.sharding import PartitionSpec as P
+            kw = self._ph_kwargs(mf, mc)
+            dp = ctx.dp_axes
+            out_specs = Diagram(P(dp, None), P(dp, None), P(dp, None),
+                                P(dp, None), P(dp), P(dp), P(dp))
+
+            def compute(images, tvals):
+                plan.traces += 1
+                return batched_pixhomology(images, tvals, **kw)
+
+            return jax.jit(shard_map_compat(
+                compute, mesh=ctx.mesh,
+                in_specs=(P(dp, None, None), P(dp)),
+                out_specs=out_specs))
+
+        return self.get_plan(key, build)
+
+    # -- capacity regrow ---------------------------------------------------
+
+    def _ceilings(self, n: int) -> tuple[int, int]:
+        cfg = self.config
+        ceil_f = min(cfg.regrow_features_ceiling or n, n)
+        ceil_c = min(cfg.regrow_candidates_ceiling or n, n)
+        return ceil_f, ceil_c
+
+    def initial_capacities(self, n: int) -> tuple[int, int]:
+        """Effective first-attempt capacities for an n-pixel image (clamped
+        to n so equivalent over-sized configs share one plan)."""
+        return min(self.config.max_features, n), \
+            min(self.config.max_candidates, n)
+
+    def grow_capacities(self, mf: int, mc: int, n: int) -> tuple[int, int]:
+        """One regrow step: double both capacities up to their ceilings.
+
+        ``Diagram.overflow`` is a single flag, so both capacities grow
+        together (padding is cheap relative to a second re-dispatch).
+        Returns unchanged values when both ceilings are reached.
+        """
+        ceil_f, ceil_c = self._ceilings(n)
+        return min(mf * self.config.regrow_factor, ceil_f), \
+            min(mc * self.config.regrow_factor, ceil_c)
+
+    def run_with_regrow(self, dispatch: Callable[[int, int], Any],
+                        overflowed: Callable[[Any], bool],
+                        n: int, kind: str,
+                        memo_key: tuple | None = None
+                        ) -> tuple[Any, RegrowStats]:
+        """Shared driver: dispatch, then regrow while overflow persists.
+
+        ``memo_key`` makes grown capacities sticky: a later call for the
+        same (kind, shape, dtype) starts at the largest capacity already
+        discovered instead of re-walking the doubling chain."""
+        cfg = self.config
+        mf, mc = self.initial_capacities(n)
+        if cfg.auto_regrow and memo_key is not None:
+            got = self._grown.get(memo_key)
+            if got:
+                mf = max(mf, min(got[0], n))
+                mc = max(mc, min(got[1], n))
+        attempts = 0
+        out = dispatch(mf, mc)
+        over = overflowed(out)   # one blocking readback per dispatch
+        while over and cfg.auto_regrow and attempts < cfg.max_regrows:
+            nmf, nmc = self.grow_capacities(mf, mc, n)
+            if (nmf, nmc) == (mf, mc):
+                break   # at the ceiling: residual overflow is reported
+            self.regrow_log.append({"kind": kind, "from": (mf, mc),
+                                    "to": (nmf, nmc)})
+            mf, mc = nmf, nmc
+            attempts += 1
+            out = dispatch(mf, mc)
+            over = overflowed(out)
+        if attempts and memo_key is not None:
+            self._grown[memo_key] = (mf, mc)
+        return out, RegrowStats(attempts, mf, mc, bool(over))
+
+    # -- data prep ---------------------------------------------------------
+
+    def cast_input(self, image) -> jnp.ndarray:
+        """Apply the config's dtype policy (None = keep the input dtype)."""
+        x = jnp.asarray(image)
+        if self.config.dtype is not None:
+            x = x.astype(self.config.dtype)
+        return x
+
+    def _auto_threshold(self, image_np: np.ndarray) -> float | None:
+        if self.config.filter_level is FilterLevel.VANILLA:
+            return None
+        from repro.data import astro
+        t, _ = astro.filter_threshold(image_np, self.config.filter_level)
+        return t
+
+    # -- public entry points ----------------------------------------------
+
+    def run(self, image, truncate_value: float | None = None) -> PHResult:
+        """0-dim PH of one 2D image (Algorithm 1) with auto-regrow.
+
+        ``truncate_value`` overrides the config's ``filter_level`` (pass an
+        explicit Variant-2 threshold); with the default ``None`` the
+        threshold is derived from ``config.filter_level``.
+        """
+        x = self.cast_input(image)
+        if x.ndim != 2:
+            raise ValueError(f"expected 2D image, got shape {x.shape}")
+        if truncate_value is None:
+            truncate_value = self._auto_threshold(np.asarray(image))
+        n = x.size
+        truncated = truncate_value is not None
+        shape, dtype = x.shape, x.dtype
+
+        def dispatch(mf, mc):
+            plan = self._local_plan("single", shape, dtype, mf, mc,
+                                    truncated)
+            if truncated:
+                return plan(x, jnp.asarray(truncate_value,
+                                           threshold_dtype(x.dtype)))
+            return plan(x)
+
+        diag, stats = self.run_with_regrow(
+            dispatch, lambda d: bool(d.overflow), n, "single",
+            memo_key=("single", shape, str(dtype)))
+        return PHResult(diag, self.config.replace(
+            max_features=stats.final_max_features,
+            max_candidates=stats.final_max_candidates), stats,
+            truncate_value)
+
+    def run_batch(self, images, truncate_values=None) -> PHResult:
+        """vmap'd PH over a (B, H, W) batch, regrowing on *any* overflow.
+
+        ``truncate_values``: optional (B,) thresholds; derived per image
+        from ``config.filter_level`` when omitted.
+        """
+        x = self.cast_input(images)
+        if x.ndim != 3:
+            raise ValueError(f"expected (B, H, W) batch, got shape {x.shape}")
+        if truncate_values is None and \
+                self.config.filter_level is not FilterLevel.VANILLA:
+            host = np.asarray(images)
+            truncate_values = np.asarray(
+                [self._auto_threshold(host[i]) for i in range(host.shape[0])],
+                np.float32)
+        truncated = truncate_values is not None
+        if truncated:
+            tvals = jnp.asarray(truncate_values, threshold_dtype(x.dtype))
+        n = x.shape[1] * x.shape[2]
+        shape, dtype = x.shape, x.dtype
+
+        def dispatch(mf, mc):
+            plan = self._local_plan("batched", shape, dtype, mf, mc,
+                                    truncated)
+            if truncated:
+                return plan(x, tvals)
+            return plan(x)
+
+        diag, stats = self.run_with_regrow(
+            dispatch, lambda d: bool(np.any(np.asarray(d.overflow))),
+            n, "batched", memo_key=("batched", shape, str(dtype)))
+        return PHResult(diag, self.config.replace(
+            max_features=stats.final_max_features,
+            max_candidates=stats.final_max_candidates), stats,
+            truncate_values)
+
+    def run_distributed(self, image_ids, *, ctx=None, image_size: int = 512,
+                        strategy: str = "part_LPT",
+                        work_log=None, failure_injector=None,
+                        max_retries: int = 3, verbose: bool = False):
+        """The paper's end-to-end distributed job, engine-owned.
+
+        Subsumes the old ``ExecutorPool`` + ``run_pipeline`` pair: builds a
+        sharded executor over ``ctx`` (default: one data axis over every
+        local device), schedules ``image_ids`` with the Variant-3
+        ``strategy``, applies the config's Variant-2 filter level, records
+        completed work in ``work_log``, and auto-regrows capacities on
+        overflow (grown capacities stick for subsequent rounds).
+
+        Returns :class:`repro.pipeline.driver.PipelineResult`.
+        """
+        from repro.launch.mesh import auto_context
+        from repro.pipeline.driver import run_pipeline
+        from repro.pipeline.executor import ShardedPHExecutor
+        executor = ShardedPHExecutor(self, ctx or auto_context(),
+                                     image_size=image_size)
+        return run_pipeline(executor, image_ids, strategy=strategy,
+                            work_log=work_log,
+                            failure_injector=failure_injector,
+                            max_retries=max_retries, verbose=verbose)

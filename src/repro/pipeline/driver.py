@@ -6,6 +6,11 @@ append-only JSONL work-log so a crashed/restarted run (or an injected
 executor failure) re-schedules only the incomplete images — the Spark
 lineage/checkpoint story.  Changing the executor count between rounds
 re-schedules the remaining work (elastic scaling).
+
+``run_pipeline`` is the engine's distributed workhorse: call it through
+:meth:`repro.ph.PHEngine.run_distributed`.  ``pool`` is any executor with
+``num_executors`` / ``image_size`` / ``load_self`` / ``run_round``
+(normally :class:`repro.pipeline.executor.ShardedPHExecutor`).
 """
 from __future__ import annotations
 
@@ -16,7 +21,6 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.pipeline.executor import ExecutorPool
 from repro.pipeline.scheduler import make_schedule
 
 
@@ -56,7 +60,7 @@ def _summarize(diag, idx: int) -> dict:
     }
 
 
-def run_pipeline(pool: ExecutorPool, image_ids, *, strategy: str = "part_LPT",
+def run_pipeline(pool, image_ids, *, strategy: str = "part_LPT",
                  work_log: str | Path | None = None,
                  failure_injector=None, max_retries: int = 3,
                  verbose: bool = False) -> PipelineResult:
@@ -121,6 +125,6 @@ def run_pipeline(pool: ExecutorPool, image_ids, *, strategy: str = "part_LPT",
     return PipelineResult(done, rounds, failures, time.time() - t0)
 
 
-def _cheap_cost(pool: ExecutorPool, image_id: int) -> float:
+def _cheap_cost(pool, image_id: int) -> float:
     from repro.data.astro import estimate_cost_from_id
     return estimate_cost_from_id(image_id, pool.image_size)

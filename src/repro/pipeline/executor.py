@@ -4,55 +4,43 @@ One SPMD program per round: a (M, H, W) image batch sharded over the data
 axes, vmapped PixHomology per device (the paper's ``process_image`` map).
 Images are *generated/loaded per executor* (Variant 1 ``load_self``): the
 driver passes image ids, each host materializes only its shard.
+
+The compiled sharded program comes from the engine's plan cache
+(:meth:`repro.ph.PHEngine.sharded_plan`); this module only moves data and
+applies the engine's overflow auto-regrow policy round by round.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import Diagram, batched_pixhomology
 from repro.data import astro
-
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.ph.config import PHConfig
+from repro.ph.engine import PHEngine, threshold_dtype
 
 
-def make_sharded_ph(ctx, **kw):
-    """shard_map'd batched PixHomology: per-image work is embarrassingly
-    parallel, so we pin it inside shard_map over the data axes — XLA's
-    sharding propagation otherwise replicates the merge-scan carries and
-    emits ~70 TB of all-gathers per batch (EXPERIMENTS.md §Perf iteration
-    PH-1: collective term 1407 s -> ~0)."""
-    fn = functools.partial(batched_pixhomology, **kw)
-    dp = ctx.dp_axes
-    out_specs = Diagram(P(dp, None), P(dp, None), P(dp, None), P(dp, None),
-                        P(dp), P(dp), P(dp))
-    return shard_map(lambda imgs, t: fn(imgs, t), mesh=ctx.mesh,
-                     in_specs=(P(dp, None, None), P(dp)),
-                     out_specs=out_specs, check_vma=False)
+class ShardedPHExecutor:
+    """Engine-backed executor pool over a device mesh.
 
+    Capacities start at the engine config's values and, with
+    ``auto_regrow`` on, stick at any regrown size for subsequent rounds
+    and runs (the engine's regrow memo: an overflow in round r means
+    round r+1 likely overflows too).
+    """
 
-@dataclasses.dataclass
-class ExecutorPool:
-    ctx: object                     # DistContext
-    image_size: int = 512
-    max_features: int = 8192
-    max_candidates: int = 32768
-    filter_level: str = "filter_std"
-
-    def __post_init__(self):
-        self._fn = jax.jit(make_sharded_ph(
-            self.ctx, max_features=self.max_features,
-            max_candidates=self.max_candidates))
-        self._spec = NamedSharding(self.ctx.mesh,
-                                   P(self.ctx.dp_axes, None, None))
+    def __init__(self, engine: PHEngine, ctx, *, image_size: int = 512):
+        if not isinstance(engine, PHEngine):
+            raise TypeError(f"engine must be a PHEngine, "
+                            f"got {type(engine).__name__}")
+        self.engine = engine
+        self.ctx = ctx
+        self.image_size = image_size
+        self._spec = NamedSharding(ctx.mesh, P(ctx.dp_axes, None, None))
+        self._tspec = NamedSharding(ctx.mesh, P(ctx.dp_axes))
 
     @property
     def num_executors(self) -> int:
@@ -63,19 +51,73 @@ class ExecutorPool:
         host generates shards deterministically from ids; on a real cluster
         each process generates/loads only its addressable shard).  Also
         computes the Variant-2 thresholds and Variant-3 costs."""
+        level = self.engine.config.filter_level
         imgs, thresholds, costs = [], [], {}
         for i in image_ids:
             img = astro.generate_image(i, self.image_size)
-            t, _ = astro.filter_threshold(img, self.filter_level)
+            t, _ = astro.filter_threshold(img, level)
             imgs.append(img)
             thresholds.append(-np.inf if t is None else t)
-            costs[i] = astro.estimate_cost(img)
+            costs[i] = astro.estimate_cost(img, level)
         return np.stack(imgs), np.asarray(thresholds, np.float32), costs
 
     def run_round(self, images: np.ndarray, thresholds: np.ndarray):
         """images: (M, H, W) with M == num_executors (padded by driver)."""
-        batch = jax.device_put(jnp.asarray(images), self._spec)
-        tspec = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes))
-        tvals = jax.device_put(jnp.asarray(thresholds), tspec)
-        with self.ctx.mesh:
-            return jax.tree.map(np.asarray, self._fn(batch, tvals))
+        eng = self.engine
+        batch = jax.device_put(eng.cast_input(images), self._spec)
+        tvals = jax.device_put(
+            jnp.asarray(thresholds, threshold_dtype(batch.dtype)),
+            self._tspec)
+        n = images.shape[1] * images.shape[2]
+
+        def dispatch(mf, mc):
+            plan = eng.sharded_plan(self.ctx, batch.shape, batch.dtype,
+                                    mf, mc)
+            with self.ctx.mesh:
+                return jax.tree.map(np.asarray, plan(batch, tvals))
+
+        diags, _ = eng.run_with_regrow(
+            dispatch, lambda d: bool(np.any(d.overflow)), n, "sharded",
+            memo_key=("sharded", batch.shape, str(batch.dtype)))
+        return diags
+
+
+def make_sharded_ph(ctx, **kw):
+    """Deprecated: use ``PHEngine.sharded_plan`` (plan-cached) instead."""
+    warnings.warn("make_sharded_ph is deprecated; use PHEngine.sharded_plan",
+                  DeprecationWarning, stacklevel=2)
+    engine = PHEngine(PHConfig(
+        max_features=kw.pop("max_features", 256),      # pixhomology's old
+        max_candidates=kw.pop("max_candidates", 4096),  # kwarg defaults
+        auto_regrow=False, **kw))
+    cfg = engine.config
+
+    def fn(imgs, tvals):
+        plan = engine.sharded_plan(ctx, imgs.shape, imgs.dtype,
+                                   cfg.max_features, cfg.max_candidates)
+        return plan(imgs, tvals)
+
+    return fn
+
+
+class ExecutorPool(ShardedPHExecutor):
+    """Deprecated kwargs shim over :class:`ShardedPHExecutor`.
+
+    Kept for one release: builds a private engine from the raw kwargs with
+    auto-regrow off (the pre-engine behavior surfaced overflow as a flag
+    only).  New code constructs a :class:`repro.ph.PHEngine` and calls
+    ``run_distributed`` / ``ShardedPHExecutor`` directly.
+    """
+
+    def __init__(self, ctx, image_size: int = 512,
+                 max_features: int = 8192, max_candidates: int = 32768,
+                 filter_level="filter_std"):
+        warnings.warn(
+            "ExecutorPool(ctx, **kwargs) is deprecated; build a "
+            "repro.ph.PHEngine(PHConfig(...)) and use engine.run_distributed"
+            " (or ShardedPHExecutor) instead",
+            DeprecationWarning, stacklevel=2)
+        engine = PHEngine(PHConfig(
+            max_features=max_features, max_candidates=max_candidates,
+            filter_level=filter_level, auto_regrow=False))
+        super().__init__(engine, ctx, image_size=image_size)

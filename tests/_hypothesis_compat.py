@@ -1,0 +1,78 @@
+"""Graceful fallback when ``hypothesis`` is not installed.
+
+The property-based tests import ``given``/``settings``/``st`` from here.
+With hypothesis available they get the real thing (full strategy sweeps,
+shrinking).  On minimal installs they get a deterministic mini-runner that
+draws a small, seeded sample from the same strategy specs — the suite still
+collects and exercises every property, just with fewer examples.
+
+Only the strategy combinators the suite actually uses are implemented:
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    # Keep the fallback sweeps fast: many properties jit-compile per drawn
+    # shape, so a handful of samples already covers the interesting space.
+    FALLBACK_MAX_EXAMPLES = 8
+
+    class _Strategy:
+        def sample(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def sample(self, rng):
+            return self.seq[int(rng.integers(len(self.seq)))]
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+    st = _St()
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_compat_max_examples", 20),
+                        FALLBACK_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = [s.sample(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # pytest resolves fixtures through __wrapped__'s signature;
+            # the drawn parameters must not look like fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -5,7 +5,7 @@ vs O(K) sequential scan steps); it must be indistinguishable in output.
 """
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import diagram_to_array, persistence_oracle, pixhomology
 

@@ -3,12 +3,13 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import astro
 from repro.distributed.context import single_device_ctx
+from repro.ph import FilterLevel, PHConfig, PHEngine
 from repro.pipeline.driver import FailureInjector, run_pipeline
-from repro.pipeline.executor import ExecutorPool
+from repro.pipeline.executor import ExecutorPool, ShardedPHExecutor
 from repro.pipeline.scheduler import (make_schedule, part_executors,
                                       part_images, part_lpt)
 
@@ -76,8 +77,18 @@ def test_lpt_requires_costs():
 
 @pytest.fixture(scope="module")
 def pool():
-    return ExecutorPool(single_device_ctx(), image_size=128,
-                        max_features=2048, max_candidates=8192)
+    engine = PHEngine(PHConfig(max_features=2048, max_candidates=8192,
+                               filter_level=FilterLevel.STD))
+    return ShardedPHExecutor(engine, single_device_ctx(), image_size=128)
+
+
+def test_executor_pool_shim_is_deprecated_but_works():
+    with pytest.warns(DeprecationWarning):
+        shim = ExecutorPool(single_device_ctx(), image_size=64,
+                            max_features=1024, max_candidates=4096)
+    res = run_pipeline(shim, [0])
+    assert len(res.diagrams) == 1
+    assert not shim.engine.config.auto_regrow   # pre-engine semantics
 
 
 def test_pipeline_completes_and_counts_objects(pool):
