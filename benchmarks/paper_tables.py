@@ -20,16 +20,20 @@ fig11   — DIPHA-style comparison: whole-image-per-executor (ours) vs
 """
 from __future__ import annotations
 
+import json
 import time
 import tracemalloc
+from pathlib import Path
 
 import jax
 import numpy as np
 
 from repro.core import persistence_oracle
 from repro.data import astro
-from repro.ph import PHConfig, PHEngine
+from repro.ph import PHConfig, PHEngine, TileSpec
 from repro.pipeline.scheduler import make_schedule
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
 
 # One engine per distinct config — the plan cache lives as long as the
 # benchmark process, so every same-(shape, config) call reuses a plan.
@@ -45,6 +49,20 @@ def _engine(**kw) -> PHEngine:
     if eng is None:
         eng = ENGINES[cfg] = PHEngine(cfg)
     return eng
+
+
+def print_rows(rows) -> None:
+    """The repo skeleton's ``name,us_per_call,derived`` CSV contract —
+    shared by ``benchmarks/run.py`` and the tiled smoke CLI so the CI
+    artifact and the full-run output can never diverge."""
+    print("name,us_per_call,derived")
+    for r in rows:
+        r = dict(r)
+        name = r.pop("name")
+        t_s = (r.get("pixhomology_s") or r.get("round_makespan_s")
+               or r.get("ours_batch_s") or r.get("value") or 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{t_s * 1e6:.1f},{derived}")
 
 
 def plan_cache_summary() -> dict:
@@ -203,6 +221,65 @@ def perf_merge_impl(rows=None, size=512):
         dt, _ = _timeit(lambda: _run_blocked(engine, img, t))
         rows.append({"name": f"perf/merge_{impl}/size={size}",
                      "pixhomology_s": round(dt, 4)})
+    return rows
+
+
+def tiled_vs_whole(rows=None, size=256, grids=((1, 1), (2, 2), (4, 4)),
+                   out_path=None):
+    """Beyond-paper: halo-tiled PH vs the whole-image path on one image.
+
+    Every grid is bit-identical to the whole-image diagram (asserted); the
+    ``tiled_vs_whole_x`` column is the per-grid wall-time ratio, and the
+    per-tile cost model shows working memory shrinking with the grid — the
+    property that lets one image exceed a device.  Emits ``BENCH_tiled.json``
+    so the perf trajectory accumulates across commits.
+    """
+    import jax.numpy as jnp
+    from repro.core.tiling import per_tile_cost
+
+    if rows is None:
+        rows = []
+    img = astro.generate_image(41, size)
+    whole = _engine(max_features=8192, max_candidates=32768)
+    t_whole, res_whole = _timeit(lambda: _run_blocked(whole, img))
+    want = res_whole.to_array()
+    rows.append({"name": f"tiled/whole/size={size}",
+                 "pixhomology_s": round(t_whole, 4),
+                 "tiled_vs_whole_x": 1.0,
+                 "features": int(res_whole.diagram.count)})
+    bench = [dict(rows[-1], grid=None)]
+    for grid in grids:
+        eng = _engine(max_features=8192,
+                      tile=TileSpec(grid=tuple(grid),
+                                    max_features_per_tile=8192,
+                                    max_candidates_per_tile=32768))
+
+        def run_tiled():
+            res = eng.run_tiled(img)
+            jax.block_until_ready(res.diagram)
+            return res
+
+        dt, res = _timeit(run_tiled)
+        np.testing.assert_array_equal(res.to_array(), want)
+        tr, tc = size // grid[0], size // grid[1]
+        cost = per_tile_cost((tr, tc), jnp.float32,
+                             n_tiles=grid[0] * grid[1],
+                             tile_max_features=min(8192, tr * tc),
+                             tile_max_candidates=min(32768, tr * tc))
+        row = {"name": f"tiled/grid={grid[0]}x{grid[1]}/size={size}",
+               "pixhomology_s": round(dt, 4),
+               "tiled_vs_whole_x": round(dt / t_whole, 3),
+               "per_tile_peak_mb": round(
+                   (cost["phase_a"]["peak_bytes_est"]
+                    + cost["phase_b"]["peak_bytes_est"]) / 1e6, 3),
+               "exact_match": True}
+        rows.append(row)
+        bench.append(dict(row, grid=list(grid)))
+
+    out_path = Path(out_path) if out_path else ARTIFACTS / "BENCH_tiled.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(
+        {"size": size, "rows": bench}, indent=1, default=float))
     return rows
 
 

@@ -22,15 +22,9 @@ def main() -> None:
     paper_tables.fig9_10_scaling(rows=rows)
     paper_tables.fig11_dipha(rows=rows)
     paper_tables.perf_merge_impl(rows=rows)
+    paper_tables.tiled_vs_whole(rows=rows)
 
-    print("name,us_per_call,derived")
-    for r in rows:
-        r = dict(r)
-        name = r.pop("name")
-        t_s = (r.get("pixhomology_s") or r.get("round_makespan_s")
-               or r.get("ours_batch_s") or r.get("value") or 0.0)
-        derived = ";".join(f"{k}={v}" for k, v in r.items())
-        print(f"{name},{t_s * 1e6:.1f},{derived}")
+    paper_tables.print_rows(rows)
 
     # Engine plan-cache summary: every table above shares compiled plans
     # through repro.ph.PHEngine, so traces << calls.

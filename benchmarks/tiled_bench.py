@@ -1,0 +1,34 @@
+"""CLI for the tiled-vs-whole benchmark (CI smoke + ad-hoc runs).
+
+Runs :func:`benchmarks.paper_tables.tiled_vs_whole` at a configurable size
+and writes ``BENCH_tiled.json`` — CI runs this on a small image every push
+and uploads the artifact so the tiled-path perf trajectory accumulates.
+
+  PYTHONPATH=src python -m benchmarks.tiled_bench --size 96 --grids 1x1 2x2 \
+      --out BENCH_tiled.json
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+    from repro.ph.config import parse_grid
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=256)
+    ap.add_argument("--grids", nargs="*", default=["1x1", "2x2", "4x4"],
+                    help="tile grids as RxC (must divide --size)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default artifacts/BENCH_tiled.json)")
+    args = ap.parse_args()
+
+    rows = paper_tables.tiled_vs_whole(
+        size=args.size, grids=[parse_grid(g) for g in args.grids],
+        out_path=args.out)
+    paper_tables.print_rows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,3 +13,8 @@ from repro.core.pixhomology import (  # noqa: F401
     total_order_rank,
 )
 from repro.core.reference import diagram_to_array, persistence_oracle  # noqa: F401
+from repro.core.tiling import (  # noqa: F401
+    TiledDiagram,
+    choose_grid,
+    tiled_pixhomology,
+)

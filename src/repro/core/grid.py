@@ -4,10 +4,26 @@
 reference oracle, the PixHomology candidate generators, and any future
 stencil all shift through here so border semantics (constant fill, one-pixel
 halo) stay bit-identical across layers.
+
+``NEIGHBOR_OFFSETS`` fixes the 8-neighborhood iteration order once: the
+sequential merge sweep, the Boruvka edge builder, the union-find oracle, and
+the tiled seam-edge builder all walk neighbors in this order so their merge
+processing is bit-identical.
+
+``higher_neighbor_basins`` is the shared flat-index gather those call sites
+used to copy-paste: for each pixel in ``x`` it reports, per neighbor slot,
+whether that neighbor is in-bounds and strictly higher under the total
+order, and which basin it belongs to.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+# 8-neighborhood offsets (self excluded), fixed order: every consumer uses
+# the same order so merge processing is bit-identical across layers.
+NEIGHBOR_OFFSETS = [(-1, -1), (-1, 0), (-1, 1),
+                    (0, -1), (0, 1),
+                    (1, -1), (1, 0), (1, 1)]
 
 
 def shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
@@ -21,3 +37,38 @@ def shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
     h, w = x.shape
     padded = jnp.pad(x, 1, constant_values=fill)
     return padded[1 + dr : 1 + dr + h, 1 + dc : 1 + dc + w]
+
+
+def higher_neighbor_basins(x: jnp.ndarray, xrank: jnp.ndarray,
+                           rank_flat: jnp.ndarray, labels_flat: jnp.ndarray,
+                           shape: tuple[int, int],
+                           valid=True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per 8-neighbor of flat pixel ids ``x``: (strictly-higher?, basin).
+
+    ``x``/``xrank`` may be scalars or any matching shape; ``valid`` is an
+    extra mask broadcast against them (lanes with ``valid=False`` report
+    ``ok=False`` everywhere).  Returns ``(ok, basin)`` with a trailing
+    8-slot axis in :data:`NEIGHBOR_OFFSETS` order:
+
+    * ``ok[..., j]``  — neighbor j is inside ``shape`` AND has a strictly
+      larger total-order rank than ``xrank`` (AND ``valid``);
+    * ``basin[..., j]`` — ``labels_flat`` at neighbor j (clamped garbage
+      where ``ok`` is False; always mask with ``ok``).
+
+    This is the single implementation of the gather that the sequential
+    merge sweep, the Boruvka candidate-edge builder, and the tiled seam-edge
+    builder all share — their edge processing must stay bit-identical.
+    """
+    h, w = shape
+    n = h * w
+    xr = x // w
+    xc = x % w
+    oks, basins = [], []
+    for dr, dc in NEIGHBOR_OFFSETS:
+        rr, cc = xr + dr, xc + dc
+        inb = (rr >= 0) & (rr < h) & (cc >= 0) & (cc < w)
+        nid = jnp.clip(rr * w + cc, 0, n - 1)
+        higher = rank_flat[nid] > xrank
+        oks.append(inb & higher & valid)
+        basins.append(labels_flat[nid])
+    return jnp.stack(oks, axis=-1), jnp.stack(basins, axis=-1)

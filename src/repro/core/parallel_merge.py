@@ -22,6 +22,13 @@ chain over its (masked) higher-neighbor basins — a spanning set of the
 clique of basins meeting at that pixel, so all merges at a value-v saddle
 still happen at value v.
 
+The round machinery is factored as :func:`boruvka_forest`, a generic
+elder-rule forest reduction over an abstract (vertex ranks, edge list)
+instance.  ``boruvka_merge`` instantiates it with vertices = pixels (the
+whole-image path); ``repro.core.tiling`` instantiates it with vertices =
+per-tile basin roots and edges = per-tile + boundary-seam edge lists (the
+tiled path's global merge), so both paths share one bit-tested reduction.
+
 Depth: the scan is O(K) sequential steps with O(1) work; Boruvka is
 O(log C) rounds of O(E) parallel work — on a systolic/vector machine depth
 is what matters (EXPERIMENTS.md §Perf PH-2).
@@ -31,35 +38,36 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.pixhomology import NEIGHBOR_OFFSETS
+from repro.core.grid import higher_neighbor_basins
 
 
 def candidate_edges(rank_flat, labels_flat, cand_flat, shape,
                     max_candidates: int):
-    """Top-K candidates -> chained basin edges (K, 7, 3): [rank_x, a, b]."""
+    """Top-K candidates -> chained basin edges (K, 8) flat: [rank_x, a, b]."""
     h, w = shape
     n = h * w
     k = min(max_candidates, n)
     cand_rank = jnp.where(cand_flat, rank_flat, jnp.int32(-1))
     top_ranks, top_pix = jax.lax.top_k(cand_rank, k)
     valid = top_ranks >= 0
+    ok, lbl = higher_neighbor_basins(top_pix, top_ranks, rank_flat,
+                                     labels_flat, shape, valid)  # (K, 8)
+    edge_ok, prev_lbl = chain_clique_edges(ok, lbl)
+    ranks = jnp.broadcast_to(top_ranks[:, None], ok.shape)
+    return (jnp.where(edge_ok, ranks, -1).reshape(-1),
+            jnp.where(edge_ok, lbl, 0).reshape(-1),
+            jnp.where(edge_ok, prev_lbl, 0).reshape(-1))
 
-    xr = top_pix // w
-    xc = top_pix % w
-    lbls = []
-    oks = []
-    for dr, dc in NEIGHBOR_OFFSETS:
-        rr, cc = xr + dr, xc + dc
-        inb = (rr >= 0) & (rr < h) & (cc >= 0) & (cc < w)
-        nid = jnp.clip(rr * w + cc, 0, n - 1)
-        higher = rank_flat[nid] > top_ranks
-        oks.append(inb & higher & valid)
-        lbls.append(labels_flat[nid])
-    ok = jnp.stack(oks, 1)       # (K, 8)
-    lbl = jnp.stack(lbls, 1)     # (K, 8)
 
-    # Chain consecutive valid slots: edge j connects slot j's basin to the
-    # previous valid slot's basin (spanning set of the per-candidate clique).
+def chain_clique_edges(ok: jnp.ndarray, lbl: jnp.ndarray):
+    """Chain consecutive valid neighbor slots into clique-spanning edges.
+
+    ``ok``/``lbl``: (K, 8) from :func:`~repro.core.grid.higher_neighbor_basins`.
+    Edge j connects slot j's basin to the previous valid slot's basin — a
+    spanning set of the per-candidate basin clique, in the fixed
+    NEIGHBOR_OFFSETS order (shared by the whole-image and tiled builders so
+    the edge multiset is identical).  Returns ``(edge_ok, prev_lbl)``.
+    """
     def chain(ok_row, lbl_row):
         def step(prev, xs):
             o, l = xs
@@ -72,28 +80,33 @@ def candidate_edges(rank_flat, labels_flat, cand_flat, shape,
 
     prev_lbl = jax.vmap(chain)(ok, lbl)
     edge_ok = ok & (prev_lbl >= 0) & (prev_lbl != lbl)
-    ranks = jnp.broadcast_to(top_ranks[:, None], ok.shape)
-    return (jnp.where(edge_ok, ranks, -1).reshape(-1),
-            jnp.where(edge_ok, lbl, 0).reshape(-1),
-            jnp.where(edge_ok, prev_lbl, 0).reshape(-1))
+    return edge_ok, prev_lbl
 
 
-def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
-                  max_candidates: int, max_rounds: int = 40):
-    """Parallel replacement for ``pixhomology.merge_components``."""
-    n = image_flat.shape[0]
-    e_rank, e_a, e_b = candidate_edges(rank_flat, labels_flat, cand_flat,
-                                       shape, max_candidates)
+def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
+    """Elder-rule Boruvka forest over an abstract vertex/edge instance.
+
+    ``v_rank``: (V,) int32 birth key per vertex — any strictly increasing
+    assignment under the (birth value, birth index) total order; dead or
+    padded vertices carry -1 and must have no live edges.
+    ``e_rank``: (E,) int32 saddle key per edge — order-isomorphic to the
+    saddle (value, index) total order, EQUAL for edges sharing a saddle
+    pixel; -1 marks padding.
+    ``e_val``/``e_pos``: (E,) death value / position recorded when an edge
+    kills a vertex.  ``e_a``/``e_b``: (E,) endpoint vertex ids.
+
+    Returns ``(dval, dpos)``: per-vertex death value (init -inf of
+    ``e_val.dtype``) and death position (init -1).  Vertices that never meet
+    an older cluster keep the init values.
+    """
+    nv = v_rank.shape[0]
     n_edges = e_rank.shape[0]
-    neg_inf = (-jnp.inf if jnp.issubdtype(image_flat.dtype, jnp.floating)
-               else jnp.iinfo(image_flat.dtype).min)
+    neg_inf = (-jnp.inf if jnp.issubdtype(e_val.dtype, jnp.floating)
+               else jnp.iinfo(e_val.dtype).min)
 
-    # Map candidate rank back to pixel id for death positions.
-    perm = jnp.argsort(rank_flat, stable=True)       # rank -> pixel id
-
-    parent0 = jnp.arange(n, dtype=jnp.int32)
-    dval0 = jnp.full(n, neg_inf, image_flat.dtype)
-    dpos0 = jnp.full(n, -1, jnp.int32)
+    parent0 = jnp.arange(nv, dtype=jnp.int32)
+    dval0 = jnp.full(nv, neg_inf, e_val.dtype)
+    dpos0 = jnp.full(nv, -1, jnp.int32)
 
     def resolve(p):
         def cond(q):
@@ -113,17 +126,17 @@ def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
         key = jnp.where(alive, e_rank, -1)
 
         # Pass 1: per-cluster best saddle rank (scatter-max on both ends).
-        best = jnp.full(n, -1, jnp.int32)
-        best = best.at[jnp.where(alive, ra, n)].max(key, mode="drop")
-        best = best.at[jnp.where(alive, rb, n)].max(key, mode="drop")
+        best = jnp.full(nv, -1, jnp.int32)
+        best = best.at[jnp.where(alive, ra, nv)].max(key, mode="drop")
+        best = best.at[jnp.where(alive, rb, nv)].max(key, mode="drop")
         # Pass 2: per-cluster winning edge index among rank ties.
         eidx = jnp.arange(n_edges, dtype=jnp.int32)
         hit_a = alive & (key == best[ra])
         hit_b = alive & (key == best[rb])
-        win = jnp.full(n, -1, jnp.int32)
-        win = win.at[jnp.where(hit_a, ra, n)].max(
+        win = jnp.full(nv, -1, jnp.int32)
+        win = win.at[jnp.where(hit_a, ra, nv)].max(
             jnp.where(hit_a, eidx, -1), mode="drop")
-        win = win.at[jnp.where(hit_b, rb, n)].max(
+        win = win.at[jnp.where(hit_b, rb, nv)].max(
             jnp.where(hit_b, eidx, -1), mode="drop")
 
         # For each cluster with a best edge: other endpoint + die rule.
@@ -131,15 +144,13 @@ def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
         wi = jnp.clip(win, 0)
         wa = roots[e_a[wi]]
         wb = roots[e_b[wi]]
-        me = jnp.arange(n, dtype=jnp.int32)
+        me = jnp.arange(nv, dtype=jnp.int32)
         other = jnp.where(wa == me, wb, wa)
-        saddle_rank = e_rank[wi]
-        die = has & (rank_flat[other] > rank_flat[me]) & (roots == me)
-        saddle_pix = perm[jnp.clip(saddle_rank, 0)]
+        die = has & (v_rank[other] > v_rank[me]) & (roots == me)
 
         parent = jnp.where(die, other, parent)
-        dval = jnp.where(die, image_flat[saddle_pix], dval)
-        dpos = jnp.where(die, saddle_pix, dpos)
+        dval = jnp.where(die, e_val[wi], dval)
+        dpos = jnp.where(die, e_pos[wi], dpos)
         any_alive = jnp.any(alive)
         return parent, dval, dpos, any_alive
 
@@ -153,6 +164,25 @@ def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
     # Seed round + loop until no alive inter-cluster edges remain.
     state = jax.lax.while_loop(cond, body, state)
     _, dval, dpos, _ = state
+    return dval, dpos
+
+
+def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
+                  max_candidates: int, max_rounds: int = 40):
+    """Parallel replacement for ``pixhomology.merge_components``.
+
+    Whole-image instantiation of :func:`boruvka_forest`: vertices are the n
+    pixels keyed by the global rank (only basin roots carry live edges).
+    """
+    n = image_flat.shape[0]
+    e_rank, e_a, e_b = candidate_edges(rank_flat, labels_flat, cand_flat,
+                                       shape, max_candidates)
+    # Map candidate rank back to pixel id for death values/positions.
+    perm = jnp.argsort(rank_flat, stable=True)       # rank -> pixel id
+    e_pos = perm[jnp.clip(e_rank, 0)]
+    e_val = image_flat[e_pos]
+
+    dval, dpos = boruvka_forest(rank_flat, e_rank, e_val, e_pos, e_a, e_b)
 
     n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
     overflow = n_cand > min(max_candidates, n)

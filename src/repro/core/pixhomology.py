@@ -45,14 +45,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.grid import shift2d
+# NEIGHBOR_OFFSETS is re-exported here for back-compat; it lives in
+# repro.core.grid together with the shared neighbor-gather helpers.
+from repro.core.grid import (  # noqa: F401
+    NEIGHBOR_OFFSETS,
+    higher_neighbor_basins,
+    shift2d,
+)
 from repro.kernels.maxpool import ops as pool_ops
-
-# 8-neighborhood offsets (self excluded), fixed order: the union-find oracle
-# uses the same order so merge processing is bit-identical.
-NEIGHBOR_OFFSETS = [(-1, -1), (-1, 0), (-1, 1),
-                    (0, -1), (0, 1),
-                    (1, -1), (1, 0), (1, 1)]
 
 
 class Diagram(NamedTuple):
@@ -115,17 +115,21 @@ def exact_candidates(rank2d: jnp.ndarray, labels2d: jnp.ndarray) -> jnp.ndarray:
     This is exactly the set of pixels at which the union-find sweep can merge
     two components, so it is complete (no lost deaths) and is a strict subset
     of the paper's step-3 edge set (tighter distillation).
+
+    Labels may exceed the local pixel count (the tiled path passes *global*
+    labels on a halo-padded tile), so the no-neighbor sentinel for ``hi_min``
+    is int32 max rather than ``rank2d.size``.
     """
-    n = rank2d.size
+    no_lbl = jnp.iinfo(jnp.int32).max
     hi_max = jnp.full(rank2d.shape, -1, jnp.int32)
-    hi_min = jnp.full(rank2d.shape, n, jnp.int32)
+    hi_min = jnp.full(rank2d.shape, no_lbl, jnp.int32)
     for dr, dc in NEIGHBOR_OFFSETS:
         nrank = shift2d(rank2d, dr, dc, jnp.int32(-1))
         nlbl = shift2d(labels2d, dr, dc, jnp.int32(-1))
         higher = nrank > rank2d  # border fill -1 is never higher
         hi_max = jnp.where(higher, jnp.maximum(hi_max, nlbl), hi_max)
         hi_min = jnp.where(higher, jnp.minimum(hi_min, nlbl), hi_min)
-    return (hi_max >= 0) & (hi_min < n) & (hi_max != hi_min)
+    return (hi_max >= 0) & (hi_max != hi_min)
 
 
 def paper_candidates(rank2d: jnp.ndarray, comp2d: jnp.ndarray,
@@ -225,19 +229,8 @@ def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
         parent, dval, dpos = carry
         x, xrank = xs
         valid = xrank >= 0
-        xr = x // w
-        xc = x % w
-
-        oks, basins = [], []
-        for dr, dc in NEIGHBOR_OFFSETS:
-            rr, cc = xr + dr, xc + dc
-            inb = (rr >= 0) & (rr < h) & (cc >= 0) & (cc < w)
-            nid = jnp.clip(rr * w + cc, 0, n - 1)
-            higher = rank_flat[nid] > xrank
-            oks.append(inb & higher & valid)
-            basins.append(labels_flat[nid])
-        ok = jnp.stack(oks)            # (8,)
-        basin = jnp.stack(basins)      # (8,)
+        ok, basin = higher_neighbor_basins(x, xrank, rank_flat, labels_flat,
+                                           (h, w), valid)  # (8,) each
 
         start = jnp.where(ok, basin, x)      # x is never a root: safe filler
         roots = _find_vec(parent, start)
@@ -380,18 +373,28 @@ def batched_pixhomology(images: jnp.ndarray, truncate_values=None,
 
 def num_candidates(image: jnp.ndarray,
                    candidate_mode: str = "exact",
-                   truncate_value=None) -> jnp.ndarray:
-    """Count death-point candidates (to size ``max_candidates``)."""
+                   truncate_value=None, *,
+                   use_pallas: bool | None = None,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Count death-point candidates (to size ``max_candidates``).
+
+    ``use_pallas``/``interpret`` follow the same semantics as
+    :func:`pixhomology` (and must match it for the count to size the same
+    dispatch); :meth:`repro.ph.PHEngine.num_candidates` forwards its config
+    automatically.
+    """
     h, w = image.shape
     vals = image.reshape(-1)
     rank = total_order_rank(vals)
-    labels = resolve_labels(steepest_neighbors(image, use_pallas=False))
+    labels = resolve_labels(steepest_neighbors(image, use_pallas=use_pallas,
+                                               interpret=interpret))
     if candidate_mode == "exact":
         cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
     else:
         is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
         comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
-        cand = paper_candidates(rank.reshape(h, w), comp2d, use_pallas=False)
+        cand = paper_candidates(rank.reshape(h, w), comp2d,
+                                use_pallas=use_pallas, interpret=interpret)
     if truncate_value is not None:
         cand = cand & (image >= truncate_value)
     return jnp.sum(cand, dtype=jnp.int32)

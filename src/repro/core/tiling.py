@@ -1,0 +1,581 @@
+"""Tile-decomposed PixHomology: halo-tiled PH with a cross-tile seam merge.
+
+The paper (§5.2) distributes *whole images* across executors, so the largest
+analyzable image is bounded by one worker's memory.  Following the spatial
+decompositions of Bauer-Kerber-Reininghaus (DIPHA) and Dory, this module
+lets one image span a ``(gr, gc)`` grid of halo-padded tiles (and devices)
+while staying **bit-identical** to ``pixhomology`` on the whole image:
+
+1. *Per tile* (steps 1-4, embarrassingly parallel, memory ~ tile size):
+   steepest-ascent pointers under the global (value, flat index) total
+   order — the 1-pixel halo makes every owned pixel's 3x3 window exact;
+   pointer-doubling label resolution *frozen at the halo* (each owned pixel
+   resolves to an in-tile basin root or to a halo pixel it exits through);
+   exact candidate detection and clique-chained saddle edges computed on a
+   per-tile rank that is order-isomorphic to the global total order.
+
+2. *Boundary condensation* (O(boundary), not O(n)): the 1-px ring of every
+   tile is collected into a sorted (pixel -> exit pointer) table; pointer
+   doubling on that table resolves every cross-tile basin chain in O(log)
+   rounds, since a chain can only leave a tile through a ring pixel.
+
+3. *Global seam merge*: per-tile basin roots and saddle-edge lists are
+   concatenated into a compact elder-rule instance and reduced by the same
+   :func:`repro.core.parallel_merge.boruvka_forest` machinery the
+   whole-image Boruvka path uses — O(log C) rounds over basins, not pixels.
+
+Correctness argument (see also ``src/repro/ph/README.md``): the halo makes
+pointers, candidates, and edge chains at owned pixels *pixel-for-pixel equal*
+to the whole-image computation (comparisons use (value, global index), so
+per-tile ranks can substitute for global ranks); the condensed ring table
+reaches the same label fixed point as whole-image pointer doubling; and the
+elder-rule deaths are a graph invariant of the (basin, saddle-edge) multiset,
+which both paths build identically — so diagrams match bit-for-bit,
+including ``p_birth``/``p_death`` in global coordinates.
+
+Capacities are two-level: per-tile (``tile_max_features`` roots +
+``tile_max_candidates`` saddle candidates per tile) and global
+(``max_features`` diagram rows).  Each level reports its own overflow flag
+so :meth:`repro.ph.PHEngine.run_tiled` can regrow exactly the undersized
+level.
+
+Residency: the entry point still takes one host-resident ``(H, W)`` array
+(the image and its padded copy are materialized whole at placement); with
+``shard_ctx`` the tile stacks are sharding-constrained right after the
+split, so all downstream intermediates are tile-resident per device.
+Per-executor tile *loading* (no host ever holding the full image) is the
+next step — the per-tile phases and the compact seam merge already take
+only tiles and O(boundary) tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import NEIGHBOR_OFFSETS, higher_neighbor_basins, shift2d
+from repro.core.parallel_merge import boruvka_forest, chain_clique_edges
+from repro.core.pixhomology import Diagram, exact_candidates
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def _neg_inf(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+class TiledDiagram(NamedTuple):
+    """Whole-image :class:`Diagram` plus the two-level overflow split."""
+
+    diagram: Diagram
+    tile_overflow: jnp.ndarray    # () bool: some tile's F_t/K_t undersized
+    merge_overflow: jnp.ndarray   # () bool: global diagram capacity undersized
+    n_tile_roots: jnp.ndarray     # (T,) int32 roots per tile (capacity sizing)
+    n_tile_cands: jnp.ndarray     # (T,) int32 candidates per tile
+
+
+# ---------------------------------------------------------------------------
+# Grid selection / validation
+# ---------------------------------------------------------------------------
+
+def validate_grid(shape: tuple[int, int], grid: tuple[int, int]) -> None:
+    h, w = shape
+    gr, gc = grid
+    if gr < 1 or gc < 1:
+        raise ValueError(f"tile grid must be >= (1, 1), got {grid}")
+    if h % gr or w % gc:
+        raise ValueError(f"tile grid {grid} does not divide image {shape}; "
+                         f"pick divisors (see choose_grid)")
+
+
+def choose_grid(shape: tuple[int, int], max_tile_pixels: int
+                ) -> tuple[int, int]:
+    """Smallest dividing (gr, gc) whose tiles hold <= ``max_tile_pixels``.
+
+    Prefers fewer tiles, then square-ish tiles.  Always solvable: (h, w)
+    gives 1-pixel tiles.
+    """
+    h, w = shape
+
+    def divisors(x):
+        return [d for d in range(1, x + 1) if x % d == 0]
+
+    best = None
+    for gr in divisors(h):
+        tr = h // gr
+        for gc in divisors(w):
+            tc = w // gc
+            if tr * tc > max_tile_pixels:
+                continue
+            key = (gr * gc, abs(tr - tc), gr, gc)
+            if best is None or key < best[0]:
+                best = (key, (gr, gc))
+            break   # larger gc only shrinks tiles further for this gr
+    if best is None:   # max_tile_pixels < 1; degenerate, one pixel per tile
+        return (h, w)
+    return best[1]
+
+
+def _ring_coords(tr: int, tc: int) -> tuple[np.ndarray, np.ndarray]:
+    """Owned coordinates of the tile's 1-px boundary ring (static)."""
+    rr, cc = np.mgrid[0:tr, 0:tc]
+    mask = (rr == 0) | (rr == tr - 1) | (cc == 0) | (cc == tc - 1)
+    return rr[mask], cc[mask]
+
+
+def _interior_mask(ph: int, pw: int) -> np.ndarray:
+    m = np.zeros((ph, pw), bool)
+    m[1:-1, 1:-1] = True
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Tile extraction
+# ---------------------------------------------------------------------------
+
+def split_tiles(arr2d: jnp.ndarray, grid: tuple[int, int], fill
+                ) -> jnp.ndarray:
+    """(H, W) -> (T, tr+2, tc+2) halo-padded tiles, row-major tile order."""
+    h, w = arr2d.shape
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+    padded = jnp.pad(arr2d, 1, constant_values=fill)
+    oi, oj = jnp.meshgrid(jnp.arange(gr) * tr, jnp.arange(gc) * tc,
+                          indexing="ij")
+    origins = jnp.stack([oi.reshape(-1), oj.reshape(-1)], axis=1)
+    return jax.vmap(lambda o: jax.lax.dynamic_slice(
+        padded, (o[0], o[1]), (tr + 2, tc + 2)))(origins)
+
+
+# ---------------------------------------------------------------------------
+# Phase A (per tile): pointers + in-tile label resolution, frozen at halo
+# ---------------------------------------------------------------------------
+
+def _tile_pointers(pvals: jnp.ndarray, pgidx: jnp.ndarray) -> jnp.ndarray:
+    """Steepest-ascent pointer (local flat id) under the (value, global
+    index) total order; self included.  Halo fill (gidx -1) never wins."""
+    ph, pw = pvals.shape
+    flat = jnp.arange(ph * pw, dtype=jnp.int32).reshape(ph, pw)
+    fill_v = _neg_inf(pvals.dtype)
+    best_v, best_g, best_l = pvals, pgidx, flat
+    for dr, dc in NEIGHBOR_OFFSETS:
+        v = shift2d(pvals, dr, dc, fill_v)
+        g = shift2d(pgidx, dr, dc, jnp.int32(-1))
+        l = shift2d(flat, dr, dc, jnp.int32(-1))
+        better = (v > best_v) | ((v == best_v) & (g > best_g))
+        best_v = jnp.where(better, v, best_v)
+        best_g = jnp.where(better, g, best_g)
+        best_l = jnp.where(better, l, best_l)
+    return best_l
+
+
+def tile_phase_a(pvals: jnp.ndarray, pgidx: jnp.ndarray):
+    """Steps 1-2 on one halo-padded tile.
+
+    Returns ``(ptr_owned, ring_gidx, ring_ptr, min_val, min_gidx)``:
+    per owned pixel the global index of its in-tile basin root *or* of the
+    halo pixel its ascent chain exits through; the boundary-ring slice of
+    the same map (the tile's contribution to the condensation table); and
+    the tile's (value, index)-minimum for the global essential death.
+    """
+    ph, pw = pvals.shape
+    tr, tc = ph - 2, pw - 2
+    interior = jnp.asarray(_interior_mask(ph, pw))
+    flat = jnp.arange(ph * pw, dtype=jnp.int32).reshape(ph, pw)
+
+    ptr_l = _tile_pointers(pvals, pgidx)
+    m0 = jnp.where(interior, ptr_l, flat).reshape(-1)   # halo frozen to self
+
+    def cond(m):
+        return jnp.any(m[m] != m)
+
+    def body(m):
+        return m[m]
+
+    m = jax.lax.while_loop(cond, body, m0)
+    resolved_g = pgidx.reshape(-1)[m].reshape(ph, pw)
+    ptr_owned = resolved_g[1:-1, 1:-1]
+
+    own_vals = pvals[1:-1, 1:-1]
+    own_gidx = pgidx[1:-1, 1:-1]
+    rr, cc = _ring_coords(tr, tc)
+    ring_gidx = own_gidx[rr, cc]
+    ring_ptr = ptr_owned[rr, cc]
+
+    min_val = jnp.min(own_vals)
+    min_gidx = jnp.min(jnp.where(own_vals == min_val, own_gidx,
+                                 jnp.int32(_I32_MAX)))
+    return ptr_owned, ring_gidx, ring_ptr, min_val, min_gidx
+
+
+# ---------------------------------------------------------------------------
+# Boundary condensation: sorted ring table + pointer doubling across tiles
+# ---------------------------------------------------------------------------
+
+def _table_follow(sg: jnp.ndarray, sv: jnp.ndarray, q: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """values[q] where q is in the sorted-key table ``sg``, else q itself."""
+    pos = jnp.clip(jnp.searchsorted(sg, q), 0, sg.shape[0] - 1)
+    return jnp.where(sg[pos] == q, sv[pos], q)
+
+
+def resolve_ring_table(ring_gidx: jnp.ndarray, ring_ptr: jnp.ndarray):
+    """Condensed cross-tile label resolution.
+
+    ``ring_gidx``/``ring_ptr``: (T, R) per-tile boundary rings.  A basin
+    chain can only leave a tile through a halo pixel, which is a ring pixel
+    of the neighboring tile — so pointer doubling on this table alone
+    resolves every cross-tile chain to its basin root, in O(log) rounds of
+    O(boundary) work.  Returns ``(sg, sl)``: sorted ring pixel ids and
+    their final global basin labels.
+    """
+    rg = ring_gidx.reshape(-1)
+    rp = ring_ptr.reshape(-1)
+    order = jnp.argsort(rg)
+    sg = rg[order]
+    sp = rp[order]
+
+    def cond(p):
+        return jnp.any(_table_follow(sg, p, p) != p)
+
+    def body(p):
+        return _table_follow(sg, p, p)
+
+    sl = jax.lax.while_loop(cond, body, sp)
+    return sg, sl
+
+
+# ---------------------------------------------------------------------------
+# Phase B (per tile): global labels, exact candidates, seam/interior edges
+# ---------------------------------------------------------------------------
+
+def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
+                 tile_max_candidates: int, tile_max_features: int,
+                 truncated: bool):
+    """Steps 3-4 on one tile with final global labels.
+
+    Returns per-tile compact pieces of the global merge instance:
+    clique-chained saddle edges (endpoints are global basin-root ids),
+    the top-``tile_max_features`` basin roots, the tile's unfiltered
+    maximum root (for the essential class), and candidate/root counts for
+    overflow detection.
+    """
+    ph, pw = pvals.shape
+    tr, tc = ph - 2, pw - 2
+    n_loc = ph * pw
+    interior = jnp.asarray(_interior_mask(ph, pw))
+    fill_v = _neg_inf(pvals.dtype)
+
+    own_vals = pvals[1:-1, 1:-1]
+    own_gidx = pgidx[1:-1, 1:-1]
+
+    # Final global labels: owned pixels through their exit pointers, halo
+    # pixels straight from the table (they are ring pixels of a neighbor).
+    lbl_owned = _table_follow(sg, sl, ptr_owned)
+    frame_lbl = jnp.where(pgidx >= 0, _table_follow(sg, sl, pgidx), -1)
+    plbl = jnp.where(interior, jnp.pad(lbl_owned, 1, constant_values=-1),
+                     frame_lbl)
+
+    # Per-tile rank, order-isomorphic to the global (value, index) order
+    # (halo fill keys (-inf, -1) sort strictly below every real pixel).
+    order = jnp.lexsort((pgidx.reshape(-1), pvals.reshape(-1)))
+    rank = jnp.zeros(n_loc, jnp.int32).at[order].set(
+        jnp.arange(n_loc, dtype=jnp.int32))
+
+    cand2d = exact_candidates(rank.reshape(ph, pw), plbl) & interior
+    if truncated:
+        cand2d &= pvals >= tv
+    cand_flat = cand2d.reshape(-1)
+    n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
+
+    k = min(tile_max_candidates, tr * tc)
+    cand_rank = jnp.where(cand_flat, rank, jnp.int32(-1))
+    top_ranks, top_loc = jax.lax.top_k(cand_rank, k)
+    valid = top_ranks >= 0
+    ok, lbl = higher_neighbor_basins(top_loc, top_ranks, rank,
+                                     plbl.reshape(-1), (ph, pw), valid)
+    edge_ok, prev_lbl = chain_clique_edges(ok, lbl)          # (k, 8)
+    e_val = jnp.broadcast_to(pvals.reshape(-1)[top_loc][:, None], ok.shape)
+    e_pos = jnp.broadcast_to(pgidx.reshape(-1)[top_loc][:, None], ok.shape)
+    e_a = jnp.where(edge_ok, lbl, 0)
+    e_b = jnp.where(edge_ok, prev_lbl, 0)
+
+    # Basin roots owned by this tile.
+    root_mask = lbl_owned == own_gidx
+    # Unfiltered per-tile maximum root: the global maximum pixel is always a
+    # root, so the reduce over tiles finds the essential class even when a
+    # Variant-2 threshold filters the listed roots.
+    rmax_val = jnp.max(jnp.where(root_mask, own_vals, fill_v))
+    rmax_gidx = jnp.max(jnp.where(root_mask & (own_vals == rmax_val),
+                                  own_gidx, jnp.int32(-1)))
+    if truncated:
+        root_mask &= own_vals >= tv
+    n_roots = jnp.sum(root_mask, dtype=jnp.int32)
+
+    f = min(tile_max_features, tr * tc)
+    own_rank = rank.reshape(ph, pw)[1:-1, 1:-1]
+    root_key = jnp.where(root_mask, own_rank, jnp.int32(-1)).reshape(-1)
+    top_rk, top_ri = jax.lax.top_k(root_key, f)
+    rvalid = top_rk >= 0
+    root_gidx = jnp.where(rvalid, own_gidx.reshape(-1)[top_ri], -1)
+    root_val = jnp.where(rvalid, own_vals.reshape(-1)[top_ri], fill_v)
+
+    return (e_val, e_pos, e_a, e_b, edge_ok,
+            root_val, root_gidx.astype(jnp.int32), rvalid,
+            rmax_val, rmax_gidx, n_roots, n_cand)
+
+
+# ---------------------------------------------------------------------------
+# Global seam merge on the compact (basin, saddle-edge) instance
+# ---------------------------------------------------------------------------
+
+def _slot_lookup(sorted_key, slot_of, q):
+    """(slot, found) of global root ids in the compact root table."""
+    pos = jnp.clip(jnp.searchsorted(sorted_key, q), 0,
+                   sorted_key.shape[0] - 1)
+    found = sorted_key[pos] == q
+    return jnp.where(found, slot_of[pos], -1), found
+
+
+def seam_merge(root_val, root_gidx, root_valid,
+               e_val, e_pos, e_a, e_b, e_valid,
+               rmax_val, rmax_gidx, gmin_val, gmin_gidx,
+               tv, *, truncated: bool, max_features: int, dtype):
+    """Elder-rule reduction of the concatenated per-tile instances.
+
+    Compact vertex set = listed basin roots; edges reference roots by
+    global pixel id and are slotted through a sorted lookup table.  The
+    reduction itself is :func:`repro.core.parallel_merge.boruvka_forest`.
+    Returns ``(birth, death, p_birth, p_death, count, n_unmerged,
+    merge_overflow)``.
+    """
+    rv = root_val.reshape(-1)
+    rg = root_gidx.reshape(-1)
+    ok_r = root_valid.reshape(-1)
+    nv = rv.shape[0]
+    neg_inf = _neg_inf(dtype)
+
+    # Root id -> compact slot (sorted table; invalid slots key to int-max).
+    key_g = jnp.where(ok_r, rg, jnp.int32(_I32_MAX))
+    order_g = jnp.argsort(key_g)
+    sorted_g = key_g[order_g]
+
+    ev = e_val.reshape(-1)
+    ep = e_pos.reshape(-1)
+    sa, fa = _slot_lookup(sorted_g, order_g, e_a.reshape(-1))
+    sb, fb = _slot_lookup(sorted_g, order_g, e_b.reshape(-1))
+    alive = e_valid.reshape(-1) & fa & fb   # missing endpoint => tile overflow
+
+    # Vertex birth keys: rank of (value, global index) among valid roots.
+    vorder = jnp.lexsort((rg, rv, ok_r.astype(jnp.int32)))
+    vrank_raw = jnp.zeros(nv, jnp.int32).at[vorder].set(
+        jnp.arange(nv, dtype=jnp.int32))
+    v_rank = jnp.where(ok_r, vrank_raw, -1)
+
+    # Edge saddle keys: dense rank of (value, global index), EQUAL for edges
+    # sharing a saddle pixel (the Boruvka tie rule depends on it).
+    ne = ev.shape[0]
+    akey = alive.astype(jnp.int32)
+    eorder = jnp.lexsort((ep, ev, akey))
+    s_ak, s_ev, s_ep = akey[eorder], ev[eorder], ep[eorder]
+    new_grp = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (s_ak[1:] != s_ak[:-1]) | (s_ev[1:] != s_ev[:-1])
+        | (s_ep[1:] != s_ep[:-1])])
+    grp = (jnp.cumsum(new_grp.astype(jnp.int32)) - 1)
+    erank_raw = jnp.zeros(ne, jnp.int32).at[eorder].set(grp)
+    e_rank = jnp.where(alive, erank_raw, -1)
+
+    dval, dpos = boruvka_forest(v_rank, e_rank, ev.astype(dtype), ep,
+                                jnp.clip(sa, 0), jnp.clip(sb, 0))
+
+    if truncated:
+        # Survivors that never merged above the threshold die at it
+        # (p_death stays -1, matching the whole-image semantics).
+        undied = ok_r & (dpos < 0)
+        dval = jnp.where(undied, jnp.asarray(tv, dtype), dval)
+
+    # Essential class: the globally maximal root dies at the global minimum.
+    gmax_val = jnp.max(rmax_val)
+    gmax_gidx = jnp.max(jnp.where(rmax_val == gmax_val, rmax_gidx, -1))
+    eslot, efound = _slot_lookup(sorted_g, order_g, gmax_gidx[None])
+    es = jnp.clip(eslot[0], 0)
+    assign = efound[0]
+    dval = dval.at[es].set(jnp.where(assign, jnp.asarray(gmin_val, dtype),
+                                     dval[es]))
+    dpos = dpos.at[es].set(jnp.where(assign, gmin_gidx, dpos[es]))
+
+    # Diagram rows, descending (birth value, birth index).
+    c = jnp.sum(ok_r, dtype=jnp.int32)
+    f = max_features
+    kk = min(f, nv)
+    root_key = jnp.where(ok_r, vrank_raw, jnp.int32(-1))
+    _, top_slot = jax.lax.top_k(root_key, kk)
+    row_valid = jnp.arange(kk) < c
+
+    birth = jnp.full(f, neg_inf, dtype).at[:kk].set(
+        jnp.where(row_valid, rv[top_slot].astype(dtype), neg_inf))
+    death = jnp.full(f, neg_inf, dtype).at[:kk].set(
+        jnp.where(row_valid, dval[top_slot], neg_inf))
+    p_birth = jnp.full(f, -1, jnp.int32).at[:kk].set(
+        jnp.where(row_valid, rg[top_slot], -1))
+    p_death = jnp.full(f, -1, jnp.int32).at[:kk].set(
+        jnp.where(row_valid, dpos[top_slot], -1))
+
+    n_unmerged = jnp.sum(ok_r & (dpos < 0), dtype=jnp.int32)
+    merge_overflow = c > f
+    return (birth, death, p_birth, p_death, jnp.minimum(c, f), n_unmerged,
+            merge_overflow)
+
+
+# ---------------------------------------------------------------------------
+# Full tiled algorithm
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid", "max_features", "tile_max_features",
+                     "tile_max_candidates", "shard_ctx"))
+def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
+                      grid: tuple[int, int],
+                      max_features: int = 8192,
+                      tile_max_features: int = 2048,
+                      tile_max_candidates: int = 8192,
+                      shard_ctx=None) -> TiledDiagram:
+    """0-dim PH of one 2D image via halo-tiled decomposition (bit-identical
+    to ``pixhomology(image, truncate_value, candidate_mode="exact")``).
+
+    ``grid``: (gr, gc) tile grid; must divide the image shape
+    (:func:`choose_grid` picks one from a tile-pixel budget).
+    ``shard_ctx``: optional :class:`repro.distributed.DistContext` — the
+    per-tile phases run under ``shard_map`` with tile rows placed on the
+    mesh's data axes (tile count must divide by the dp size); the compact
+    condensation/seam stages stay replicated (they are O(boundary), not
+    O(pixels)).
+    """
+    if image.ndim != 2:
+        raise ValueError(f"expected 2D image, got shape {image.shape}")
+    h, w = image.shape
+    validate_grid((h, w), grid)
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+    n_tiles = gr * gc
+    truncated = truncate_value is not None
+    tv = (jnp.asarray(truncate_value) if truncated
+          else _neg_inf(jnp.float32))
+
+    gidx2d = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
+    pvals = split_tiles(image, grid, _neg_inf(image.dtype))
+    pgidx = split_tiles(gidx2d, grid, jnp.int32(-1))
+
+    phase_a = jax.vmap(tile_phase_a)
+    phase_b = jax.vmap(
+        functools.partial(tile_phase_b,
+                          tile_max_candidates=tile_max_candidates,
+                          tile_max_features=tile_max_features,
+                          truncated=truncated),
+        in_axes=(0, 0, 0, None, None, None))
+
+    if shard_ctx is not None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.context import shard_map_compat
+        from repro.distributed.sharding import constrain, tile_partition_spec
+
+        tile_p = tile_partition_spec(n_tiles, shard_ctx.mesh,
+                                     shard_ctx.dp_axes)
+        if tile_p != P():   # dp size divides the tile count: shard phases
+            # Pin the tile stacks (the O(n) intermediates) to the tile
+            # placement right after the split, so only the (H, W) input and
+            # its padded copy are ever full-size per device; everything
+            # downstream of here is tile-resident.
+            pvals = constrain(pvals, shard_ctx, (tile_p[0], None, None))
+            pgidx = constrain(pgidx, shard_ctx, (tile_p[0], None, None))
+            def sp(extra):
+                return P(*((tile_p[0],) + (None,) * extra))
+
+            phase_a = shard_map_compat(
+                phase_a, mesh=shard_ctx.mesh,
+                in_specs=(sp(2), sp(2)),
+                out_specs=(sp(2), sp(1), sp(1), sp(0), sp(0)))
+            phase_b = shard_map_compat(
+                phase_b, mesh=shard_ctx.mesh,
+                in_specs=(sp(2), sp(2), sp(2), P(None), P(None), P()),
+                out_specs=(sp(2), sp(2), sp(2), sp(2), sp(2),
+                           sp(1), sp(1), sp(1), sp(0), sp(0), sp(0), sp(0)))
+
+    ptr_owned, ring_gidx, ring_ptr, min_val, min_gidx = phase_a(pvals, pgidx)
+    sg, sl = resolve_ring_table(ring_gidx, ring_ptr)
+
+    gmin_val = jnp.min(min_val)
+    gmin_gidx = jnp.min(jnp.where(min_val == gmin_val, min_gidx,
+                                  jnp.int32(_I32_MAX)))
+
+    (e_val, e_pos, e_a, e_b, e_valid,
+     root_val, root_gidx, root_valid,
+     rmax_val, rmax_gidx, n_roots, n_cand) = phase_b(
+        pvals, pgidx, ptr_owned, sg, sl, tv)
+
+    f_global = min(max_features, h * w)
+    (birth, death, p_birth, p_death, count, n_unmerged,
+     merge_overflow) = seam_merge(
+        root_val, root_gidx, root_valid, e_val, e_pos, e_a, e_b, e_valid,
+        rmax_val, rmax_gidx, gmin_val, gmin_gidx, tv,
+        truncated=truncated, max_features=f_global, dtype=image.dtype)
+
+    tile_overflow = (jnp.any(n_cand > min(tile_max_candidates, tr * tc))
+                     | jnp.any(n_roots > min(tile_max_features, tr * tc)))
+    diagram = Diagram(birth, death, p_birth, p_death, count, n_unmerged,
+                      tile_overflow | merge_overflow)
+    return TiledDiagram(diagram, tile_overflow, merge_overflow,
+                        n_roots, n_cand)
+
+
+# ---------------------------------------------------------------------------
+# Per-tile cost model (dryrun / capacity planning)
+# ---------------------------------------------------------------------------
+
+def per_tile_cost(tile_shape: tuple[int, int], dtype, n_tiles: int,
+                  tile_max_features: int = 2048,
+                  tile_max_candidates: int = 8192) -> dict:
+    """Compile the per-tile phase programs and report their memory footprint.
+
+    This is the dryrun cost model for the tiled plan: everything here scales
+    with the *tile* shape (plus the O(boundary) condensation table), never
+    with the full image area — the property that lets one image exceed a
+    device.
+    """
+    tr, tc = tile_shape
+    pv = jax.ShapeDtypeStruct((tr + 2, tc + 2), dtype)
+    pg = jax.ShapeDtypeStruct((tr + 2, tc + 2), jnp.int32)
+    ring = len(_ring_coords(tr, tc)[0])
+    table = jax.ShapeDtypeStruct((n_tiles * ring,), jnp.int32)
+    ptr = jax.ShapeDtypeStruct((tr, tc), jnp.int32)
+    tv = jax.ShapeDtypeStruct((), jnp.float32)
+
+    out: dict = {"tile_shape": [tr, tc], "ring_pixels": ring,
+                 "table_entries": n_tiles * ring}
+    for name, fn, args in (
+            ("phase_a", jax.jit(tile_phase_a), (pv, pg)),
+            ("phase_b",
+             jax.jit(functools.partial(
+                 tile_phase_b, tile_max_candidates=tile_max_candidates,
+                 tile_max_features=tile_max_features, truncated=True)),
+             (pv, pg, ptr, table, table, tv))):
+        compiled = fn.lower(*args).compile()
+        ma = compiled.memory_analysis()
+        out[name] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+    return out

@@ -202,6 +202,21 @@ def cache_specs(cache_tree, mesh, *, tp="model", dp_axes=("data",)):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def tile_partition_spec(n_tiles: int, mesh, dp_axes=("data",)) -> P:
+    """Tile-axis spec for halo-tiled PH: the leading (row-major) tile axis
+    over the data axes, so consecutive tile rows land on consecutive mesh
+    devices.  Divisibility-guarded like every rule here: replicated (``P()``)
+    when the dp size does not divide the tile count."""
+    if not all(a in mesh.shape for a in dp_axes):
+        return P()
+    size = 1
+    for a in dp_axes:
+        size *= mesh.shape[a]
+    if n_tiles % size == 0 and n_tiles >= size:
+        return P(tuple(dp_axes))
+    return P()
+
+
 def to_named(tree_of_specs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -35,7 +35,23 @@ def main():
     ap.add_argument("--merge-impl", choices=["scan", "boruvka"])
     ap.add_argument("--no-regrow", action="store_true",
                     help="surface overflow instead of auto-regrowing")
+    ap.add_argument("--tile-grid", dest="tile_grid", metavar="RxC",
+                    help="halo-tiled path: fixed tile grid, e.g. 2x2")
+    ap.add_argument("--tile-max-features", dest="tile_max_features",
+                    type=int)
+    ap.add_argument("--tile-max-candidates", dest="tile_max_candidates",
+                    type=int)
+    ap.add_argument("--max-tile-pixels", dest="max_tile_pixels", type=int,
+                    help="route images above this pixel count through the "
+                         "tiled path (also the auto-grid tile budget)")
     args = ap.parse_args()
+    if args.max_tile_pixels is None and (
+            args.tile_grid or args.tile_max_features
+            or args.tile_max_candidates):
+        # An explicit tile flag is a request for the tiled path: lower the
+        # routing bound so this run's images actually take it (the TileSpec
+        # default of 1<<20 px would silently keep small images whole).
+        args.max_tile_pixels = args.size * args.size - 1
 
     config = PHConfig.from_flags(args)
     engine = PHEngine(config)

@@ -6,6 +6,7 @@
     result = engine.run(image)                  # single image, auto-regrow
     batch = engine.run_batch(images)            # vmap'd (B, H, W)
     job = engine.run_distributed(range(64))     # sharded pipeline
+    tiled = engine.run_tiled(huge_image)        # halo-tiled + seam merge
 
 Lower layers (``repro.core``, ``repro.pipeline``) remain importable for
 tests and internals, but applications, examples, launch scripts, and
@@ -17,6 +18,8 @@ from repro.ph.config import (  # noqa: F401
     MERGE_IMPLS,
     FilterLevel,
     PHConfig,
+    TileSpec,
+    parse_grid,
 )
 from repro.ph.engine import (  # noqa: F401
     PHEngine,

@@ -18,6 +18,62 @@ MERGE_IMPLS = ("scan", "boruvka")
 DTYPES = (None, "float32", "float64", "int32", "bfloat16")
 
 
+def parse_grid(value) -> tuple[int, int]:
+    """Parse a tile grid from its CLI form (``"2x4"``) or a pair."""
+    if isinstance(value, str):
+        parts = value.lower().split("x")
+        if len(parts) != 2:
+            raise ValueError(f"grid must look like 'RxC', got {value!r}")
+        return tuple(int(x) for x in parts)
+    return tuple(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """Tile-decomposition policy for oversized images (halo-tiled PH).
+
+    ``grid=None`` lets the engine pick the smallest dividing grid whose
+    tiles hold at most ``max_tile_pixels`` pixels; ``max_tile_pixels`` also
+    doubles as the routing threshold — ``run_distributed``/the pipeline send
+    images larger than it through :meth:`repro.ph.PHEngine.run_tiled`
+    instead of the whole-image path.  Per-tile capacities regrow on tile
+    overflow (ceiling: the tile pixel count); the global diagram capacity
+    (``PHConfig.max_features``) regrows separately on seam-merge overflow.
+    """
+
+    grid: tuple[int, int] | None = None    # (gr, gc); None = auto
+    halo: int = 1                          # only 1 is supported (3x3 stencil)
+    max_features_per_tile: int = 2048
+    max_candidates_per_tile: int = 8192
+    max_tile_pixels: int = 1 << 20         # auto-grid budget + routing bound
+
+    def __post_init__(self):
+        if isinstance(self.grid, list):
+            object.__setattr__(self, "grid", tuple(self.grid))
+        if self.grid is not None:
+            g = self.grid
+            if (len(g) != 2 or not all(isinstance(x, int) and x >= 1
+                                       for x in g)):
+                raise ValueError(f"grid must be (gr, gc) of ints >= 1, "
+                                 f"got {self.grid!r}")
+        if self.halo != 1:
+            raise ValueError(f"only halo=1 is supported (3x3 stencil), "
+                             f"got {self.halo}")
+        for field in ("max_features_per_tile", "max_candidates_per_tile",
+                      "max_tile_pixels"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{field} must be a positive int, got {v!r}")
+
+    def replace(self, **changes) -> "TileSpec":
+        return dataclasses.replace(self, **changes)
+
+    def plan_fields(self) -> tuple:
+        """The fields that affect compiled tiled executables (capacities
+        are keyed separately by the engine, like max_features)."""
+        return (self.grid, self.halo)
+
+
 class FilterLevel(str, enum.Enum):
     """Variant-2 background filtering level (paper Table 1)."""
 
@@ -58,12 +114,19 @@ class PHConfig:
     max_regrows: int = 8
     regrow_features_ceiling: int | None = None
     regrow_candidates_ceiling: int | None = None
+    # Tile decomposition for oversized images (None = whole-image only).
+    tile: TileSpec | None = None
 
     def __post_init__(self):
         if isinstance(self.filter_level, str) and \
                 not isinstance(self.filter_level, FilterLevel):
             object.__setattr__(self, "filter_level",
                                FilterLevel(self.filter_level))
+        if isinstance(self.tile, dict):
+            object.__setattr__(self, "tile", TileSpec(**self.tile))
+        if self.tile is not None and not isinstance(self.tile, TileSpec):
+            raise ValueError(f"tile must be a TileSpec or None, "
+                             f"got {type(self.tile).__name__}")
         if self.candidate_mode not in CANDIDATE_MODES:
             raise ValueError(f"candidate_mode must be one of "
                              f"{CANDIDATE_MODES}, got {self.candidate_mode!r}")
@@ -103,7 +166,8 @@ class PHConfig:
         larger capacities under the same config).
         """
         return (self.candidate_mode, self.merge_impl, self.dtype,
-                self.use_pallas, self.interpret)
+                self.use_pallas, self.interpret,
+                self.tile.plan_fields() if self.tile is not None else None)
 
     # -- construction / serialization -------------------------------------
 
@@ -130,6 +194,19 @@ class PHConfig:
             kw["filter_level"] = FilterLevel(level)
         if getattr(args, "no_regrow", False):
             kw["auto_regrow"] = False
+        tile_kw: dict[str, Any] = {}
+        for attr, field in (("tile_grid", "grid"),
+                            ("tile_max_features", "max_features_per_tile"),
+                            ("tile_max_candidates",
+                             "max_candidates_per_tile"),
+                            ("max_tile_pixels", "max_tile_pixels")):
+            v = getattr(args, attr, None)
+            if v is not None:
+                tile_kw[field] = v
+        if tile_kw.get("grid") is not None:
+            tile_kw["grid"] = parse_grid(tile_kw["grid"])
+        if tile_kw or getattr(args, "tile", False):
+            kw["tile"] = TileSpec(**tile_kw)
         kw.update(overrides)
         return cls(**kw)
 

@@ -29,9 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Diagram, batched_pixhomology, diagram_to_array, \
-    pixhomology
+    num_candidates as core_num_candidates, pixhomology
 from repro.distributed.context import shard_map_compat
-from repro.ph.config import FilterLevel, PHConfig
+from repro.ph.config import FilterLevel, PHConfig, TileSpec
 
 
 def threshold_dtype(image_dtype):
@@ -195,6 +195,32 @@ class PHEngine:
 
         return self.get_plan(key, build)
 
+    def tiled_plan(self, shape, dtype, grid, mf: int, tf: int, tk: int,
+                   truncated: bool, ctx=None) -> Plan:
+        """Halo-tiled PH plan (``repro.core.tiling.tiled_pixhomology``).
+
+        ``mf`` is the global diagram capacity, ``tf``/``tk`` the per-tile
+        root/candidate capacities; ``ctx`` (optional) shards the per-tile
+        phases over the mesh's data axes via ``shard_map``.
+        """
+        from repro.core.tiling import tiled_pixhomology
+        key = ("tiled", ctx, shape, str(dtype), grid, mf, tf, tk, truncated,
+               self.config.plan_key())
+
+        def build(plan: Plan):
+            def compute(x, tv=None):
+                plan.traces += 1
+                return tiled_pixhomology(
+                    x, tv, grid=grid, max_features=mf,
+                    tile_max_features=tf, tile_max_candidates=tk,
+                    shard_ctx=ctx)
+
+            if truncated:
+                return jax.jit(lambda im, tv: compute(im, tv))
+            return jax.jit(lambda im: compute(im))
+
+        return self.get_plan(key, build)
+
     # -- capacity regrow ---------------------------------------------------
 
     def _ceilings(self, n: int) -> tuple[int, int]:
@@ -263,11 +289,14 @@ class PHEngine:
             x = x.astype(self.config.dtype)
         return x
 
-    def _auto_threshold(self, image_np: np.ndarray) -> float | None:
+    def _auto_threshold(self, image) -> float | None:
+        # The host conversion happens only past the VANILLA check: it is a
+        # full device-to-host readback, pure waste when no filter applies.
         if self.config.filter_level is FilterLevel.VANILLA:
             return None
         from repro.data import astro
-        t, _ = astro.filter_threshold(image_np, self.config.filter_level)
+        t, _ = astro.filter_threshold(np.asarray(image),
+                                      self.config.filter_level)
         return t
 
     # -- public entry points ----------------------------------------------
@@ -283,7 +312,7 @@ class PHEngine:
         if x.ndim != 2:
             raise ValueError(f"expected 2D image, got shape {x.shape}")
         if truncate_value is None:
-            truncate_value = self._auto_threshold(np.asarray(image))
+            truncate_value = self._auto_threshold(image)
         n = x.size
         truncated = truncate_value is not None
         shape, dtype = x.shape, x.dtype
@@ -340,6 +369,113 @@ class PHEngine:
             max_candidates=stats.final_max_candidates), stats,
             truncate_values)
 
+    def num_candidates(self, image, truncate_value=None) -> int:
+        """Count death-point candidates under this engine's config (for
+        sizing ``max_candidates`` / ``max_candidates_per_tile`` before a
+        run; forwards the config's candidate mode and backend toggles)."""
+        cfg = self.config
+        x = self.cast_input(image)
+        if truncate_value is None:
+            truncate_value = self._auto_threshold(image)
+        return int(core_num_candidates(
+            x, cfg.candidate_mode, truncate_value,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret))
+
+    def should_tile(self, n_pixels: int) -> bool:
+        """True when the config routes an ``n_pixels`` image through the
+        tiled path (``tile`` configured and the image exceeds its
+        ``max_tile_pixels`` budget)."""
+        t = self.config.tile
+        return t is not None and n_pixels > t.max_tile_pixels
+
+    def run_tiled(self, image, truncate_value=None, *, grid=None,
+                  ctx=None) -> PHResult:
+        """Halo-tiled PH of one (possibly device-exceeding) 2D image.
+
+        Bit-identical to :meth:`run` with ``candidate_mode="exact"`` while
+        keeping per-tile working memory proportional to the tile size.
+        ``grid`` overrides the config's :class:`TileSpec` grid (auto-chosen
+        from ``max_tile_pixels`` when both are None); ``ctx`` places tile
+        rows on the mesh's data axes via ``shard_map``.  Overflow regrows
+        per level: tile capacities toward the tile pixel count on tile
+        overflow, ``max_features`` toward the image pixel count on
+        seam-merge overflow.
+        """
+        from repro.core import tiling
+        cfg = self.config
+        if cfg.candidate_mode != "exact":
+            raise ValueError("run_tiled supports candidate_mode='exact' "
+                             "only (the paper-literal distillation has no "
+                             "tiled equivalence proof)")
+        x = self.cast_input(image)
+        if x.ndim != 2:
+            raise ValueError(f"expected 2D image, got shape {x.shape}")
+        if truncate_value is None:
+            truncate_value = self._auto_threshold(image)
+        spec = cfg.tile if cfg.tile is not None else TileSpec()
+        if grid is None:
+            grid = spec.grid if spec.grid is not None else \
+                tiling.choose_grid(x.shape, spec.max_tile_pixels)
+        grid = tuple(grid)
+        tiling.validate_grid(x.shape, grid)
+        h, w = x.shape
+        n = x.size
+        tile_n = (h // grid[0]) * (w // grid[1])
+        truncated = truncate_value is not None
+        tvj = jnp.asarray(truncate_value, threshold_dtype(x.dtype)) \
+            if truncated else None
+
+        mf = min(cfg.max_features, n)
+        tf = min(spec.max_features_per_tile, tile_n)
+        tk = min(spec.max_candidates_per_tile, tile_n)
+        # Regrow ceilings apply per level: the configured feature ceiling
+        # bounds the global diagram (and per-tile roots), the candidate
+        # ceiling bounds per-tile candidates — each clamped to the pixel
+        # count it can never usefully exceed.
+        ceil_mf, _ = self._ceilings(n)
+        ceil_tf, ceil_tk = self._ceilings(tile_n)
+        memo_key = ("tiled", x.shape, grid, str(x.dtype), ctx)
+        if cfg.auto_regrow:
+            got = self._grown.get(memo_key)
+            if got:
+                mf = max(mf, min(got[0], n))
+                tf = max(tf, min(got[1], tile_n))
+                tk = max(tk, min(got[2], tile_n))
+
+        attempts = 0
+        while True:
+            plan = self.tiled_plan(x.shape, x.dtype, grid, mf, tf, tk,
+                                   truncated, ctx)
+            out = plan(x, tvj) if truncated else plan(x)
+            tile_of = bool(out.tile_overflow)
+            merge_of = bool(out.merge_overflow)
+            if not (tile_of or merge_of) or not cfg.auto_regrow \
+                    or attempts >= cfg.max_regrows:
+                break
+            nmf = min(mf * cfg.regrow_factor, ceil_mf) if merge_of else mf
+            ntf, ntk = tf, tk
+            if tile_of:
+                ntf = min(tf * cfg.regrow_factor, ceil_tf)
+                ntk = min(tk * cfg.regrow_factor, ceil_tk)
+            if (nmf, ntf, ntk) == (mf, tf, tk):
+                break   # at the ceilings: residual overflow is reported
+            self.regrow_log.append({"kind": "tiled",
+                                    "from": (mf, tf, tk),
+                                    "to": (nmf, ntf, ntk)})
+            mf, tf, tk = nmf, ntf, ntk
+            attempts += 1
+        if attempts:
+            self._grown[memo_key] = (mf, tf, tk)
+
+        # final_max_candidates reports the per-tile candidate capacity (the
+        # knob that actually regrows on the tiled path).
+        stats = RegrowStats(attempts, mf, tk, bool(tile_of or merge_of))
+        eff = cfg.replace(
+            max_features=mf,
+            tile=spec.replace(grid=grid, max_features_per_tile=tf,
+                              max_candidates_per_tile=tk))
+        return PHResult(out.diagram, eff, stats, truncate_value)
+
     def run_distributed(self, image_ids, *, ctx=None, image_size: int = 512,
                         strategy: str = "part_LPT",
                         work_log=None, failure_injector=None,
@@ -351,7 +487,9 @@ class PHEngine:
         local device), schedules ``image_ids`` with the Variant-3
         ``strategy``, applies the config's Variant-2 filter level, records
         completed work in ``work_log``, and auto-regrows capacities on
-        overflow (grown capacities stick for subsequent rounds).
+        overflow (grown capacities stick for subsequent rounds).  Images
+        larger than the config's ``TileSpec.max_tile_pixels`` are routed
+        through :meth:`run_tiled`, tiles spanning the mesh.
 
         Returns :class:`repro.pipeline.driver.PipelineResult`.
         """

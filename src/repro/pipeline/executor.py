@@ -62,8 +62,16 @@ class ShardedPHExecutor:
         return np.stack(imgs), np.asarray(thresholds, np.float32), costs
 
     def run_round(self, images: np.ndarray, thresholds: np.ndarray):
-        """images: (M, H, W) with M == num_executors (padded by driver)."""
+        """images: (M, H, W) with M == num_executors (padded by driver).
+
+        Images larger than the engine's ``TileSpec.max_tile_pixels`` budget
+        are transparently routed through the halo-tiled path: instead of one
+        whole image per executor, each image spans the mesh tile-by-tile
+        (the scenario the whole-image design cannot serve).
+        """
         eng = self.engine
+        if eng.should_tile(images.shape[1] * images.shape[2]):
+            return self._run_round_tiled(images, thresholds)
         batch = jax.device_put(eng.cast_input(images), self._spec)
         tvals = jax.device_put(
             jnp.asarray(thresholds, threshold_dtype(batch.dtype)),
@@ -80,6 +88,45 @@ class ShardedPHExecutor:
             dispatch, lambda d: bool(np.any(d.overflow)), n, "sharded",
             memo_key=("sharded", batch.shape, str(batch.dtype)))
         return diags
+
+    def _run_round_tiled(self, images: np.ndarray, thresholds: np.ndarray):
+        """Oversized-image round: one image at a time, tiles spanning the
+        mesh's data axes (regrow and plan caching live in ``run_tiled``)."""
+        from repro.core import Diagram
+        diags = []
+        for i in range(images.shape[0]):
+            # The driver pads short rounds by repeating the last image;
+            # a full tiled run per duplicate would be pure waste, so reuse
+            # the previous result for consecutive identical rows.
+            if diags and thresholds[i] == thresholds[i - 1] \
+                    and np.array_equal(images[i], images[i - 1]):
+                diags.append(diags[-1])
+                continue
+            diags.append(jax.tree.map(
+                np.asarray,
+                self.engine.run_tiled(images[i], float(thresholds[i]),
+                                      ctx=self.ctx).diagram))
+        # Per-image regrow can leave different diagram capacities; pad the
+        # rows to the round maximum before stacking into the (M, F) layout
+        # the driver's summarizer expects.
+        f = max(d.birth.shape[0] for d in diags)
+
+        def padded(d: Diagram) -> Diagram:
+            extra = f - d.birth.shape[0]
+            if extra == 0:
+                return d
+            neg_inf = (-np.inf if np.issubdtype(d.birth.dtype, np.floating)
+                       else np.iinfo(d.birth.dtype).min)
+            return Diagram(
+                np.concatenate([d.birth, np.full(extra, neg_inf,
+                                                 d.birth.dtype)]),
+                np.concatenate([d.death, np.full(extra, neg_inf,
+                                                 d.death.dtype)]),
+                np.concatenate([d.p_birth, np.full(extra, -1, np.int32)]),
+                np.concatenate([d.p_death, np.full(extra, -1, np.int32)]),
+                d.count, d.n_unmerged, d.overflow)
+
+        return jax.tree.map(lambda *xs: np.stack(xs), *map(padded, diags))
 
 
 def make_sharded_ph(ctx, **kw):
