@@ -1,0 +1,132 @@
+"""Streaming-pipeline benchmark: bucketed + prefetched rounds vs serial.
+
+Three dataset mixes, each through ``PHEngine.run_distributed`` with the
+loader thread off (``prefetch0``) and on (``prefetch1``), against the
+serial per-image loop baseline (generate -> run, one image at a time, no
+rounds, no overlap — the pre-streaming pipeline's behavior):
+
+* homogeneous — every image at ``--size``;
+* heterogeneous — sizes cycled from ``--sizes`` (shape-bucketed rounds);
+* tiled_mix — heterogeneous plus ``--oversize`` images above
+  ``max_tile_pixels``, streamed through the halo-tiled tile-provider path.
+
+Each scenario runs twice; the cold pass pays compiles, the warm pass is
+the steady-state number the speedup fields compare (CI trend artifact).
+
+  PYTHONPATH=src python -m benchmarks.pipeline_bench --images 6 \
+      --sizes 64 96 --oversize 128 --out BENCH_pipeline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def _scenarios(images: int, size: int, sizes: list[int], oversize: int):
+    homo = [(i, size) for i in range(images)]
+    hetero = [(i, sizes[i % len(sizes)]) for i in range(images)]
+    tiled = hetero[:-1] + [(images - 1, oversize)]
+    return {"homogeneous": homo, "heterogeneous": hetero,
+            "tiled_mix": tiled}
+
+
+def _serial_loop(engine, images) -> float:
+    """The baseline: one image at a time, synchronous load -> compute."""
+    import jax
+    from repro.data import astro
+    t0 = time.perf_counter()
+    for img_id, s in images:
+        img = astro.generate_image(img_id, s)
+        t, _ = astro.filter_threshold(img, engine.config.filter_level)
+        if engine.should_tile(s * s):
+            res = engine.run_tiled(img, t)
+        else:
+            res = engine.run(img, t)
+        jax.block_until_ready(res.diagram)
+    return time.perf_counter() - t0
+
+
+def _pipeline(engine, images) -> float:
+    t0 = time.perf_counter()
+    engine.run_distributed(images)
+    return time.perf_counter() - t0
+
+
+def run(images: int, size: int, sizes: list[int], oversize: int,
+        out_path: str | None):
+    from benchmarks.paper_tables import ARTIFACTS, print_rows
+    from repro.ph import PHConfig, TileSpec
+
+    tile_bound = max(max(sizes), size)
+    config = PHConfig(
+        max_features=8192, max_candidates=32768,
+        filter_level="filter_std",
+        tile=TileSpec(max_tile_pixels=tile_bound * tile_bound))
+
+    from repro.ph import PHEngine
+    rows = []
+    for name, dataset in _scenarios(images, size, sizes, oversize).items():
+        # One engine per cell, reused across the cold and warm pass: the
+        # cold number pays the compiles, the warm number is steady state.
+        engines = {
+            "serial": PHEngine(config),
+            "prefetch0": PHEngine(config.replace(prefetch_rounds=0)),
+            "prefetch1": PHEngine(config.replace(prefetch_rounds=1)),
+        }
+        fns = {label: ((lambda e=eng: _serial_loop(e, dataset))
+                       if label == "serial"
+                       else (lambda e=eng: _pipeline(e, dataset)))
+               for label, eng in engines.items()}
+        cell = {label: {"cold_s": round(fn(), 4), "warm": []}
+                for label, fn in fns.items()}
+        for _ in range(3):              # interleaved warm reps: less noise
+            for label, fn in fns.items():
+                cell[label]["warm"].append(fn())
+        for label in cell:
+            cell[label]["warm_s"] = round(
+                sorted(cell[label].pop("warm"))[1], 4)
+        warm = {k: v["warm_s"] for k, v in cell.items()}
+        rows.append({
+            "name": f"pipeline/{name}",
+            "value": warm["prefetch1"],
+            "serial_s": warm["serial"],
+            "prefetch0_s": warm["prefetch0"],
+            "prefetch1_s": warm["prefetch1"],
+            "speedup_vs_serial": round(
+                warm["serial"] / max(warm["prefetch1"], 1e-9), 3),
+            "speedup_prefetch": round(
+                warm["prefetch0"] / max(warm["prefetch1"], 1e-9), 3),
+            "cold_prefetch1_s": cell["prefetch1"]["cold_s"],
+        })
+
+    out = Path(out_path) if out_path else ARTIFACTS / "BENCH_pipeline.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "images": images, "size": size, "sizes": sizes,
+        "oversize": oversize, "rows": rows}, indent=1))
+    print_rows(rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--images", type=int, default=8)
+    ap.add_argument("--size", type=int, default=64)
+    ap.add_argument("--sizes", type=int, nargs="+", default=[32, 64, 128],
+                    help="heterogeneous mix, cycled over --images ids "
+                         "(pow2-aligned sizes land exactly on their "
+                         "buckets; ragged sizes additionally pay the "
+                         "pad-to-bucket pixels)")
+    ap.add_argument("--oversize", type=int, default=192,
+                    help="size of the oversized image in tiled_mix (must "
+                         "exceed every --sizes entry)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default artifacts/BENCH_pipeline.json)")
+    args = ap.parse_args()
+    run(args.images, args.size, args.sizes, args.oversize, args.out)
+
+
+if __name__ == "__main__":
+    main()

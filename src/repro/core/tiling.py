@@ -39,18 +39,23 @@ Capacities are two-level: per-tile (``tile_max_features`` roots +
 so :meth:`repro.ph.PHEngine.run_tiled` can regrow exactly the undersized
 level.
 
-Residency: the entry point still takes one host-resident ``(H, W)`` array
-(the image and its padded copy are materialized whole at placement); with
-``shard_ctx`` the tile stacks are sharding-constrained right after the
-split, so all downstream intermediates are tile-resident per device.
-Per-executor tile *loading* (no host ever holding the full image) is the
-next step — the per-tile phases and the compact seam merge already take
-only tiles and O(boundary) tables.
+Residency: :func:`tiled_pixhomology` takes a host-resident ``(H, W)`` array
+(convenient for tests and small images), but the compute core is
+:func:`tiled_pixhomology_stacks`, which takes the halo-padded tile stacks
+directly.  :func:`load_tile_stacks` builds those stacks from a **tile
+provider** (anything with ``shape`` / ``dtype`` / ``halo_tile(t, grid)``,
+e.g. :class:`repro.data.astro.AstroImage`) one tile at a time — each tile
+is placed on device as soon as it is generated, so the host never holds
+more than one halo-padded tile of the image (the streaming pipeline's
+"no host holds a full image" guarantee; Variant-1 ``load_self`` for tiles).
+With ``shard_ctx`` the stacks are sharding-constrained on the mesh's data
+axes, so all downstream intermediates are tile-resident per device.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -150,6 +155,68 @@ def split_tiles(arr2d: jnp.ndarray, grid: tuple[int, int], fill
     origins = jnp.stack([oi.reshape(-1), oj.reshape(-1)], axis=1)
     return jax.vmap(lambda o: jax.lax.dynamic_slice(
         padded, (o[0], o[1]), (tr + 2, tc + 2)))(origins)
+
+
+def halo_gidx_tile(shape: tuple[int, int], grid: tuple[int, int],
+                   t: int) -> np.ndarray:
+    """Global flat-index map of tile ``t``'s halo-padded window, computed
+    arithmetically (O(tile), never touching an (H, W) array); out-of-frame
+    halo pixels are -1, matching ``split_tiles(gidx2d, grid, -1)``."""
+    h, w = shape
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+    r0, c0 = (t // gc) * tr, (t % gc) * tc
+    rows = np.arange(r0 - 1, r0 + tr + 1, dtype=np.int64)[:, None]
+    cols = np.arange(c0 - 1, c0 + tc + 1, dtype=np.int64)[None, :]
+    gidx = rows * w + cols
+    inside = (rows >= 0) & (rows < h) & (cols >= 0) & (cols < w)
+    return np.where(inside, gidx, -1).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedTiles:
+    """Device-resident halo-padded tile stacks of one image.
+
+    Built by :func:`load_tile_stacks` (tile-provider path, O(tile) host
+    residency) and accepted by :func:`tiled_pixhomology_stacks` /
+    :meth:`repro.ph.PHEngine.run_tiled` in place of a host-resident image.
+    """
+
+    pvals: Any                    # (T, tr+2, tc+2) image dtype
+    pgidx: Any                    # (T, tr+2, tc+2) int32 global indices
+    shape: tuple[int, int]        # full-image (H, W)
+    grid: tuple[int, int]         # (gr, gc)
+
+
+def load_tile_stacks(provider, grid: tuple[int, int], *,
+                     ctx=None) -> StagedTiles:
+    """Stage a tile provider's halo-padded tiles on device, one at a time.
+
+    ``provider``: ``shape`` / ``dtype`` / ``halo_tile(t, grid, fill=...)``
+    (e.g. :class:`repro.data.astro.AstroImage`).  Each tile is converted to
+    a device array as soon as it is generated, so peak host residency is a
+    single halo-padded tile regardless of the image size.  With ``ctx`` the
+    stacks are placed on the mesh's data axes (the same tile placement the
+    sharded per-tile phases use).
+    """
+    h, w = provider.shape
+    grid = tuple(grid)
+    validate_grid((h, w), grid)
+    n_tiles = grid[0] * grid[1]
+    fill = _neg_inf(jnp.dtype(provider.dtype)).item()
+    pv = [jnp.asarray(provider.halo_tile(t, grid, fill=fill))
+          for t in range(n_tiles)]
+    pg = [jnp.asarray(halo_gidx_tile((h, w), grid, t))
+          for t in range(n_tiles)]
+    pvals, pgidx = jnp.stack(pv), jnp.stack(pg)
+    if ctx is not None:
+        from repro.distributed.sharding import (constrain,
+                                                tile_partition_spec)
+        tile_p = tile_partition_spec(n_tiles, ctx.mesh, ctx.dp_axes)
+        if tuple(tile_p) != ():
+            pvals = constrain(pvals, ctx, (tile_p[0], None, None))
+            pgidx = constrain(pgidx, ctx, (tile_p[0], None, None))
+    return StagedTiles(pvals, pgidx, (h, w), grid)
 
 
 # ---------------------------------------------------------------------------
@@ -457,21 +524,56 @@ def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
     mesh's data axes (tile count must divide by the dp size); the compact
     condensation/seam stages stay replicated (they are O(boundary), not
     O(pixels)).
+
+    This is the host-resident-image convenience wrapper; the compute core
+    is :func:`tiled_pixhomology_stacks`, fed either by the in-jit
+    ``split_tiles`` below or by :func:`load_tile_stacks` (tile-provider
+    path with O(tile) host residency).
     """
     if image.ndim != 2:
         raise ValueError(f"expected 2D image, got shape {image.shape}")
     h, w = image.shape
     validate_grid((h, w), grid)
-    gr, gc = grid
-    tr, tc = h // gr, w // gc
-    n_tiles = gr * gc
-    truncated = truncate_value is not None
-    tv = (jnp.asarray(truncate_value) if truncated
-          else _neg_inf(jnp.float32))
-
     gidx2d = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
     pvals = split_tiles(image, grid, _neg_inf(image.dtype))
     pgidx = split_tiles(gidx2d, grid, jnp.int32(-1))
+    return tiled_pixhomology_stacks(
+        pvals, pgidx, truncate_value, shape=(h, w), grid=grid,
+        max_features=max_features, tile_max_features=tile_max_features,
+        tile_max_candidates=tile_max_candidates, shard_ctx=shard_ctx)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shape", "grid", "max_features", "tile_max_features",
+                     "tile_max_candidates", "shard_ctx"))
+def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
+                             truncate_value=None, *,
+                             shape: tuple[int, int],
+                             grid: tuple[int, int],
+                             max_features: int = 8192,
+                             tile_max_features: int = 2048,
+                             tile_max_candidates: int = 8192,
+                             shard_ctx=None) -> TiledDiagram:
+    """Halo-tiled PH on pre-staged tile stacks (the streaming entry point).
+
+    ``pvals``/``pgidx``: (T, tr+2, tc+2) halo-padded value / global-index
+    stacks in row-major tile order — exactly what ``split_tiles`` produces
+    from a whole image, or :func:`load_tile_stacks` from a tile provider
+    without any host ever materializing the image.  Semantics otherwise
+    identical to :func:`tiled_pixhomology`.
+    """
+    h, w = shape
+    validate_grid((h, w), grid)
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+    n_tiles = gr * gc
+    if pvals.shape != (n_tiles, tr + 2, tc + 2):
+        raise ValueError(f"tile stack shape {pvals.shape} does not match "
+                         f"image {shape} under grid {grid}")
+    truncated = truncate_value is not None
+    tv = (jnp.asarray(truncate_value) if truncated
+          else _neg_inf(jnp.float32))
 
     phase_a = jax.vmap(tile_phase_a)
     phase_b = jax.vmap(
@@ -526,7 +628,7 @@ def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
      merge_overflow) = seam_merge(
         root_val, root_gidx, root_valid, e_val, e_pos, e_a, e_b, e_valid,
         rmax_val, rmax_gidx, gmin_val, gmin_gidx, tv,
-        truncated=truncated, max_features=f_global, dtype=image.dtype)
+        truncated=truncated, max_features=f_global, dtype=pvals.dtype)
 
     tile_overflow = (jnp.any(n_cand > min(tile_max_candidates, tr * tc))
                      | jnp.any(n_roots > min(tile_max_features, tr * tc)))

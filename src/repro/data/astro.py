@@ -1,4 +1,4 @@
-"""Synthetic astronomical images (paper §6.2).
+"""Synthetic astronomical images (paper §6.2) with windowed loading.
 
 The paper builds its 90-image dataset with astropy/photutils: a zeroed
 array, Gaussian readout noise + sky background, then ~340k Gaussian stars
@@ -11,6 +11,17 @@ Star amplitudes follow a power law (faint objects dominate, as in real
 frames), PSF sigmas ~ U(1, 2.5) px.  Every image is deterministic in
 ``image_id`` (the pipeline's executors re-generate rather than transfer —
 the paper's Variant-1 ``load_self``).
+
+Windowed loading (the streaming-pipeline residency story): the read noise
+is seeded *per row*, so :func:`generate_window` can materialize any
+``(h, w)`` window of an image bit-identically to the corresponding slice
+of :func:`generate_image` while holding only O(h * w) pixels (plus one
+O(size) row buffer) — no host ever renders the frames it does not own.
+(The per-row streams changed every image's noise realization relative to
+the pre-windowing single-stream recipe; work logs and benchmark trend
+lines recorded before that change describe different pixel data.)
+:class:`AstroImage` wraps this as the tile provider the halo-tiled
+distributed path loads through (Variant-1 ``load_self`` for tiles).
 """
 from __future__ import annotations
 
@@ -39,31 +50,59 @@ def star_params(image_id: int, size: int,
     return a, xy, sig
 
 
-def generate_image(image_id: int, size: int = 1024, *,
-                   density: float = DENSITY_PER_KPX2,
-                   sky: float = 100.0, read_noise: float = 5.0,
-                   amp_min: float = 10.0, amp_max: float = 5000.0,
-                   stamp: int = 15) -> np.ndarray:
-    """Deterministic synthetic star field, float32 (size, size)."""
-    rng = np.random.default_rng(np.random.SeedSequence([77, image_id, 0]))
-    img = rng.normal(sky, read_noise, size=(size, size)).astype(np.float32)
+def generate_window(image_id: int, row0: int, col0: int, h: int, w: int,
+                    *, size: int = 1024,
+                    density: float = DENSITY_PER_KPX2,
+                    sky: float = 100.0, read_noise: float = 5.0,
+                    amp_min: float = 10.0, amp_max: float = 5000.0,
+                    stamp: int = 15) -> np.ndarray:
+    """The ``[row0:row0+h, col0:col0+w]`` window of image ``image_id``,
+    bit-identical to the same slice of :func:`generate_image` while only
+    ever materializing the window itself (noise is drawn row by row from a
+    per-row stream; only stars whose stamp intersects the window are
+    rendered, and skipping the rest cannot change any in-window pixel).
+    """
+    if not (0 <= row0 and row0 + h <= size and 0 <= col0
+            and col0 + w <= size and h >= 1 and w >= 1):
+        raise ValueError(f"window [{row0}:{row0 + h}, {col0}:{col0 + w}] "
+                         f"out of bounds for size {size}")
+    img = np.empty((h, w), np.float32)
+    for k in range(h):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([77, image_id, 0, row0 + k]))
+        row = rng.normal(sky, read_noise, size=size).astype(np.float32)
+        img[k] = row[col0:col0 + w]
+
     a, xy, sig = star_params(image_id, size, density=density,
                              amp_min=amp_min, amp_max=amp_max)
-    n_stars = a.shape[0]
-
     half = stamp // 2
     yy, xx = np.mgrid[-half:half + 1, -half:half + 1].astype(np.float32)
-    for i in range(n_stars):
+    iy_all = xy[:, 0].astype(np.int64)
+    ix_all = xy[:, 1].astype(np.int64)
+    hit = ((iy_all + half >= row0) & (iy_all - half < row0 + h)
+           & (ix_all + half >= col0) & (ix_all - half < col0 + w))
+    for i in np.flatnonzero(hit):
         cy, cx = xy[i]
         iy, ix = int(cy), int(cx)
         dy, dx = cy - iy, cx - ix
         g = a[i] * np.exp(-(((yy - dy) ** 2 + (xx - dx) ** 2)
                             / (2.0 * sig[i] ** 2)))
-        y0, y1 = max(0, iy - half), min(size, iy + half + 1)
-        x0, x1 = max(0, ix - half), min(size, ix + half + 1)
+        y0 = max(row0, max(0, iy - half))
+        y1 = min(row0 + h, min(size, iy + half + 1))
+        x0 = max(col0, max(0, ix - half))
+        x1 = min(col0 + w, min(size, ix + half + 1))
+        if y0 >= y1 or x0 >= x1:
+            continue
         gy0, gx0 = y0 - (iy - half), x0 - (ix - half)
-        img[y0:y1, x0:x1] += g[gy0:gy0 + (y1 - y0), gx0:gx0 + (x1 - x0)]
+        img[y0 - row0:y1 - row0, x0 - col0:x1 - col0] += \
+            g[gy0:gy0 + (y1 - y0), gx0:gx0 + (x1 - x0)]
     return img
+
+
+def generate_image(image_id: int, size: int = 1024, **kwargs) -> np.ndarray:
+    """Deterministic synthetic star field, float32 (size, size) — the
+    full-frame special case of :func:`generate_window`."""
+    return generate_window(image_id, 0, 0, size, size, size=size, **kwargs)
 
 
 def estimate_threshold(img: np.ndarray, n_sigma: float = 2.0) -> float:
@@ -121,3 +160,58 @@ def estimate_cost_from_id(image_id: int, size: int) -> float:
     visible = a > 25.0
     return float(np.sum(2 * np.pi * sig[visible] ** 2
                         * np.log(np.maximum(a[visible] / 25.0, 1.0 + 1e-6))))
+
+
+class AstroImage:
+    """Windowed Variant-1 loader for one synthetic frame (a tile provider).
+
+    Nothing is rendered at construction; each :meth:`window` /
+    :meth:`halo_tile` call materializes only the pixels it returns, so an
+    executor that owns a few tiles of an oversized image never holds the
+    frame — the streaming pipeline's residency guarantee.  Satisfies the
+    tile-provider protocol of :func:`repro.core.tiling.load_tile_stacks`
+    (``shape`` / ``dtype`` / ``halo_tile``).
+    """
+
+    dtype = np.float32
+
+    def __init__(self, image_id: int, size: int = 1024, **gen_kwargs):
+        self.image_id = int(image_id)
+        self.size = int(size)
+        self.gen_kwargs = gen_kwargs
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.size, self.size)
+
+    def window(self, row0: int, col0: int, h: int, w: int) -> np.ndarray:
+        return generate_window(self.image_id, row0, col0, h, w,
+                               size=self.size, **self.gen_kwargs)
+
+    def halo_tile(self, t: int, grid: tuple[int, int], *,
+                  fill: float = -np.inf) -> np.ndarray:
+        """Tile ``t`` (row-major) of the ``(gr, gc)`` grid with its 1-pixel
+        halo; halo pixels outside the frame are ``fill`` (matching
+        ``repro.core.tiling.split_tiles``)."""
+        gr, gc = grid
+        th, tw = self.size // gr, self.size // gc
+        r0, c0 = (t // gc) * th, (t % gc) * tw
+        out = np.full((th + 2, tw + 2), fill, np.float32)
+        ry0, ry1 = max(0, r0 - 1), min(self.size, r0 + th + 1)
+        rx0, rx1 = max(0, c0 - 1), min(self.size, c0 + tw + 1)
+        win = self.window(ry0, rx0, ry1 - ry0, rx1 - rx0)
+        out[ry0 - (r0 - 1):ry1 - (r0 - 1),
+            rx0 - (c0 - 1):rx1 - (c0 - 1)] = win
+        return out
+
+    def filter_threshold(self, level, *, sample: int = 256) -> float | None:
+        """Variant-2 threshold estimated on a centered ``sample``-square
+        window (O(sample²) resident, deterministic) — the whole-frame
+        statistic would defeat windowed loading for oversized images."""
+        factor = FILTER_FACTORS[_level_name(level)]
+        if factor is None:
+            return None
+        s = min(self.size, sample)
+        off = (self.size - s) // 2
+        return float(estimate_threshold(self.window(off, off, s, s))
+                     * factor)

@@ -133,6 +133,8 @@ def _run_pixhomology(ctx, shape_name: str) -> dict:
 
     if shape_name.startswith("ph_tiled"):
         return _run_pixhomology_tiled(shape_name)
+    if shape_name.startswith("ph_hetero"):
+        return _run_pixhomology_hetero(ctx, shape_name)
 
     presets = {"ph_batch_1k": (512, 1024, 1024, 16384, 8192),
                "ph_batch_4k": (512, 4096, 4096, 65536, 32768)}
@@ -148,6 +150,44 @@ def _run_pixhomology(ctx, shape_name: str) -> dict:
     out = {"lower_ok": True, "compile_ok": True}
     out.update(_analyze(compiled, None, None))
     out.pop("model_flops", None)
+    return out
+
+
+def _run_pixhomology_hetero(ctx, shape_name: str) -> dict:
+    """Heterogeneous pipeline cost model: one cached sharded plan per shape
+    bucket.  The record shows each bucket's memory footprint and the pad
+    overhead a mixed dataset pays when its shapes round up to pow2 buckets
+    — the knob (`PHConfig.bucket_rounding`) the scheduler trades compile
+    count against padded pixels with."""
+    import jax
+    import jax.numpy as jnp
+    from repro.ph import PHConfig, PHEngine
+    from repro.pipeline.scheduler import bucket_shape
+
+    presets = {"ph_hetero_1k": ((320, 512, 1024), 16384, 8192)}
+    sizes, k, f = presets[shape_name]
+    engine = PHEngine(PHConfig(max_features=f, max_candidates=k,
+                               use_pallas=False, auto_regrow=False))
+    b = ctx.dp_size
+    out: dict = {"lower_ok": True, "compile_ok": True, "buckets": {}}
+    analyzed: dict = {}     # sizes sharing a bucket share one compile
+    for size in sizes:
+        hb, wb = bucket_shape((size, size), "pow2")
+        name = f"{size}->bucket{hb}x{wb}"
+        cell = analyzed.get((hb, wb))
+        if cell is None:
+            plan = engine.sharded_plan(ctx, (b, hb, wb),
+                                       jnp.dtype(jnp.float32), f, k)
+            with ctx.mesh:
+                compiled = plan.fn.lower(
+                    jax.ShapeDtypeStruct((b, hb, wb), jnp.float32),
+                    jax.ShapeDtypeStruct((b,), jnp.float32)).compile()
+            cell = analyzed[(hb, wb)] = _analyze(compiled, None, None)
+        out["buckets"][name] = {
+            "memory": cell["memory"],
+            "pad_overhead": round(hb * wb / (size * size) - 1.0, 4),
+        }
+    out["plan_cache"] = engine.plan_stats()
     return out
 
 
@@ -199,6 +239,7 @@ def sweep(multi_pod_too: bool, archs=None, shapes=None, force=False):
         for mp in meshes:
             todo.append(("pixhomology", shape_name, mp))
     todo.append(("pixhomology", "ph_tiled_1k", False))
+    todo.append(("pixhomology", "ph_hetero_1k", False))
 
     results = []
     for i, (arch, shape_name, mp) in enumerate(todo):

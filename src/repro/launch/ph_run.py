@@ -7,6 +7,12 @@ Variant-3 strategy) scheduling, executor self-loading (Variant 1),
 threshold filtering (Variant 2), work-log fault tolerance, per-image
 persistence diagram summaries.  All PH computation is constructed through
 the :mod:`repro.ph` facade (``PHConfig`` + ``PHEngine``).
+
+Heterogeneous datasets: ``--sizes 256 512 1024`` cycles image sizes over
+``--images`` ids (shape-bucketed rounds, ``--bucket-rounding``); images
+above ``--max-tile-pixels`` stream through the tiled path; the loader
+thread prefetches ``--prefetch-rounds`` rounds ahead (``--no-prefetch``
+serializes load and compute).
 """
 from __future__ import annotations
 
@@ -21,6 +27,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--images", type=int, default=16)
     ap.add_argument("--size", type=int, default=512)
+    ap.add_argument("--sizes", type=int, nargs="*", default=None,
+                    help="heterogeneous dataset: cycle these sizes over "
+                         "the image ids (overrides --size)")
+    ap.add_argument("--bucket-rounding", dest="bucket_rounding",
+                    choices=["exact", "pow2"])
+    ap.add_argument("--prefetch-rounds", dest="prefetch_rounds", type=int)
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="serialize loading and compute (prefetch_rounds=0)")
     ap.add_argument("--strategy", default="part_LPT",
                     choices=["part_executors", "part_images", "part_LPT"])
     ap.add_argument("--filter", default="filter_std",
@@ -51,14 +65,20 @@ def main():
         # An explicit tile flag is a request for the tiled path: lower the
         # routing bound so this run's images actually take it (the TileSpec
         # default of 1<<20 px would silently keep small images whole).
-        args.max_tile_pixels = args.size * args.size - 1
+        top = max(args.sizes) if args.sizes else args.size
+        args.max_tile_pixels = top * top - 1
 
     config = PHConfig.from_flags(args)
     engine = PHEngine(config)
     injector = (FailureInjector(args.inject_failure)
                 if args.inject_failure else None)
+    if args.sizes:
+        images = [(i, args.sizes[i % len(args.sizes)])
+                  for i in range(args.images)]
+    else:
+        images = list(range(args.images))
     res = engine.run_distributed(
-        list(range(args.images)), image_size=args.size,
+        images, image_size=args.size,
         strategy=args.strategy, work_log=args.work_log,
         failure_injector=injector, verbose=True)
     total_objects = sum(d["count"] for d in res.diagrams.values())

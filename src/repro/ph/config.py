@@ -1,8 +1,8 @@
 """Typed, frozen configuration for the PH engine (the single public knob set).
 
 Every capacity, mode string, and backend toggle that used to travel as raw
-kwargs through ``pixhomology`` / ``ExecutorPool`` / ``run_pipeline`` lives
-here exactly once.  ``PHConfig`` is hashable, so it can key compiled-plan
+kwargs through ``pixhomology`` and the pre-engine pipeline entry points
+lives here exactly once.  ``PHConfig`` is hashable, so it can key compiled-plan
 caches directly, and JSON round-trippable, so launch scripts and work logs
 can persist the exact configuration of a run.
 """
@@ -16,6 +16,7 @@ from typing import Any
 CANDIDATE_MODES = ("exact", "paper")
 MERGE_IMPLS = ("scan", "boruvka")
 DTYPES = (None, "float32", "float64", "int32", "bfloat16")
+BUCKET_ROUNDINGS = ("exact", "pow2")
 
 
 def parse_grid(value) -> tuple[int, int]:
@@ -116,6 +117,17 @@ class PHConfig:
     regrow_candidates_ceiling: int | None = None
     # Tile decomposition for oversized images (None = whole-image only).
     tile: TileSpec | None = None
+    # Streaming heterogeneous-batch pipeline knobs.
+    # bucket_rounding: how per-round shape buckets are formed from a mixed
+    # dataset — "pow2" pads each dim up to the next power of two (few
+    # compiled plans, images padded with -inf below the Variant-2
+    # threshold), "exact" gives every distinct shape its own bucket (no
+    # padding; what VANILLA rounds always use, since padding is only exact
+    # under a finite threshold).
+    bucket_rounding: str = "pow2"
+    # prefetch_rounds: rounds the driver's background loader may stage
+    # ahead of the computing round (0 = fully serial load->compute).
+    prefetch_rounds: int = 1
 
     def __post_init__(self):
         if isinstance(self.filter_level, str) and \
@@ -136,6 +148,14 @@ class PHConfig:
         if self.dtype not in DTYPES:
             raise ValueError(f"dtype must be one of {DTYPES}, "
                              f"got {self.dtype!r}")
+        if self.bucket_rounding not in BUCKET_ROUNDINGS:
+            raise ValueError(f"bucket_rounding must be one of "
+                             f"{BUCKET_ROUNDINGS}, "
+                             f"got {self.bucket_rounding!r}")
+        if not isinstance(self.prefetch_rounds, int) or \
+                self.prefetch_rounds < 0:
+            raise ValueError(f"prefetch_rounds must be an int >= 0, "
+                             f"got {self.prefetch_rounds!r}")
         for field in ("max_features", "max_candidates", "regrow_factor"):
             v = getattr(self, field)
             if not isinstance(v, int) or v < 1:
@@ -159,14 +179,16 @@ class PHConfig:
     def plan_key(self) -> tuple:
         """The config fields that affect *compiled executables*.
 
-        Regrow policy and filter level are host-side decisions and are
-        deliberately excluded (plan caches are per-:class:`PHEngine`, so
-        share one engine to reuse plans across those knobs).  Capacities
-        are passed separately by the engine (regrow re-dispatches at
-        larger capacities under the same config).
+        Regrow policy, filter level, and ``prefetch_rounds`` are host-side
+        decisions and are deliberately excluded (plan caches are
+        per-:class:`PHEngine`, so share one engine to reuse plans across
+        those knobs).  ``bucket_rounding`` is included — it decides which
+        padded batch shapes get compiled.  Capacities are passed separately
+        by the engine (regrow re-dispatches at larger capacities under the
+        same config).
         """
         return (self.candidate_mode, self.merge_impl, self.dtype,
-                self.use_pallas, self.interpret,
+                self.use_pallas, self.interpret, self.bucket_rounding,
                 self.tile.plan_fields() if self.tile is not None else None)
 
     # -- construction / serialization -------------------------------------
@@ -178,13 +200,15 @@ class PHConfig:
         Recognized attributes (all optional): ``max_features``,
         ``max_candidates``, ``candidate_mode``, ``merge_impl``, ``filter``
         or ``filter_level``, ``dtype``, ``use_pallas``, ``interpret``,
-        ``no_regrow``/``auto_regrow``, ``max_regrows``.
+        ``no_regrow``/``auto_regrow``, ``max_regrows``,
+        ``bucket_rounding``, ``prefetch_rounds``/``no_prefetch``.
         """
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
                      "merge_impl", "dtype", "use_pallas", "interpret",
                      "max_regrows", "auto_regrow", "regrow_factor",
-                     "regrow_features_ceiling", "regrow_candidates_ceiling"):
+                     "regrow_features_ceiling", "regrow_candidates_ceiling",
+                     "bucket_rounding", "prefetch_rounds"):
             v = getattr(args, name, None)
             if v is not None:
                 kw[name] = v
@@ -194,6 +218,8 @@ class PHConfig:
             kw["filter_level"] = FilterLevel(level)
         if getattr(args, "no_regrow", False):
             kw["auto_regrow"] = False
+        if getattr(args, "no_prefetch", False):
+            kw["prefetch_rounds"] = 0
         tile_kw: dict[str, Any] = {}
         for attr, field in (("tile_grid", "grid"),
                             ("tile_max_features", "max_features_per_tile"),

@@ -13,15 +13,17 @@ The engine owns three things the call sites used to re-implement:
   configurable ceiling (default: the image pixel count, at which overflow
   is impossible), with per-call :class:`RegrowStats`;
 
-* the **distributed pipeline** — ``run_distributed`` subsumes the old
-  ``ExecutorPool`` + ``run_pipeline`` pair: scheduler strategy, work-log
-  fault tolerance, and failure injection all hang off the engine.
+* the **distributed pipeline** — ``run_distributed`` owns the end-to-end
+  job: shape-bucketed scheduling of heterogeneous datasets, prefetch
+  overlap, work-log fault tolerance, and failure injection all hang off
+  the engine.
 
 See ``src/repro/ph/README.md`` for the cache-keying and regrow policy.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable
 
 import jax
@@ -186,6 +188,13 @@ class PHEngine:
 
             def compute(images, tvals):
                 plan.traces += 1
+                if images.shape[0] == 1:
+                    # Per-device batch of one (the pipeline's M == dp_size
+                    # rounds): vmap lowers the merge scan ~2.5x worse than
+                    # the single-image program, so bypass it.
+                    diag = pixhomology(images[0], tvals[0], **kw)
+                    return jax.tree.map(lambda x: jnp.expand_dims(x, 0),
+                                        diag)
                 return batched_pixhomology(images, tvals, **kw)
 
             return jax.jit(shard_map_compat(
@@ -218,6 +227,29 @@ class PHEngine:
             if truncated:
                 return jax.jit(lambda im, tv: compute(im, tv))
             return jax.jit(lambda im: compute(im))
+
+        return self.get_plan(key, build)
+
+    def tiled_stacks_plan(self, shape, dtype, grid, mf: int, tf: int,
+                          tk: int, truncated: bool, ctx=None) -> Plan:
+        """Tiled PH plan over pre-staged tile stacks
+        (``repro.core.tiling.tiled_pixhomology_stacks``) — the streaming
+        path where no host-resident image exists."""
+        from repro.core.tiling import tiled_pixhomology_stacks
+        key = ("tiled_stacks", ctx, shape, str(dtype), grid, mf, tf, tk,
+               truncated, self.config.plan_key())
+
+        def build(plan: Plan):
+            def compute(pv, pg, tv=None):
+                plan.traces += 1
+                return tiled_pixhomology_stacks(
+                    pv, pg, tv, shape=shape, grid=grid, max_features=mf,
+                    tile_max_features=tf, tile_max_candidates=tk,
+                    shard_ctx=ctx)
+
+            if truncated:
+                return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))
+            return jax.jit(lambda pv, pg: compute(pv, pg))
 
         return self.get_plan(key, build)
 
@@ -388,9 +420,58 @@ class PHEngine:
         t = self.config.tile
         return t is not None and n_pixels > t.max_tile_pixels
 
+    def provider_threshold(self, provider):
+        """Variant-2 threshold for a tile provider, consistent across
+        every streaming entry point: the provider's estimate with its
+        sample budget tied to the tile budget (O(tile) residency), fixed
+        by this engine's config.  ``None`` under VANILLA."""
+        if self.config.filter_level is FilterLevel.VANILLA:
+            return None
+        if not hasattr(provider, "filter_threshold"):
+            raise ValueError(
+                f"filter_level={self.config.filter_level} needs a "
+                f"threshold, but the tile provider has no "
+                f"filter_threshold(); pass truncate_value")
+        spec = self.config.tile if self.config.tile is not None \
+            else TileSpec()
+        try:
+            return provider.filter_threshold(
+                self.config.filter_level,
+                sample=math.isqrt(spec.max_tile_pixels))
+        except TypeError:   # provider without a sample knob
+            return provider.filter_threshold(self.config.filter_level)
+
+    def stage_tiles(self, provider, *, grid=None, ctx=None):
+        """Stage a tile provider's halo-padded tiles on device (O(tile)
+        host residency), choosing the grid from the config's
+        :class:`TileSpec` when not given.  The returned
+        ``repro.core.tiling.StagedTiles`` feeds :meth:`run_tiled` — this
+        is the half the pipeline's prefetch thread runs ahead of time.
+        """
+        from repro.core import tiling
+        spec = self.config.tile if self.config.tile is not None \
+            else TileSpec()
+        if grid is None:
+            grid = spec.grid if spec.grid is not None else \
+                tiling.choose_grid(tuple(provider.shape),
+                                   spec.max_tile_pixels)
+        return tiling.load_tile_stacks(provider, tuple(grid), ctx=ctx)
+
     def run_tiled(self, image, truncate_value=None, *, grid=None,
                   ctx=None) -> PHResult:
         """Halo-tiled PH of one (possibly device-exceeding) 2D image.
+
+        ``image`` is one of
+
+        * a host-resident 2D array (convenience path),
+        * a **tile provider** (``shape`` / ``dtype`` /
+          ``halo_tile(t, grid, fill=...)``, e.g.
+          :class:`repro.data.astro.AstroImage`) — tiles are generated and
+          placed on device one at a time, so no host ever materializes the
+          image (Variant-1 ``load_self`` for tiles), or
+        * a ``repro.core.tiling.StagedTiles`` already staged by
+          :meth:`stage_tiles` (the pipeline's prefetch path; pass the
+          threshold explicitly, there is no image to derive it from).
 
         Bit-identical to :meth:`run` with ``candidate_mode="exact"`` while
         keeping per-tile working memory proportional to the tile size.
@@ -407,22 +488,41 @@ class PHEngine:
             raise ValueError("run_tiled supports candidate_mode='exact' "
                              "only (the paper-literal distillation has no "
                              "tiled equivalence proof)")
-        x = self.cast_input(image)
-        if x.ndim != 2:
-            raise ValueError(f"expected 2D image, got shape {x.shape}")
-        if truncate_value is None:
-            truncate_value = self._auto_threshold(image)
+        staged = image if isinstance(image, tiling.StagedTiles) else None
+        provider = None
+        if staged is None and hasattr(image, "halo_tile"):
+            provider = image
+            if truncate_value is None:
+                truncate_value = self.provider_threshold(provider)
+            staged = self.stage_tiles(provider, grid=grid, ctx=ctx)
         spec = cfg.tile if cfg.tile is not None else TileSpec()
-        if grid is None:
-            grid = spec.grid if spec.grid is not None else \
-                tiling.choose_grid(x.shape, spec.max_tile_pixels)
+        if staged is not None:
+            if cfg.dtype is not None:       # apply the config dtype policy
+                staged = dataclasses.replace(
+                    staged, pvals=jnp.asarray(staged.pvals).astype(cfg.dtype))
+            if grid is not None and tuple(grid) != tuple(staged.grid):
+                raise ValueError(f"grid={tuple(grid)} does not match the "
+                                 f"staged tiles' grid {staged.grid}")
+            shape, grid = staged.shape, staged.grid
+            dtype = jnp.asarray(staged.pvals).dtype
+            x = None
+        else:
+            x = self.cast_input(image)
+            if x.ndim != 2:
+                raise ValueError(f"expected 2D image, got shape {x.shape}")
+            if truncate_value is None:
+                truncate_value = self._auto_threshold(image)
+            if grid is None:
+                grid = spec.grid if spec.grid is not None else \
+                    tiling.choose_grid(x.shape, spec.max_tile_pixels)
+            shape, dtype = x.shape, x.dtype
         grid = tuple(grid)
-        tiling.validate_grid(x.shape, grid)
-        h, w = x.shape
-        n = x.size
+        tiling.validate_grid(shape, grid)
+        h, w = shape
+        n = h * w
         tile_n = (h // grid[0]) * (w // grid[1])
         truncated = truncate_value is not None
-        tvj = jnp.asarray(truncate_value, threshold_dtype(x.dtype)) \
+        tvj = jnp.asarray(truncate_value, threshold_dtype(dtype)) \
             if truncated else None
 
         mf = min(cfg.max_features, n)
@@ -434,7 +534,7 @@ class PHEngine:
         # count it can never usefully exceed.
         ceil_mf, _ = self._ceilings(n)
         ceil_tf, ceil_tk = self._ceilings(tile_n)
-        memo_key = ("tiled", x.shape, grid, str(x.dtype), ctx)
+        memo_key = ("tiled", tuple(shape), grid, str(dtype), ctx)
         if cfg.auto_regrow:
             got = self._grown.get(memo_key)
             if got:
@@ -444,9 +544,15 @@ class PHEngine:
 
         attempts = 0
         while True:
-            plan = self.tiled_plan(x.shape, x.dtype, grid, mf, tf, tk,
-                                   truncated, ctx)
-            out = plan(x, tvj) if truncated else plan(x)
+            if staged is not None:
+                plan = self.tiled_stacks_plan(tuple(shape), dtype, grid,
+                                              mf, tf, tk, truncated, ctx)
+                out = plan(staged.pvals, staged.pgidx, tvj) if truncated \
+                    else plan(staged.pvals, staged.pgidx)
+            else:
+                plan = self.tiled_plan(shape, dtype, grid, mf, tf, tk,
+                                       truncated, ctx)
+                out = plan(x, tvj) if truncated else plan(x)
             tile_of = bool(out.tile_overflow)
             merge_of = bool(out.merge_overflow)
             if not (tile_of or merge_of) or not cfg.auto_regrow \
@@ -476,20 +582,30 @@ class PHEngine:
                               max_candidates_per_tile=tk))
         return PHResult(out.diagram, eff, stats, truncate_value)
 
-    def run_distributed(self, image_ids, *, ctx=None, image_size: int = 512,
+    def run_distributed(self, images, *, ctx=None, image_size: int = 512,
                         strategy: str = "part_LPT",
                         work_log=None, failure_injector=None,
                         max_retries: int = 3, verbose: bool = False):
         """The paper's end-to-end distributed job, engine-owned.
 
-        Subsumes the old ``ExecutorPool`` + ``run_pipeline`` pair: builds a
-        sharded executor over ``ctx`` (default: one data axis over every
-        local device), schedules ``image_ids`` with the Variant-3
-        ``strategy``, applies the config's Variant-2 filter level, records
-        completed work in ``work_log``, and auto-regrows capacities on
-        overflow (grown capacities stick for subsequent rounds).  Images
-        larger than the config's ``TileSpec.max_tile_pixels`` are routed
-        through :meth:`run_tiled`, tiles spanning the mesh.
+        Builds a sharded executor over ``ctx`` (default: one data axis over
+        every local device), schedules ``images`` with the Variant-3
+        ``strategy`` into shape-bucketed rounds, applies the config's
+        Variant-2 filter level, records completed work in ``work_log``,
+        and auto-regrows capacities on overflow (grown capacities stick
+        for subsequent rounds).
+
+        ``images``: a heterogeneous dataset — each element is an image id
+        (``int``, at ``image_size``), an ``(id, size)`` / ``(id, (H, W))``
+        pair, or a :class:`repro.pipeline.scheduler.ImageMeta` (the
+        synthetic astro loader renders square frames only; rectangular
+        specs are rejected at schedule time).  Same-shape
+        images share padded shape buckets (one cached sharded plan per
+        bucket); images larger than the config's
+        ``TileSpec.max_tile_pixels`` schedule as tile-grid rounds through
+        :meth:`run_tiled`, loaded tile-by-tile so no host materializes
+        them; the driver's loader thread stages round r+1 while round r
+        computes (``config.prefetch_rounds``).
 
         Returns :class:`repro.pipeline.driver.PipelineResult`.
         """
@@ -498,7 +614,7 @@ class PHEngine:
         from repro.pipeline.executor import ShardedPHExecutor
         executor = ShardedPHExecutor(self, ctx or auto_context(),
                                      image_size=image_size)
-        return run_pipeline(executor, image_ids, strategy=strategy,
+        return run_pipeline(executor, images, strategy=strategy,
                             work_log=work_log,
                             failure_injector=failure_injector,
                             max_retries=max_retries, verbose=verbose)

@@ -1,27 +1,38 @@
-"""Pipeline driver: scheduling rounds, work-log fault tolerance, elasticity.
+"""Pipeline driver: bucketed rounds, prefetch overlap, work-log tolerance.
 
-Spark-equivalents (paper §4.2, §5.2): the driver only moves image *ids*
-(negligible traffic, paper Variant 1); completed work is recorded in an
-append-only JSONL work-log so a crashed/restarted run (or an injected
+Spark-equivalents (paper §4.2, §5.2): the driver only moves image *ids and
+shapes* (negligible traffic, paper Variant 1); completed work is recorded
+in an append-only JSONL work-log so a crashed/restarted run (or an injected
 executor failure) re-schedules only the incomplete images — the Spark
 lineage/checkpoint story.  Changing the executor count between rounds
 re-schedules the remaining work (elastic scaling).
 
+Streaming heterogeneous batches: the schedule is shape-bucketed
+(:func:`repro.pipeline.scheduler.make_bucketed_schedule` — one padded
+bucket shape per round, oversized images as tile-grid rounds), and a
+background loader thread stages round r+1's shards on device while round r
+computes (double buffering; ``PHConfig.prefetch_rounds``).  Failures keep
+their semantics: a staged-but-unconsumed round is simply discarded and its
+images re-scheduled from the work log.
+
 ``run_pipeline`` is the engine's distributed workhorse: call it through
 :meth:`repro.ph.PHEngine.run_distributed`.  ``pool`` is any executor with
-``num_executors`` / ``image_size`` / ``load_self`` / ``run_round``
-(normally :class:`repro.pipeline.executor.ShardedPHExecutor`).
+``num_executors`` / ``estimate_costs`` / ``load_round`` / ``run_staged``
+plus the scheduling knobs ``bucket_rounding`` / ``pad_ok`` /
+``prefetch_rounds`` / ``max_tile_pixels`` (normally
+:class:`repro.pipeline.executor.ShardedPHExecutor`).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import time
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 
 import numpy as np
 
-from repro.pipeline.scheduler import make_schedule
+from repro.pipeline.scheduler import make_bucketed_schedule, normalize_images
 
 
 @dataclasses.dataclass
@@ -46,25 +57,27 @@ class FailureInjector:
                                f"{round_idx}")
 
 
-def _summarize(diag, idx: int) -> dict:
-    count = int(diag.count[idx])
+def _summarize(diag) -> dict:
+    count = int(diag.count)
     return {
         "count": count,
-        "overflow": bool(diag.overflow[idx]),
-        "top_births": np.asarray(diag.birth[idx][:5], np.float64).tolist(),
-        "top_deaths": np.asarray(diag.death[idx][:5], np.float64).tolist(),
+        "overflow": bool(diag.overflow),
+        "top_births": np.asarray(diag.birth[:5], np.float64).tolist(),
+        "top_deaths": np.asarray(diag.death[:5], np.float64).tolist(),
         "persistence_sum": float(np.sum(
-            np.clip(np.asarray(diag.birth[idx][:count], np.float64)
-                    - np.asarray(diag.death[idx][:count], np.float64),
+            np.clip(np.asarray(diag.birth[:count], np.float64)
+                    - np.asarray(diag.death[:count], np.float64),
                     0, None))),
     }
 
 
-def run_pipeline(pool, image_ids, *, strategy: str = "part_LPT",
+def run_pipeline(pool, images, *, strategy: str = "part_LPT",
                  work_log: str | Path | None = None,
                  failure_injector=None, max_retries: int = 3,
                  verbose: bool = False) -> PipelineResult:
     t0 = time.time()
+    metas = normalize_images(images,
+                             default_size=getattr(pool, "image_size", 512))
     log_path = Path(work_log) if work_log else None
     done: dict[int, dict] = {}
 
@@ -74,33 +87,55 @@ def run_pipeline(pool, image_ids, *, strategy: str = "part_LPT",
             rec = json.loads(line)
             done[rec["image_id"]] = rec["summary"]
 
-    pending = [i for i in image_ids if i not in done]
+    pending = [m for m in metas if m.image_id not in done]
     failures = 0
     rounds = 0
     attempt = 0
+    prefetch = max(0, int(getattr(pool, "prefetch_rounds", 0)))
 
     while pending and attempt <= max_retries:
         attempt += 1
         m = pool.num_executors
-        # Variant 2 costs come from the executors' own load pass; for
-        # scheduling we use the cheap deterministic estimate.
-        costs = {i: _cheap_cost(pool, i) for i in pending}
-        sched = make_schedule(strategy, pending, m, costs)
+        # Variant-3 costs come from the executor (measured where a load
+        # already ran, the render-free estimate otherwise).
+        costs = pool.estimate_costs(pending)
+        sched = make_bucketed_schedule(
+            strategy, pending, m, costs,
+            rounding=getattr(pool, "bucket_rounding", "exact"),
+            pad=getattr(pool, "pad_ok", False),
+            max_tile_pixels=getattr(pool, "max_tile_pixels", None))
+        round_list = list(sched.rounds())
+        loader = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ph-load") \
+            if prefetch and len(round_list) > 1 else None
+        staged_q: list = []     # FIFO of in-flight load futures
+        next_load = 0
+
+        def top_up():
+            # The front future is the round about to be consumed; while a
+            # round computes, at most `prefetch` later rounds stay staged.
+            nonlocal next_load
+            while (loader is not None and len(staged_q) < prefetch
+                   and next_load < len(round_list)):
+                staged_q.append(loader.submit(pool.load_round,
+                                              round_list[next_load]))
+                next_load += 1
+
         try:
-            for rnd in sched.rounds():
-                ids = [i for _, i in rnd]
+            for rnd in round_list:
+                # Double buffering: the loader thread stages ahead while
+                # this thread computes; with prefetch off, load inline.
+                top_up()
+                if staged_q:
+                    staged = staged_q.pop(0).result()
+                else:
+                    staged = pool.load_round(rnd)
+                    next_load += 1
+                top_up()
                 if failure_injector:
                     failure_injector(rounds)
-                imgs, thresholds, _ = pool.load_self(ids)
-                if imgs.shape[0] < m:          # pad the last round
-                    padn = m - imgs.shape[0]
-                    imgs = np.concatenate(
-                        [imgs, np.repeat(imgs[-1:], padn, 0)], axis=0)
-                    thresholds = np.concatenate(
-                        [thresholds, np.repeat(thresholds[-1:], padn)])
-                diags = pool.run_round(imgs, thresholds)
-                for slot, img_id in enumerate(ids):
-                    summary = _summarize(diags, slot)
+                per_image = pool.run_staged(staged)
+                for img_id, diag in per_image.items():
+                    summary = _summarize(diag)
                     done[img_id] = summary
                     if log_path:
                         with log_path.open("a") as f:
@@ -109,22 +144,28 @@ def run_pipeline(pool, image_ids, *, strategy: str = "part_LPT",
                                  "summary": summary}) + "\n")
                 rounds += 1
                 if verbose:
-                    print(f"round {rounds}: {len(ids)} images "
-                          f"({len(done)}/{len(image_ids)})", flush=True)
-            pending = [i for i in image_ids if i not in done]
+                    print(f"round {rounds}: {rnd.kind} {rnd.shape} "
+                          f"{len(per_image)} images "
+                          f"({len(done)}/{len(metas)})", flush=True)
+            pending = [mm for mm in metas if mm.image_id not in done]
         except RuntimeError as e:
             failures += 1
-            pending = [i for i in image_ids if i not in done]
+            pending = [mm for mm in metas if mm.image_id not in done]
             if verbose:
                 print(f"FAILURE (attempt {attempt}): {e}; "
                       f"{len(pending)} images re-scheduled", flush=True)
+        finally:
+            # Discard staged-but-unconsumed rounds (their images simply
+            # re-schedule); surface nothing from the loader here.
+            for fut in staged_q:
+                try:
+                    fut.result()
+                except Exception:
+                    pass
+            if loader is not None:
+                loader.shutdown(wait=True)
 
     if pending:
         raise RuntimeError(f"pipeline could not finish {len(pending)} images "
                            f"after {max_retries} retries")
     return PipelineResult(done, rounds, failures, time.time() - t0)
-
-
-def _cheap_cost(pool, image_id: int) -> float:
-    from repro.data.astro import estimate_cost_from_id
-    return estimate_cost_from_id(image_id, pool.image_size)

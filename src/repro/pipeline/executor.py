@@ -1,9 +1,26 @@
 """Executor layer: sharded batched PixHomology over the device mesh.
 
-One SPMD program per round: a (M, H, W) image batch sharded over the data
+One SPMD program per round: a (M, Hb, Wb) image batch sharded over the data
 axes, vmapped PixHomology per device (the paper's ``process_image`` map).
 Images are *generated/loaded per executor* (Variant 1 ``load_self``): the
-driver passes image ids, each host materializes only its shard.
+driver passes image metadata, each host materializes only its shard — and
+for oversized images only its halo-padded *tiles*
+(:meth:`ShardedPHExecutor.load_self_tiled`, windowed loading through
+:class:`repro.data.astro.AstroImage`).
+
+Heterogeneous rounds: a round's images share one padded bucket shape
+``(Hb, Wb)``; smaller images are padded with ``-inf``.  Under the finite
+per-image Variant-2 threshold the pipeline always supplies for padded
+rounds, the pad pixels are provably inert — they are below every
+threshold, so they produce no births, no candidates, and no merges —
+leaving exactly two pad artifacts, both repaired host-side in
+:meth:`ShardedPHExecutor.run_staged`:
+
+* flat pixel indices are laid out with stride ``Wb`` instead of ``W``
+  (row-order among real pixels is preserved, so a pure index remap
+  suffices), and
+* the essential class dies at the pad minimum (``-inf``) instead of the
+  image minimum, which the loader records at generation time.
 
 The compiled sharded program comes from the engine's plan cache
 (:meth:`repro.ph.PHEngine.sharded_plan`); this module only moves data and
@@ -11,16 +28,34 @@ applies the engine's overflow auto-regrow policy round by round.
 """
 from __future__ import annotations
 
-import warnings
+import dataclasses
+import hashlib
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import Diagram
 from repro.data import astro
-from repro.ph.config import PHConfig
+from repro.ph.config import FilterLevel
 from repro.ph.engine import PHEngine, threshold_dtype
+from repro.pipeline.scheduler import BucketRound, ImageMeta
+
+
+@dataclasses.dataclass
+class StagedRound:
+    """Device-staged inputs of one scheduled round (built by
+    :meth:`ShardedPHExecutor.load_round`, possibly on the driver's
+    prefetch thread while the previous round computes)."""
+
+    rnd: BucketRound
+    batch: Any = None           # whole rounds: (M, Hb, Wb) device array
+    tvals: Any = None           # whole rounds: (M,) device thresholds
+    fixups: list | None = None  # per entry: None | (H, W, min_val, min_idx)
+    tiles: Any = None           # tiled rounds: repro.core.tiling.StagedTiles
+    threshold: float | None = None  # tiled rounds: Variant-2 threshold
 
 
 class ShardedPHExecutor:
@@ -41,42 +76,168 @@ class ShardedPHExecutor:
         self.image_size = image_size
         self._spec = NamedSharding(ctx.mesh, P(ctx.dp_axes, None, None))
         self._tspec = NamedSharding(ctx.mesh, P(ctx.dp_axes))
+        # Variant-3 costs measured from actually-loaded images, keyed by
+        # (id, shape) — the same id can appear at different sizes across
+        # runs of a reused pool; they override the schedule-time estimate
+        # on re-scheduling (retries).
+        self._measured_costs: dict[tuple, float] = {}
 
     @property
     def num_executors(self) -> int:
         return self.ctx.dp_size
 
+    # -- scheduling knobs (read by the driver) -----------------------------
+
+    @property
+    def bucket_rounding(self) -> str:
+        return self.engine.config.bucket_rounding
+
+    @property
+    def pad_ok(self) -> bool:
+        """Padded (mixed-shape) rounds need a finite Variant-2 threshold
+        to keep the pad pixels out of the analysis — VANILLA runs use
+        exact-shape buckets instead."""
+        return self.engine.config.filter_level is not FilterLevel.VANILLA
+
+    @property
+    def prefetch_rounds(self) -> int:
+        return self.engine.config.prefetch_rounds
+
+    @property
+    def max_tile_pixels(self) -> int | None:
+        t = self.engine.config.tile
+        return t.max_tile_pixels if t is not None else None
+
+    # -- Variant-3 costs ---------------------------------------------------
+
+    def estimate_costs(self, metas) -> dict[int, float]:
+        """Schedule-time costs: the executor-measured cost where a load
+        already happened (Variant 2/3's per-image pass), else the
+        render-free star-stream estimate.  Also the earliest point every
+        image spec reaches this executor, so shapes it cannot load are
+        rejected here instead of mid-run on the prefetch thread."""
+        out = {}
+        for meta in metas:
+            _require_square(meta.shape)
+            got = self._measured_costs.get((meta.image_id, meta.shape))
+            out[meta.image_id] = got if got is not None else \
+                astro.estimate_cost_from_id(meta.image_id, meta.shape[0])
+        return out
+
+    # -- Variant-1 loading -------------------------------------------------
+
+    def _load_one(self, meta: ImageMeta):
+        """Generate one whole (sub-bucket-size) image + its threshold and
+        measured cost.  (On a real cluster each process runs this only for
+        its addressable slots.)"""
+        h, _ = _require_square(meta.shape)
+        img = astro.generate_image(meta.image_id, h)
+        t, _ = astro.filter_threshold(img, self.engine.config.filter_level)
+        self._measured_costs[(meta.image_id, meta.shape)] = \
+            astro.estimate_cost(img, self.engine.config.filter_level)
+        return img, t
+
+    def load_round(self, rnd: BucketRound) -> StagedRound:
+        """Stage one scheduled round on device (thread-safe: the driver
+        calls this on a background loader thread for round r+1 while round
+        r computes)."""
+        if rnd.kind == "tiled":
+            assert len(rnd.entries) == 1
+            return self.load_self_tiled(rnd, rnd.entries[0][1])
+        m = self.num_executors
+        hb, wb = rnd.shape
+        bdt = np.asarray(
+            self.engine.cast_input(np.zeros((), np.float32))).dtype
+        fill = (-np.inf if np.issubdtype(bdt, np.floating)
+                else np.iinfo(bdt).min)
+        batch = np.full((m, hb, wb), fill, bdt)
+        tvals = np.full((m,), -np.inf, np.float32)
+        fixups: list = [None] * len(rnd.entries)
+        for k, (slot, meta) in enumerate(rnd.entries):
+            img, t = self._load_one(meta)
+            # The config dtype cast happens here, per image, so the pad
+            # fixup below observes exactly the values the compute sees
+            # (a lossy cast can move the argmin between near-min pixels).
+            img = np.asarray(self.engine.cast_input(img))
+            h, w = img.shape
+            if (h, w) != (hb, wb):
+                if t is None:
+                    raise ValueError(
+                        "padded round without a finite threshold (the "
+                        "scheduler must use exact buckets when pad_ok is "
+                        "False)")
+                batch[slot, :h, :w] = img
+                tvals[slot] = t
+                # argmin = first (lowest flat index) occurrence of the
+                # minimum — exactly the gmin the essential class dies at.
+                mni = int(img.argmin())
+                fixups[k] = (h, w, img.reshape(-1)[mni], mni)
+            else:
+                batch[slot] = img
+                tvals[slot] = -np.inf if t is None else t
+        filled = {slot for slot, _ in rnd.entries}
+        src = rnd.entries[0][0]
+        for s in range(m):          # pad free slots: repeat a staged image
+            if s not in filled:
+                batch[s] = batch[src]
+                tvals[s] = tvals[src]
+        dev = jax.device_put(jnp.asarray(batch), self._spec)
+        tvj = jax.device_put(
+            jnp.asarray(tvals, threshold_dtype(dev.dtype)), self._tspec)
+        return StagedRound(rnd, batch=dev, tvals=tvj, fixups=fixups)
+
+    def load_self_tiled(self, rnd: BucketRound,
+                        meta: ImageMeta) -> StagedRound:
+        """Variant-1 ``load_self`` for tiles: stage an oversized image as
+        device-resident halo tiles through the windowed
+        :class:`repro.data.astro.AstroImage` provider — no code path here
+        (or below) materializes the full frame on any host."""
+        h, _ = _require_square(meta.shape)
+        provider = astro.AstroImage(meta.image_id, h)
+        t = self.engine.provider_threshold(provider)
+        tiles = self.engine.stage_tiles(provider, ctx=self.ctx)
+        return StagedRound(rnd, tiles=tiles, threshold=t)
+
     def load_self(self, image_ids) -> tuple[np.ndarray, np.ndarray, dict]:
-        """Variant 1: executors materialize their own images (here: the
-        host generates shards deterministically from ids; on a real cluster
-        each process generates/loads only its addressable shard).  Also
-        computes the Variant-2 thresholds and Variant-3 costs."""
-        level = self.engine.config.filter_level
+        """Variant 1 for a homogeneous id list (all at ``image_size``):
+        executors materialize their own images; also computes the
+        Variant-2 thresholds and Variant-3 costs.  The bucketed pipeline
+        stages through :meth:`load_round`; this remains for direct
+        ``run_round`` use."""
+        size = self.image_size
         imgs, thresholds, costs = [], [], {}
         for i in image_ids:
-            img = astro.generate_image(i, self.image_size)
-            t, _ = astro.filter_threshold(img, level)
+            img, t = self._load_one(ImageMeta(int(i), (size, size)))
             imgs.append(img)
             thresholds.append(-np.inf if t is None else t)
-            costs[i] = astro.estimate_cost(img, level)
+            costs[i] = self._measured_costs[(int(i), (size, size))]
         return np.stack(imgs), np.asarray(thresholds, np.float32), costs
 
-    def run_round(self, images: np.ndarray, thresholds: np.ndarray):
-        """images: (M, H, W) with M == num_executors (padded by driver).
+    # -- round execution ---------------------------------------------------
 
-        Images larger than the engine's ``TileSpec.max_tile_pixels`` budget
-        are transparently routed through the halo-tiled path: instead of one
-        whole image per executor, each image spans the mesh tile-by-tile
-        (the scenario the whole-image design cannot serve).
-        """
+    def run_staged(self, staged: StagedRound) -> dict[int, Diagram]:
+        """Run one staged round; returns per-image host diagrams with the
+        pad artifacts repaired (index remap + essential death)."""
+        rnd = staged.rnd
+        if rnd.kind == "tiled":
+            meta = rnd.entries[0][1]
+            res = self.engine.run_tiled(staged.tiles, staged.threshold,
+                                        ctx=self.ctx)
+            return {meta.image_id: jax.tree.map(np.asarray, res.diagram)}
+
+        diags = self._dispatch_sharded(staged.batch, staged.tvals)
+        out: dict[int, Diagram] = {}
+        for k, (slot, meta) in enumerate(rnd.entries):
+            d = Diagram(*(np.asarray(x[slot]) for x in diags))
+            if staged.fixups[k] is not None:
+                d = _unpad_diagram(d, staged.fixups[k], rnd.shape)
+            out[meta.image_id] = d
+        return out
+
+    def _dispatch_sharded(self, batch, tvals):
+        """One sharded whole-image dispatch with the engine's regrow."""
         eng = self.engine
-        if eng.should_tile(images.shape[1] * images.shape[2]):
-            return self._run_round_tiled(images, thresholds)
-        batch = jax.device_put(eng.cast_input(images), self._spec)
-        tvals = jax.device_put(
-            jnp.asarray(thresholds, threshold_dtype(batch.dtype)),
-            self._tspec)
-        n = images.shape[1] * images.shape[2]
+        n = batch.shape[1] * batch.shape[2]
 
         def dispatch(mf, mc):
             plan = eng.sharded_plan(self.ctx, batch.shape, batch.dtype,
@@ -89,26 +250,50 @@ class ShardedPHExecutor:
             memo_key=("sharded", batch.shape, str(batch.dtype)))
         return diags
 
+    def run_round(self, images: np.ndarray, thresholds: np.ndarray):
+        """images: (M, H, W) with M == num_executors (padded by caller).
+
+        Images larger than the engine's ``TileSpec.max_tile_pixels`` budget
+        are transparently routed through the halo-tiled path: instead of one
+        whole image per executor, each image spans the mesh tile-by-tile
+        (the scenario the whole-image design cannot serve).  The bucketed
+        pipeline schedules such images as their own tile-grid rounds; this
+        batch-shaped entry point remains for direct use.
+        """
+        eng = self.engine
+        if eng.should_tile(images.shape[1] * images.shape[2]):
+            return self._run_round_tiled(images, thresholds)
+        batch = jax.device_put(eng.cast_input(images), self._spec)
+        tvals = jax.device_put(
+            jnp.asarray(thresholds, threshold_dtype(batch.dtype)),
+            self._tspec)
+        return self._dispatch_sharded(batch, tvals)
+
     def _run_round_tiled(self, images: np.ndarray, thresholds: np.ndarray):
         """Oversized-image round: one image at a time, tiles spanning the
         mesh's data axes (regrow and plan caching live in ``run_tiled``)."""
-        from repro.core import Diagram
-        diags = []
+        # Rounds may repeat identical rows (short-round padding, duplicate
+        # datasets); a full tiled run per duplicate would be pure waste, so
+        # every (threshold, image) is computed once per round — any
+        # identical row reuses the first result, wherever it appears.
+        seen: dict[tuple, int] = {}
+        diags: list[Diagram] = []
         for i in range(images.shape[0]):
-            # The driver pads short rounds by repeating the last image;
-            # a full tiled run per duplicate would be pure waste, so reuse
-            # the previous result for consecutive identical rows.
-            if diags and thresholds[i] == thresholds[i - 1] \
-                    and np.array_equal(images[i], images[i - 1]):
-                diags.append(diags[-1])
+            key = (float(thresholds[i]),
+                   hashlib.sha1(np.ascontiguousarray(
+                       images[i]).tobytes()).hexdigest())
+            dup = seen.get(key)
+            if dup is not None and np.array_equal(images[i], images[dup]):
+                diags.append(diags[dup])
                 continue
+            seen[key] = i
             diags.append(jax.tree.map(
                 np.asarray,
                 self.engine.run_tiled(images[i], float(thresholds[i]),
                                       ctx=self.ctx).diagram))
         # Per-image regrow can leave different diagram capacities; pad the
         # rows to the round maximum before stacking into the (M, F) layout
-        # the driver's summarizer expects.
+        # a batched consumer expects.
         f = max(d.birth.shape[0] for d in diags)
 
         def padded(d: Diagram) -> Diagram:
@@ -129,42 +314,39 @@ class ShardedPHExecutor:
         return jax.tree.map(lambda *xs: np.stack(xs), *map(padded, diags))
 
 
-def make_sharded_ph(ctx, **kw):
-    """Deprecated: use ``PHEngine.sharded_plan`` (plan-cached) instead."""
-    warnings.warn("make_sharded_ph is deprecated; use PHEngine.sharded_plan",
-                  DeprecationWarning, stacklevel=2)
-    engine = PHEngine(PHConfig(
-        max_features=kw.pop("max_features", 256),      # pixhomology's old
-        max_candidates=kw.pop("max_candidates", 4096),  # kwarg defaults
-        auto_regrow=False, **kw))
-    cfg = engine.config
-
-    def fn(imgs, tvals):
-        plan = engine.sharded_plan(ctx, imgs.shape, imgs.dtype,
-                                   cfg.max_features, cfg.max_candidates)
-        return plan(imgs, tvals)
-
-    return fn
+def _require_square(shape) -> tuple[int, int]:
+    """The synthetic astro loader only renders square frames; reject
+    rectangles before they are scheduled (the scheduler itself is
+    shape-generic — a different pool may well accept them)."""
+    h, w = shape
+    if h != w:
+        raise ValueError(f"astro frames are square, got {tuple(shape)}")
+    return h, w
 
 
-class ExecutorPool(ShardedPHExecutor):
-    """Deprecated kwargs shim over :class:`ShardedPHExecutor`.
+def _unpad_diagram(d: Diagram, fixup, bucket: tuple[int, int]) -> Diagram:
+    """Undo the two pad artifacts of a bucket-padded image's diagram.
 
-    Kept for one release: builds a private engine from the raw kwargs with
-    auto-regrow off (the pre-engine behavior surfaced overflow as a flag
-    only).  New code constructs a :class:`repro.ph.PHEngine` and calls
-    ``run_distributed`` / ``ShardedPHExecutor`` directly.
+    ``fixup = (H, W, min_val, min_idx)`` with indices in the *unpadded*
+    frame.  Real-pixel row order is preserved by right/bottom padding, so
+    remapping flat indices from stride ``Wb`` to stride ``W`` and restoring
+    the essential death (the true global minimum, recorded at load time)
+    makes the diagram bit-identical to the unpadded whole-image run.
     """
+    h, w, mnv, mni = fixup
+    wb = bucket[1]
 
-    def __init__(self, ctx, image_size: int = 512,
-                 max_features: int = 8192, max_candidates: int = 32768,
-                 filter_level="filter_std"):
-        warnings.warn(
-            "ExecutorPool(ctx, **kwargs) is deprecated; build a "
-            "repro.ph.PHEngine(PHConfig(...)) and use engine.run_distributed"
-            " (or ShardedPHExecutor) instead",
-            DeprecationWarning, stacklevel=2)
-        engine = PHEngine(PHConfig(
-            max_features=max_features, max_candidates=max_candidates,
-            filter_level=filter_level, auto_regrow=False))
-        super().__init__(engine, ctx, image_size=image_size)
+    def remap(p):
+        p = p.copy()
+        valid = p >= 0
+        p[valid] = (p[valid] // wb) * w + (p[valid] % wb)
+        return p
+
+    p_birth = remap(d.p_birth)
+    p_death = remap(d.p_death)
+    death = d.death.copy()
+    if int(d.count) > 0:        # row 0 is the essential class (max birth)
+        death[0] = mnv
+        p_death[0] = mni
+    return Diagram(d.birth, death, p_birth, p_death,
+                   d.count, d.n_unmerged, d.overflow)

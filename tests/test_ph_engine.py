@@ -67,6 +67,29 @@ def test_config_is_hashable_plan_key_ignores_regrow_policy():
     assert a.plan_key() == b.plan_key()
 
 
+def test_config_bucket_and_prefetch_knobs():
+    with pytest.raises(ValueError):
+        PHConfig(bucket_rounding="pow3")
+    with pytest.raises(ValueError):
+        PHConfig(prefetch_rounds=-1)
+    cfg = PHConfig(bucket_rounding="exact", prefetch_rounds=3)
+    back = PHConfig.from_json(cfg.to_json())
+    assert back == cfg
+    # bucket rounding picks compiled batch shapes -> in the plan key;
+    # prefetch depth is pure host-side scheduling -> excluded.
+    assert PHConfig(bucket_rounding="exact").plan_key() != \
+        PHConfig(bucket_rounding="pow2").plan_key()
+    assert PHConfig(prefetch_rounds=0).plan_key() == \
+        PHConfig(prefetch_rounds=4).plan_key()
+
+    import argparse
+    ns = argparse.Namespace(bucket_rounding="exact", no_prefetch=True)
+    cfg = PHConfig.from_flags(ns)
+    assert cfg.bucket_rounding == "exact" and cfg.prefetch_rounds == 0
+    ns = argparse.Namespace(prefetch_rounds=2)
+    assert PHConfig.from_flags(ns).prefetch_rounds == 2
+
+
 def test_astro_accepts_filter_level_enum():
     img = astro.generate_image(3, 64)
     t_str, frac_str = astro.filter_threshold(img, "filter_std")

@@ -1,4 +1,5 @@
-"""Distributed PH pipeline: scheduling, fault tolerance, work-log resume."""
+"""Distributed PH pipeline: scheduling, fault tolerance, work-log resume,
+shape-bucketed heterogeneous rounds, prefetch overlap, tile streaming."""
 import json
 
 import numpy as np
@@ -7,10 +8,12 @@ from _hypothesis_compat import given, settings, st
 
 from repro.data import astro
 from repro.distributed.context import single_device_ctx
-from repro.ph import FilterLevel, PHConfig, PHEngine
+from repro.ph import FilterLevel, PHConfig, PHEngine, TileSpec
 from repro.pipeline.driver import FailureInjector, run_pipeline
-from repro.pipeline.executor import ExecutorPool, ShardedPHExecutor
-from repro.pipeline.scheduler import (make_schedule, part_executors,
+from repro.pipeline.executor import ShardedPHExecutor
+from repro.pipeline.scheduler import (BucketRound, ImageMeta, bucket_shape,
+                                      make_bucketed_schedule, make_schedule,
+                                      normalize_images, part_executors,
                                       part_images, part_lpt)
 
 
@@ -69,6 +72,90 @@ def test_lpt_beats_static_on_strong_skew():
 def test_lpt_requires_costs():
     with pytest.raises(ValueError):
         make_schedule("part_LPT", [1, 2], 2, None)
+    with pytest.raises(ValueError):
+        make_bucketed_schedule("part_LPT",
+                               [ImageMeta(0, (8, 8))], 2, None)
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketed scheduling (heterogeneous datasets)
+# ---------------------------------------------------------------------------
+
+def _random_workload(rng, n, sizes=(64, 96, 128, 256, 512)):
+    metas = [ImageMeta(i, (int(rng.choice(sizes)),) * 2) for i in range(n)]
+    costs = {meta.image_id: meta.pixels * float(rng.uniform(0.2, 3.0))
+             for meta in metas}
+    return metas, costs
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 8), st.integers(0, 2 ** 20))
+def test_bucketed_schedule_covers_all_images_exactly_once(n, m, seed):
+    rng = np.random.default_rng(seed)
+    metas, costs = _random_workload(rng, n)
+    for strat in ("part_executors", "part_images", "part_LPT"):
+        for pad in (True, False):
+            sched = make_bucketed_schedule(
+                strat, metas, m, costs, rounding="pow2", pad=pad,
+                max_tile_pixels=256 * 256, seed=seed)
+            got = sorted(i for r in sched.rounds() for i in r.image_ids)
+            assert got == list(range(n)), (strat, pad)
+            for r in sched.rounds():
+                assert len(r.entries) <= (m if r.kind == "whole" else 1)
+                slots = [s for s, _ in r.entries]
+                assert len(set(slots)) == len(slots)
+                if r.kind == "whole":
+                    for _, meta in r.entries:
+                        assert meta.shape[0] <= r.shape[0]
+                        assert meta.shape[1] <= r.shape[1]
+                        if not pad:
+                            assert tuple(meta.shape) == tuple(r.shape)
+                else:
+                    assert r.entries[0][1].pixels > 256 * 256
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 8), st.integers(0, 2 ** 20))
+def test_bucketed_lpt_beats_padded_part_images(n, m, seed):
+    """The satellite property: on random heterogeneous workloads, the
+    bucketed-LPT lockstep makespan never exceeds what shape-agnostic
+    ``part_images`` pays once every image is padded to the global bucket
+    (the only way a one-plan SPMD pipeline can run a mixed set)."""
+    rng = np.random.default_rng(seed)
+    metas, costs = _random_workload(rng, n)
+    sched = make_bucketed_schedule("part_LPT", metas, m, costs,
+                                   rounding="pow2", pad=True)
+    base = make_schedule("part_images",
+                         [meta.image_id for meta in metas], m, costs)
+    pad_shape = bucket_shape(
+        (max(meta.shape[0] for meta in metas),
+         max(meta.shape[1] for meta in metas)), "pow2")
+    baseline = base.padded_makespan(
+        costs, {meta.image_id: meta for meta in metas}, pad_shape)
+    assert sched.makespan(costs) <= baseline * (1 + 1e-9)
+
+
+def test_bucketed_rounds_are_homogeneous_per_plan():
+    """Every whole round carries exactly one padded shape (one compiled
+    plan per round), and vanilla (pad=False) never mixes shapes at all."""
+    metas = [ImageMeta(0, (64, 64)), ImageMeta(1, (96, 96)),
+             ImageMeta(2, (64, 64)), ImageMeta(3, (128, 128))]
+    costs = {i: float(metas[i].pixels) for i in range(4)}
+    sched = make_bucketed_schedule("part_LPT", metas, 2, costs, pad=False)
+    shapes = [r.shape for r in sched.rounds()]
+    assert shapes == sorted(shapes, key=lambda s: -s[0] * s[1])
+    for r in sched.rounds():
+        assert {meta.shape for _, meta in r.entries} == {r.shape}
+
+
+def test_normalize_images_accepts_mixed_specs():
+    metas = normalize_images(
+        [0, (1, 96), (2, (64, 48)), ImageMeta(3, (32, 32))],
+        default_size=128)
+    assert [meta.shape for meta in metas] == [
+        (128, 128), (96, 96), (64, 48), (32, 32)]
+    with pytest.raises(ValueError):
+        normalize_images([0, (0, 64)])
 
 
 # ---------------------------------------------------------------------------
@@ -80,15 +167,6 @@ def pool():
     engine = PHEngine(PHConfig(max_features=2048, max_candidates=8192,
                                filter_level=FilterLevel.STD))
     return ShardedPHExecutor(engine, single_device_ctx(), image_size=128)
-
-
-def test_executor_pool_shim_is_deprecated_but_works():
-    with pytest.warns(DeprecationWarning):
-        shim = ExecutorPool(single_device_ctx(), image_size=64,
-                            max_features=1024, max_candidates=4096)
-    res = run_pipeline(shim, [0])
-    assert len(res.diagrams) == 1
-    assert not shim.engine.config.auto_regrow   # pre-engine semantics
 
 
 def test_pipeline_completes_and_counts_objects(pool):
@@ -126,6 +204,236 @@ def test_pipeline_results_deterministic(pool):
         assert r1.diagrams[i]["count"] == r2.diagrams[i]["count"]
 
 
+def test_executor_costs_are_threaded_not_recomputed(pool, monkeypatch):
+    """Satellite: the driver uses pool.estimate_costs (measured Variant-3
+    costs after a load), not a private estimate_cost_from_id pass."""
+    meta = ImageMeta(31, (32, 32))
+    est = pool.estimate_costs([meta])[31]
+    assert est == astro.estimate_cost_from_id(31, 32)   # nothing loaded yet
+    run_pipeline(pool, [(31, 32)])
+    measured = pool.estimate_costs([meta])[31]
+    img = astro.generate_image(31, 32)
+    assert measured == astro.estimate_cost(img, pool.engine.config.filter_level)
+    assert measured != est
+    # and the driver consults the pool, so a re-run sees measured costs
+    calls = []
+    orig = pool.estimate_costs
+    monkeypatch.setattr(pool, "estimate_costs",
+                        lambda metas: calls.append(1) or orig(metas))
+    run_pipeline(pool, [(31, 32)])
+    assert calls
+    # shapes the astro loader cannot render fail at schedule time, not
+    # mid-round on the prefetch thread
+    monkeypatch.undo()
+    with pytest.raises(ValueError):
+        pool.estimate_costs([ImageMeta(40, (64, 48))])
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous end-to-end: padded buckets bit-identical per image
+# ---------------------------------------------------------------------------
+
+def _assert_rows_equal(got, want, f=None):
+    """All valid diagram rows (and scalars) bit-equal; row arrays may have
+    different capacities, so compare the common prefix past count."""
+    assert int(got.count) == int(want.count)
+    assert int(got.n_unmerged) == int(want.n_unmerged)
+    k = min(got.birth.shape[0], want.birth.shape[0]) if f is None else f
+    for field in ("birth", "death", "p_birth", "p_death"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field))[:k],
+            np.asarray(getattr(want, field))[:k], err_msg=field)
+
+
+def test_padded_round_bit_identical_to_unpadded(pool):
+    """A 24x24 image computed inside a 32x32 bucket (pad + index remap +
+    essential fixup) must equal the plain whole-image run on every field,
+    including p_birth/p_death in unpadded coordinates."""
+    import jax.numpy as jnp
+    from repro.core import pixhomology
+    meta = ImageMeta(7, (24, 24))
+    staged = pool.load_round(BucketRound("whole", (32, 32), ((0, meta),)))
+    got = pool.run_staged(staged)[7]
+    img = astro.generate_image(7, 24)
+    t, _ = astro.filter_threshold(img, "filter_std")
+    want = pixhomology(jnp.asarray(img), t, max_features=2048,
+                       max_candidates=8192)
+    assert not bool(np.asarray(want.overflow))
+    _assert_rows_equal(got, want)
+
+
+def test_hetero_pipeline_matches_per_image_runs():
+    """Mixed 24/32/48 set end-to-end: per-image summaries equal dedicated
+    per-image engine runs, padded rounds and all."""
+    import jax.numpy as jnp
+    from repro.core import pixhomology
+    engine = PHEngine(PHConfig(max_features=2048, max_candidates=8192,
+                               filter_level=FilterLevel.STD))
+    pool = ShardedPHExecutor(engine, single_device_ctx())
+    res = run_pipeline(pool, [(0, 24), (1, 32), (2, 48), (3, 24)])
+    assert len(res.diagrams) == 4
+    for img_id, size in ((0, 24), (1, 32), (2, 48), (3, 24)):
+        img = astro.generate_image(img_id, size)
+        t, _ = astro.filter_threshold(img, "filter_std")
+        want = pixhomology(jnp.asarray(img), t, max_features=2048,
+                           max_candidates=8192)
+        c = int(want.count)
+        assert res.diagrams[img_id]["count"] == c
+        np.testing.assert_array_equal(
+            res.diagrams[img_id]["top_births"],
+            np.asarray(want.birth[:5], np.float64))
+        np.testing.assert_array_equal(
+            res.diagrams[img_id]["top_deaths"],
+            np.asarray(want.death[:5], np.float64))
+
+
+def test_vanilla_hetero_uses_exact_buckets():
+    """Without a finite threshold padding is not exact, so VANILLA runs
+    must keep every shape in its own (unpadded) round — and still match
+    dedicated vanilla per-image runs."""
+    import jax.numpy as jnp
+    from repro.core import pixhomology
+    engine = PHEngine(PHConfig(max_features=2048, max_candidates=8192))
+    pool = ShardedPHExecutor(engine, single_device_ctx())
+    assert not pool.pad_ok
+    res = run_pipeline(pool, [(0, 24), (1, 32)])
+    assert res.rounds == 2           # one exact-shape round each
+    for img_id, size in ((0, 24), (1, 32)):
+        img = astro.generate_image(img_id, size)
+        want = pixhomology(jnp.asarray(img), max_features=2048,
+                           max_candidates=8192)
+        assert res.diagrams[img_id]["count"] == int(want.count)
+        np.testing.assert_array_equal(
+            res.diagrams[img_id]["top_deaths"],
+            np.asarray(want.death[:5], np.float64))
+
+
+# ---------------------------------------------------------------------------
+# Tiled rounds: streaming residency, fault injection, resume, prefetch
+# ---------------------------------------------------------------------------
+
+def _tiled_engine(**kw):
+    kw.setdefault("max_features", 4096)
+    kw.setdefault("filter_level", "filter_std")
+    return PHEngine(PHConfig(tile=TileSpec(
+        grid=(2, 2), max_features_per_tile=1024,
+        max_candidates_per_tile=2048, max_tile_pixels=32 * 32), **kw))
+
+
+def test_oversized_images_stream_without_whole_image_loads(monkeypatch):
+    """Residency: an image above max_tile_pixels goes through the
+    tile-provider path — generate_image is never called for it, and no
+    window larger than one halo tile is ever materialized."""
+    engine = _tiled_engine()
+    whole_calls = []
+    windows = []
+    orig_img = astro.generate_image
+    orig_win = astro.generate_window
+
+    def spy_img(image_id, size=1024, **kw):
+        whole_calls.append(image_id)
+        return orig_img(image_id, size, **kw)
+
+    def spy_win(image_id, r0, c0, h, w, **kw):
+        windows.append((image_id, h * w))
+        return orig_win(image_id, r0, c0, h, w, **kw)
+
+    monkeypatch.setattr(astro, "generate_image", spy_img)
+    monkeypatch.setattr(astro, "generate_window", spy_win)
+    res = engine.run_distributed([(0, 24), (1, 32), (2, 64)])
+    assert len(res.diagrams) == 3
+    assert 2 not in whole_calls          # never whole-materialized
+    tile_px = (64 // 2 + 2) * (64 // 2 + 2)
+    assert windows                       # the tiled image loaded via windows
+    assert max(px for i, px in windows if i == 2) <= tile_px
+
+
+def test_tiled_result_matches_whole_image_at_same_threshold():
+    engine = _tiled_engine()
+    res = engine.run_distributed([(2, 64)])
+    prov = astro.AstroImage(2, 64)
+    # the executor samples the Variant-2 statistic at the tile budget
+    t = prov.filter_threshold("filter_std", sample=32)
+    whole = PHEngine(PHConfig(max_features=4096,
+                              filter_level="filter_std"))
+    want = whole.run(astro.generate_image(2, 64), t)
+    assert res.diagrams[2]["count"] == int(want.diagram.count)
+    np.testing.assert_array_equal(
+        res.diagrams[2]["top_births"],
+        np.asarray(want.diagram.birth[:5], np.float64))
+    np.testing.assert_array_equal(
+        res.diagrams[2]["top_deaths"],
+        np.asarray(want.diagram.death[:5], np.float64))
+
+
+def test_tiled_round_failure_recovery_and_worklog_resume(tmp_path):
+    """Satellite: FailureInjector + work-log resume through *tiled* rounds
+    (the schedule here is one whole round + one tiled round)."""
+    engine = _tiled_engine()
+    log = tmp_path / "tiled.jsonl"
+    inj = FailureInjector([0, 1])    # both rounds die once each
+    res = engine.run_distributed([(0, 32), (2, 64)], work_log=log,
+                                 failure_injector=inj)
+    assert res.failures == 2
+    assert len(res.diagrams) == 2
+    lines = [json.loads(l) for l in log.read_text().splitlines()]
+    assert sorted(r["image_id"] for r in lines) == [0, 2]
+    # resume: a superset run recomputes nothing already logged
+    engine2 = _tiled_engine()
+    res2 = engine2.run_distributed([(0, 32), (2, 64), (3, 32)],
+                                   work_log=log)
+    assert len(res2.diagrams) == 3
+    lines2 = log.read_text().splitlines()
+    assert len(lines2) - len(lines) == 1
+    assert json.loads(lines2[-1])["image_id"] == 3
+    # and the resumed summaries are the logged ones, bit for bit
+    assert res2.diagrams[2] == res.diagrams[2]
+
+
+def test_run_round_tiled_dedupes_any_identical_row():
+    """Satellite: duplicate padded rows are computed once wherever they
+    appear in the round, not only when consecutive."""
+    engine = _tiled_engine()
+    pool = ShardedPHExecutor(engine, single_device_ctx(), image_size=64)
+    a = astro.generate_image(0, 64)
+    b = astro.generate_image(1, 64)
+    imgs = np.stack([a, b, a, b, a])          # non-consecutive duplicates
+    t0, _ = astro.filter_threshold(a, "filter_std")
+    t1, _ = astro.filter_threshold(b, "filter_std")
+    tvals = np.asarray([t0, t1, t0, t1, t0], np.float32)
+    calls = []
+    orig = engine.run_tiled
+
+    def spy(image, tv=None, **kw):
+        calls.append(1)
+        return orig(image, tv, **kw)
+
+    engine.run_tiled = spy
+    try:
+        diags = pool._run_round_tiled(imgs, tvals)
+    finally:
+        engine.run_tiled = orig
+    assert len(calls) == 2                    # one run per distinct image
+    for i, j in ((0, 2), (0, 4), (1, 3)):
+        for field in ("birth", "death", "p_birth", "p_death", "count"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(diags, field))[i],
+                np.asarray(getattr(diags, field))[j], err_msg=field)
+    # distinct rows stay distinct
+    assert not np.array_equal(diags.p_birth[0], diags.p_birth[1])
+
+
+def test_prefetch_and_serial_loading_agree():
+    """Double-buffered rounds must be a pure latency optimization: same
+    diagrams with prefetch_rounds=0 and 2, heterogeneous + tiled mix."""
+    images = [(0, 24), (1, 32), (2, 64), (3, 32), (4, 24)]
+    results = []
+    for prefetch in (0, 2):
+        engine = _tiled_engine(prefetch_rounds=prefetch)
+        results.append(engine.run_distributed(images).diagrams)
+    assert results[0] == results[1]
+
+
 # ---------------------------------------------------------------------------
 # Variant 2 data + filtering
 # ---------------------------------------------------------------------------
@@ -145,6 +453,32 @@ def test_astro_images_deterministic_and_filterable():
     assert dropped["filter_light"] <= dropped["filter_std"] <= \
         dropped["filter_heavy"]
     assert dropped["filter_heavy"] > 0.5   # background dominates star fields
+
+
+def test_generate_window_bit_identical_to_image_slice():
+    """The tentpole's windowed loading contract: any window equals the
+    same slice of the full frame, bit for bit."""
+    img = astro.generate_image(11, 96)
+    for r0, c0, h, w in ((0, 0, 96, 96), (17, 5, 41, 77), (95, 0, 1, 96),
+                         (30, 30, 3, 3), (0, 64, 64, 32)):
+        win = astro.generate_window(11, r0, c0, h, w, size=96)
+        np.testing.assert_array_equal(win, img[r0:r0 + h, c0:c0 + w],
+                                      err_msg=str((r0, c0, h, w)))
+    with pytest.raises(ValueError):
+        astro.generate_window(11, 90, 0, 10, 10, size=96)
+
+
+def test_astro_image_provider_tiles_match_split():
+    """AstroImage.halo_tile == split_tiles of the full frame (incl. the
+    out-of-frame -inf halo), for every tile of a 3x2 grid."""
+    import jax.numpy as jnp
+    from repro.core.tiling import split_tiles
+    prov = astro.AstroImage(5, 48)
+    img = astro.generate_image(5, 48)
+    ref = np.asarray(split_tiles(jnp.asarray(img), (3, 2), -jnp.inf))
+    for t in range(6):
+        np.testing.assert_array_equal(prov.halo_tile(t, (3, 2)), ref[t],
+                                      err_msg=f"tile {t}")
 
 
 def test_truncation_preserves_above_threshold_pairs():

@@ -281,16 +281,76 @@ def test_pipeline_routes_oversized_images_through_tiles():
     res = engine.run_distributed([0, 1], image_size=64)
     assert len(res.diagrams) == 2
     assert all(not d["overflow"] for d in res.diagrams.values())
-    # the tiled summaries match a whole-image engine bit-for-bit
+    # the tiled summaries match a whole-image engine bit-for-bit (at the
+    # tile-budget-sampled Variant-2 threshold the streaming path uses)
     from repro.data import astro
     whole = PHEngine(PHConfig(max_features=4096,
                               filter_level="filter_std"))
     img = astro.generate_image(0, 64)
-    want = whole.run(img)
+    t = astro.AstroImage(0, 64).filter_threshold("filter_std", sample=32)
+    want = whole.run(img, t)
     assert res.diagrams[0]["count"] == int(want.diagram.count)
     np.testing.assert_allclose(
         res.diagrams[0]["top_births"],
         np.asarray(want.diagram.birth[:5], np.float64))
+
+
+def test_run_tiled_accepts_provider_and_staged_tiles():
+    """The streaming entry points: a tile provider (windowed loading) and
+    pre-staged tile stacks must both be bit-identical to the whole-image
+    array path, including p_birth/p_death."""
+    from repro.core.tiling import load_tile_stacks
+    from repro.data import astro
+    engine = PHEngine(PHConfig(max_features=4096, tile=TileSpec(
+        grid=(2, 2), max_features_per_tile=1024,
+        max_candidates_per_tile=2048)))
+    prov = astro.AstroImage(9, 48)
+    img = astro.generate_image(9, 48)
+    want = engine.run_tiled(img)
+    got_prov = engine.run_tiled(prov)
+    staged = load_tile_stacks(prov, (2, 2))
+    assert staged.shape == (48, 48) and staged.grid == (2, 2)
+    got_staged = engine.run_tiled(staged)
+    for name, res in (("provider", got_prov), ("staged", got_staged)):
+        for field in want.diagram._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(want.diagram, field)),
+                np.asarray(getattr(res.diagram, field)),
+                err_msg=f"{name}:{field}")
+
+
+def test_run_tiled_provider_derives_threshold_and_staged_requires_it():
+    from repro.data import astro
+    engine = PHEngine(PHConfig(
+        max_features=4096, filter_level="filter_std",
+        tile=TileSpec(grid=(2, 2), max_features_per_tile=1024,
+                      max_candidates_per_tile=2048)))
+    prov = astro.AstroImage(3, 48)
+    res = engine.run_tiled(prov)           # threshold from the provider
+    t = prov.filter_threshold("filter_std")
+    assert res.threshold == t
+    want = engine.run_tiled(astro.generate_image(3, 48), t)
+    np.testing.assert_array_equal(res.to_array(), want.to_array())
+
+    class NoThreshold:
+        shape = (48, 48)
+        dtype = np.float32
+
+        def halo_tile(self, t, grid, fill=-np.inf):
+            return prov.halo_tile(t, grid, fill=fill)
+
+    with pytest.raises(ValueError):
+        engine.run_tiled(NoThreshold())
+
+
+def test_halo_gidx_tile_matches_split():
+    from repro.core.tiling import halo_gidx_tile, split_tiles
+    h, w, grid = 24, 36, (2, 3)
+    gidx2d = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
+    ref = np.asarray(split_tiles(gidx2d, grid, jnp.int32(-1)))
+    for t in range(6):
+        np.testing.assert_array_equal(halo_gidx_tile((h, w), grid, t),
+                                      ref[t], err_msg=f"tile {t}")
 
 
 # ---------------------------------------------------------------------------
