@@ -1,0 +1,213 @@
+"""Core stage-graph benchmark: fused vs. unfused phase A (BENCH_core.json).
+
+Times PixHomology **steps 1-4** (phase A pointers/flags -> phase B label
+resolution -> candidate generation) on astro frames, for three stage
+pipelines:
+
+* ``seed``   — the pre-stage-graph baseline: pooled ``arg-maxpool2d``, the
+  whole-image ``m[m]`` doubling loop with its cond/body double gather, and
+  rank-based exact candidates (which pull in the full-image
+  ``total_order_rank`` argsort they depend on);
+* ``pooled`` — the unfused path after the single-gather fix (same data
+  flow, half the doubling gathers);
+* ``fused``  — the fused phase-A kernel path (pointer+mask sweep, in-strip
+  snap, compacted-frontier resolution, bitmask candidates — no argsort
+  dependency in steps 1-4 at all).
+
+Also reports end-to-end ``pixhomology`` wall time (where the argsort is
+shared with phase C on every path, so the gap narrows — reported so the
+stage numbers cannot oversell), frontier sizes, doubling-iteration counts,
+and phase-B gather volumes (the O(n·log depth) -> O(frontier·log depth)
+reduction from src/repro/ph/DESIGN.md §2).
+
+  PYTHONPATH=src python -m benchmarks.core_bench --sizes 512 1024 \
+      --out BENCH_core.json
+
+CI runs a small-size smoke of this every push and uploads the artifact so
+the core-stage perf trajectory accumulates next to the tiled/pipeline
+benches.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def _timeit(fn, *args, repeats: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def _stage_fns(shape: tuple[int, int], strip_rows: int):
+    """Jitted steps-1-4 programs for the three stage pipelines."""
+    from repro.core.pixhomology import (
+        exact_candidates,
+        exact_candidates_masked,
+        resolve_labels,
+        resolve_labels_frontier,
+        steepest_neighbors,
+        total_order_rank,
+    )
+    from repro.kernels.ph_phase_a import ref as phase_a_ref
+    h, w = shape
+
+    @jax.jit
+    def seed(im):
+        ptr = steepest_neighbors(im)
+
+        def cond(m):          # the pre-PR double gather: cond recomputes m[m]
+            return jnp.any(m[m] != m)
+
+        def body(m):
+            return m[m]
+
+        labels = jax.lax.while_loop(cond, body, ptr)
+        rank = total_order_rank(im.reshape(-1))
+        cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
+        return jnp.sum(cand, dtype=jnp.int32)
+
+    @jax.jit
+    def pooled(im):
+        ptr = steepest_neighbors(im)
+        labels, iters = resolve_labels(ptr, with_count=True)
+        rank = total_order_rank(im.reshape(-1))
+        cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
+        return jnp.sum(cand, dtype=jnp.int32), iters
+
+    @jax.jit
+    def fused(im):
+        ptr, mask, snap_iters = phase_a_ref.phase_a(
+            im, strip_rows=strip_rows, with_stats=True)
+        labels, table_iters = resolve_labels_frontier(
+            ptr, (h, w), strip_rows, with_count=True)
+        cand = exact_candidates_masked(mask.reshape(h, w),
+                                       labels.reshape(h, w))
+        return jnp.sum(cand, dtype=jnp.int32), snap_iters, table_iters
+
+    return seed, pooled, fused
+
+
+def bench_size(size: int, *, strip_rows: int, repeats: int,
+               end_to_end: bool, deep_sky: bool) -> dict:
+    from repro.data import astro
+    from repro.kernels.ph_phase_a.ops import boundary_rows
+
+    img_np = astro.generate_image(0, size)
+    if deep_sky:
+        # Strong radial sky gradient (nebulosity): basins span the frame,
+        # the regime where chain depth dwarfs the strip height.
+        yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+        img_np = img_np - 4e-2 * ((yy - size / 2) ** 2
+                                  + (xx - size / 2) ** 2) / size
+    img = jnp.asarray(img_np)
+    n = size * size
+    frontier = int(len(boundary_rows(size, strip_rows))) * size
+
+    seed, pooled, fused = _stage_fns((size, size), strip_rows)
+    t_seed, n_cand = _timeit(seed, img, repeats=repeats)
+    t_pool, (n_cand_p, dense_iters) = _timeit(pooled, img, repeats=repeats)
+    t_fuse, (n_cand_f, snap_iters, table_iters) = _timeit(
+        fused, img, repeats=repeats)
+    assert int(n_cand) == int(n_cand_p) == int(n_cand_f), \
+        "stage pipelines disagree on the candidate set"
+
+    row = {
+        "name": f"core_{size}{'_deep' if deep_sky else ''}",
+        "size": size,
+        "deep_sky": deep_sky,
+        "strip_rows": strip_rows,
+        "n_candidates": int(n_cand),
+        # steps 1-4 stage times (each pipeline computes what it depends on:
+        # the rank argsort for the rank-based candidate generators, nothing
+        # but the image for the fused bitmask path)
+        "stage_seed_s": t_seed,
+        "stage_unfused_s": t_pool,
+        "stage_fused_s": t_fuse,
+        "fused_speedup_vs_unfused": t_pool / t_fuse,
+        "fused_beats_unfused": t_fuse < t_pool,
+        # resolution structure
+        "dense_iters": int(dense_iters),
+        "snap_iters": int(snap_iters),
+        "table_iters": int(table_iters),
+        "frontier": frontier,
+        "frontier_frac": frontier / n,
+        # phase-B gather volume (elements gathered by the doubling loops):
+        # dense = iters * n (seed pays 2x: cond re-gathers); frontier =
+        # iters * frontier + one final dense composition gather.
+        "phase_b_gather_seed": 2 * int(dense_iters) * n,
+        "phase_b_gather_unfused": int(dense_iters) * n,
+        "phase_b_gather_fused": int(table_iters) * frontier + n,
+    }
+
+    if end_to_end:
+        from repro.core.pixhomology import pixhomology
+        kw = dict(max_features=min(4096, n), max_candidates=min(16384, n),
+                  merge_impl="boruvka")
+        run_f = functools.partial(pixhomology, phase_a_impl="fused",
+                                  strip_rows=strip_rows, **kw)
+        run_p = functools.partial(pixhomology, phase_a_impl="pooled", **kw)
+        t_ef, d_f = _timeit(run_f, img, repeats=repeats)
+        t_ep, d_p = _timeit(run_p, img, repeats=repeats)
+        np.testing.assert_array_equal(np.asarray(d_f.birth),
+                                      np.asarray(d_p.birth))
+        row["e2e_fused_s"] = t_ef
+        row["e2e_unfused_s"] = t_ep
+        row["e2e_count"] = int(d_f.count)
+        row["e2e_overflow"] = bool(d_f.overflow)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="*", default=[512, 1024])
+    ap.add_argument("--strip-rows", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--deep-sky", action="store_true",
+                    help="add a deep-sky-gradient variant per size (basins "
+                         "spanning the frame: the deep-chain regime)")
+    ap.add_argument("--no-e2e", action="store_true",
+                    help="skip the end-to-end pixhomology timings")
+    ap.add_argument("--out", default=None,
+                    help="output path (default artifacts/BENCH_core.json)")
+    args = ap.parse_args()
+
+    rows = []
+    for size in args.sizes:
+        variants = [False, True] if args.deep_sky else [False]
+        for deep in variants:
+            row = bench_size(size, strip_rows=args.strip_rows,
+                             repeats=args.repeats,
+                             end_to_end=not args.no_e2e, deep_sky=deep)
+            rows.append(row)
+            print(f"{row['name']}: seed={row['stage_seed_s'] * 1e3:.1f}ms "
+                  f"unfused={row['stage_unfused_s'] * 1e3:.1f}ms "
+                  f"fused={row['stage_fused_s'] * 1e3:.1f}ms "
+                  f"({row['fused_speedup_vs_unfused']:.1f}x, "
+                  f"frontier {row['frontier_frac']:.1%}, "
+                  f"gathers {row['phase_b_gather_unfused']:.2e}->"
+                  f"{row['phase_b_gather_fused']:.2e})")
+
+    out_path = Path(args.out) if args.out else ARTIFACTS / "BENCH_core.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rows, indent=2, sort_keys=True))
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,21 @@
 """Core PixHomology algorithm (the paper's primary contribution)."""
 from repro.core.pixhomology import (  # noqa: F401
     Diagram,
+    PhaseA,
     batched_pixhomology,
     exact_candidates,
+    exact_candidates_masked,
+    keyed_steepest_pointers,
     merge_components,
     num_candidates,
     paper_candidates,
+    phase_a,
+    phase_b,
+    phase_c,
     pixhomology,
     reindex_components,
     resolve_labels,
+    resolve_labels_frontier,
     steepest_neighbors,
     total_order_rank,
 )

@@ -14,10 +14,62 @@ processing is bit-identical.
 used to copy-paste: for each pixel in ``x`` it reports, per neighbor slot,
 whether that neighbor is in-bounds and strictly higher under the total
 order, and which basin it belongs to.
+
+``fixed_point_iterate`` is the single pointer-chase loop every label/root
+resolution in the stage graph runs on (whole-image doubling, in-strip and
+in-tile snaps, the condensed frontier/ring tables, union-find lookups) —
+one ``step`` evaluation per iteration, so each doubling round costs one
+gather instead of the two the old cond-recomputes-``m[m]`` pattern paid
+(src/repro/ph/DESIGN.md §Perf PH-3).
 """
 from __future__ import annotations
 
+from typing import Callable
+
+import jax
 import jax.numpy as jnp
+
+
+def neg_inf(dtype) -> jnp.ndarray:
+    """The minimal sentinel of ``dtype`` (stencil fill: never wins a max).
+
+    Single shared implementation — the pooling reference/kernels, the
+    phase-A kernel, the tiled path, and the keyed pointer stage all fill
+    halos through here so the sentinel can never drift between layers.
+    """
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def pos_inf(dtype) -> jnp.ndarray:
+    """The maximal sentinel of ``dtype`` (min-pool fill)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def fixed_point_iterate(step: Callable[[jnp.ndarray], jnp.ndarray],
+                        x0: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Iterate ``x <- step(x)`` until unchanged; one ``step`` per iteration.
+
+    Returns ``(x, n_steps)`` where ``n_steps`` (int32 scalar) counts the
+    ``step`` evaluations executed, including the final one that verifies
+    the fixed point.  The carried ``changed`` flag is computed from the
+    step already taken, so ``step`` (typically a gather like ``m[m]``)
+    runs exactly once per loop iteration.
+    """
+    def cond(state):
+        return state[1]
+
+    def body(state):
+        x, _, k = state
+        x2 = step(x)
+        return x2, jnp.any(x2 != x), k + jnp.int32(1)
+
+    x, _, k = jax.lax.while_loop(
+        cond, body, (x0, jnp.asarray(True), jnp.int32(0)))
+    return x, k
 
 # 8-neighborhood offsets (self excluded), fixed order: every consumer uses
 # the same order so merge processing is bit-identical across layers.

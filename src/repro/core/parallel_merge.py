@@ -31,14 +31,14 @@ tiled path's global merge), so both paths share one bit-tested reduction.
 
 Depth: the scan is O(K) sequential steps with O(1) work; Boruvka is
 O(log C) rounds of O(E) parallel work — on a systolic/vector machine depth
-is what matters (EXPERIMENTS.md §Perf PH-2).
+is what matters (src/repro/ph/DESIGN.md §Perf PH-2).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.grid import higher_neighbor_basins
+from repro.core.grid import fixed_point_iterate, higher_neighbor_basins
 
 
 def candidate_edges(rank_flat, labels_flat, cand_flat, shape,
@@ -109,13 +109,8 @@ def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
     dpos0 = jnp.full(nv, -1, jnp.int32)
 
     def resolve(p):
-        def cond(q):
-            return jnp.any(q[q] != q)
-
-        def body(q):
-            return q[q]
-
-        return jax.lax.while_loop(cond, body, p)
+        q, _ = fixed_point_iterate(lambda r: r[r], p)
+        return q
 
     def round_body(state):
         parent, dval, dpos, _ = state

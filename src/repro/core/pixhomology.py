@@ -5,32 +5,46 @@ they merge into a component with an older (larger) birth (elder rule).  The
 essential class of the global maximum dies at the global minimum (paper's
 "ultimate death point").
 
-Implementation notes (see DESIGN.md §2/§6 for the TPU adaptation rationale):
+The implementation is an explicit **three-stage graph** (see
+``src/repro/ph/DESIGN.md`` §2 for the TPU adaptation rationale); the
+whole-image, batched, sharded, and tiled paths all compose the same stages:
 
-* Total order.  All comparisons use the strict total order on pixels
-  ``(value, flat_index)`` (value primary).  When the paper's precondition
-  holds (no 8-neighbor ties at local maxima) this coincides with the paper;
-  when it does not, the algorithm is still deterministic and agrees exactly
-  with the union-find oracle in ``reference.py`` which uses the same order.
+* **Phase A — pointers + candidate flags** (:func:`phase_a`).  Each pixel
+  gets its steepest-ascent pointer under the strict total order
+  ``(value, flat_index)`` plus the strictly-higher 8-neighbor bitmask.
+  ``phase_a_impl="fused"`` (default) runs the
+  :mod:`repro.kernels.ph_phase_a` kernel — one VMEM pass per
+  ``strip_rows``-row strip that also pointer-chases every pixel to its
+  furthest in-strip ancestor — on TPU when ``use_pallas`` resolves true,
+  and the bit-identical pure-XLA reference elsewhere.
+  ``phase_a_impl="pooled"`` is the unfused baseline: three pooled passes
+  (``arg-maxpool2d`` via :mod:`repro.kernels.maxpool`) and raw pointers.
 
-* Step 1+2 (concave components).  ``arg-maxpool2d`` gives each pixel a pointer
-  to its steepest-ascent neighbor; the paper then iterates ``M[x] <- M[M[x]]``
-  to a fixed point.  We implement this as *pointer doubling* on the flat
-  pointer array inside a ``lax.while_loop`` — O(log depth) iterations instead
-  of the paper's worst case O(n) — see EXPERIMENTS.md §Perf.
+* **Phase B — label resolution** (:func:`phase_b`).  The paper iterates
+  ``M[x] <- M[M[x]]`` to a fixed point; we pointer-double instead —
+  O(log depth) iterations, not the paper's worst case O(n).  On fused
+  phase-A output the doubling runs on a **compacted frontier** of
+  strip-boundary rows and basin roots (:func:`resolve_labels_frontier`):
+  snapped pointers only ever land on roots or the statically-known
+  boundary rows, so each doubling round gathers O(n / strip_rows)
+  entries instead of all n, plus one final dense gather — phase-B gather
+  volume drops from O(n·log depth) to O(frontier·log depth + n)
+  (DESIGN.md §Perf PH-3).  Pooled phase A resolves densely
+  (:func:`resolve_labels`).
 
-* Step 3+4 (edges + distillation).  Two candidate generators:
-  ``candidate_mode="exact"`` keeps pixels whose *higher* 8-neighbors span >= 2
-  distinct basins — provably a superset of all merge points and a subset of
-  the paper's edge set; ``candidate_mode="paper"`` is the paper's literal
-  edge ∧ (local-min ∨ axis-saddle) distillation (kept for fidelity; the axis
-  saddle test can miss merge points on adversarial images — documented in
-  DESIGN.md).
+* **Phase C — merge + diagram** (:func:`phase_c`).  Death-point
+  candidates (steps 3-4, below) are reduced by the sequential elder-rule
+  sweep or the parallel Boruvka forest, the essential class is closed at
+  the global minimum, and the fixed-capacity diagram is emitted.
 
-* Step 5 (merging).  Candidates are processed in descending total order by a
-  fixed-length ``lax.scan`` carrying a union-find parent array (path
-  compression after every step).  This is the paper-faithful sequential merge.
-  A parallel Boruvka variant lives in ``parallel_merge.py``.
+Candidate generators (steps 3-4): ``candidate_mode="exact"`` keeps pixels
+whose *higher* 8-neighbors span >= 2 distinct basins — provably a superset
+of all merge points and a subset of the paper's edge set; on the fused
+path the rank comparisons come pre-packed in phase A's bitmask
+(:func:`exact_candidates_masked`).  ``candidate_mode="paper"`` is the
+paper's literal edge ∧ (local-min ∨ axis-saddle) distillation (kept for
+fidelity; the axis saddle test can miss merge points on adversarial
+images — documented in DESIGN.md §6).
 
 All shapes are static (jit/vmap/shard_map friendly): diagrams are padded to
 ``max_features`` rows and candidate processing to ``max_candidates`` steps,
@@ -44,15 +58,19 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # NEIGHBOR_OFFSETS is re-exported here for back-compat; it lives in
 # repro.core.grid together with the shared neighbor-gather helpers.
 from repro.core.grid import (  # noqa: F401
     NEIGHBOR_OFFSETS,
+    fixed_point_iterate,
     higher_neighbor_basins,
+    neg_inf,
     shift2d,
 )
 from repro.kernels.maxpool import ops as pool_ops
+from repro.kernels.ph_phase_a import ops as phase_a_ops
 
 
 class Diagram(NamedTuple):
@@ -67,6 +85,19 @@ class Diagram(NamedTuple):
     overflow: jnp.ndarray  # () bool: capacity exceeded -> retry with bigger F/K
 
 
+class PhaseA(NamedTuple):
+    """Phase-A artifacts (flat): pointers plus candidate pre-flags.
+
+    ``pointers`` are strip-snapped (fused) or raw steepest-ascent (pooled);
+    ``hi_mask`` is the strictly-higher 8-neighbor bitmask on the fused
+    path and ``None`` on the pooled one (the dense candidate test derives
+    the comparisons from ranks instead).
+    """
+
+    pointers: jnp.ndarray
+    hi_mask: jnp.ndarray | None
+
+
 # ---------------------------------------------------------------------------
 # Total order helpers
 # ---------------------------------------------------------------------------
@@ -79,7 +110,7 @@ def total_order_rank(values_flat: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Steps 1-2: steepest-ascent pointers and pointer-doubling label resolution
+# Phase A: steepest-ascent pointers (+ in-strip snap / candidate flags)
 # ---------------------------------------------------------------------------
 
 def steepest_neighbors(image: jnp.ndarray, *, use_pallas: bool | None = None,
@@ -90,19 +121,106 @@ def steepest_neighbors(image: jnp.ndarray, *, use_pallas: bool | None = None,
     return arg.reshape(-1)
 
 
-def resolve_labels(pointers: jnp.ndarray) -> jnp.ndarray:
+def keyed_steepest_pointers(values2d: jnp.ndarray,
+                            keys2d: jnp.ndarray) -> jnp.ndarray:
+    """Steepest-ascent pointer (local flat id) under the (value, key) total
+    order; self included.  Fill cells (key -1, value -inf) never win.
+
+    This is the shared stage the tiled path instantiates with *global*
+    pixel indices as keys on a halo-padded tile (per-tile order must be
+    isomorphic to the global one), and the generic fallback for any
+    stencil whose tie-break key is not the local flat index.
+    """
+    h, w = values2d.shape
+    flat = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
+    fill_v = neg_inf(values2d.dtype)
+    best_v, best_k, best_l = values2d, keys2d, flat
+    for dr, dc in NEIGHBOR_OFFSETS:
+        v = shift2d(values2d, dr, dc, fill_v)
+        k = shift2d(keys2d, dr, dc, jnp.int32(-1))
+        l = shift2d(flat, dr, dc, jnp.int32(-1))
+        better = (v > best_v) | ((v == best_v) & (k > best_k))
+        best_v = jnp.where(better, v, best_v)
+        best_k = jnp.where(better, k, best_k)
+        best_l = jnp.where(better, l, best_l)
+    return best_l
+
+
+def phase_a(image: jnp.ndarray, *, phase_a_impl: str = "fused",
+            strip_rows: int = 8, use_pallas: bool | None = None,
+            interpret: bool = False) -> PhaseA:
+    """Stage A: per-pixel pointers + candidate flags (paper lines 1-2a).
+
+    ``"fused"`` routes through :mod:`repro.kernels.ph_phase_a` (Pallas on
+    TPU / its bit-identical XLA reference elsewhere, per ``use_pallas``):
+    pointers arrive snapped to in-strip ancestors with the higher-neighbor
+    bitmask.  ``"pooled"`` is the unfused baseline: a pooled argmax pass
+    and raw pointers (flags derived later from ranks).
+    """
+    if phase_a_impl == "fused":
+        ptr, hi_mask = phase_a_ops.fused_phase_a(
+            image, strip_rows=strip_rows, use_pallas=use_pallas,
+            interpret=interpret)
+        return PhaseA(ptr, hi_mask)
+    if phase_a_impl == "pooled":
+        return PhaseA(steepest_neighbors(image, use_pallas=use_pallas,
+                                         interpret=interpret), None)
+    raise ValueError(f"unknown phase_a_impl {phase_a_impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Phase B: label resolution (dense doubling or compacted frontier)
+# ---------------------------------------------------------------------------
+
+def resolve_labels(pointers: jnp.ndarray, *, with_count: bool = False):
     """Pointer-double ``M = M[M]`` to a fixed point (paper lines 2-4).
 
-    Returns labels[i] = flat index of pixel i's local maximum (basin root).
-    Converges in O(log(max basin depth)) iterations.
+    Returns labels[i] = flat index of pixel i's basin root, converging in
+    O(log(max basin depth)) iterations; each iteration is a single
+    whole-array gather (the changed flag rides the carry instead of
+    re-gathering in ``cond`` — DESIGN.md §Perf PH-3).
     """
-    def cond(m):
-        return jnp.any(m[m] != m)
+    m, count = fixed_point_iterate(lambda q: q[q], pointers)
+    return (m, count) if with_count else m
 
-    def body(m):
-        return m[m]
 
-    return jax.lax.while_loop(cond, body, pointers)
+def resolve_labels_frontier(pointers: jnp.ndarray, shape: tuple[int, int],
+                            strip_rows: int, *, with_count: bool = False):
+    """Label resolution on the compacted strip-boundary frontier.
+
+    ``pointers`` must be strip-snapped (fused phase A): every entry is a
+    basin root or a pixel in a statically-known boundary row
+    (:func:`repro.kernels.ph_phase_a.boundary_rows`).  Doubling therefore
+    runs on the O(n / strip_rows) frontier table alone; one final dense
+    gather extends the result to all pixels.  Output is bit-identical to
+    :func:`resolve_labels` on the same (or raw) pointers.
+    """
+    h, w = shape
+    b_rows = phase_a_ops.boundary_rows(h, strip_rows)
+    row_slot_np = np.full(h, -1, np.int32)
+    row_slot_np[b_rows] = np.arange(len(b_rows), dtype=np.int32)
+    row_slot = jnp.asarray(row_slot_np)
+    b_flat = jnp.asarray(
+        (b_rows[:, None].astype(np.int64) * w
+         + np.arange(w, dtype=np.int64)[None, :]).reshape(-1).astype(np.int32))
+
+    def follow(table, q):
+        rs = row_slot[q // w]
+        slot = rs * w + q % w
+        return jnp.where(rs >= 0, table[jnp.clip(slot, 0)], q)
+
+    p0 = pointers[b_flat]
+    table, count = fixed_point_iterate(lambda p: follow(p, p), p0)
+    labels = follow(table, pointers)
+    return (labels, count) if with_count else labels
+
+
+def phase_b(pa: PhaseA, shape: tuple[int, int], *,
+            phase_a_impl: str = "fused", strip_rows: int = 8) -> jnp.ndarray:
+    """Stage B: basin labels from phase-A pointers (paper lines 2-4)."""
+    if phase_a_impl == "fused":
+        return resolve_labels_frontier(pa.pointers, shape, strip_rows)
+    return resolve_labels(pa.pointers)
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +245,26 @@ def exact_candidates(rank2d: jnp.ndarray, labels2d: jnp.ndarray) -> jnp.ndarray:
         nrank = shift2d(rank2d, dr, dc, jnp.int32(-1))
         nlbl = shift2d(labels2d, dr, dc, jnp.int32(-1))
         higher = nrank > rank2d  # border fill -1 is never higher
+        hi_max = jnp.where(higher, jnp.maximum(hi_max, nlbl), hi_max)
+        hi_min = jnp.where(higher, jnp.minimum(hi_min, nlbl), hi_min)
+    return (hi_max >= 0) & (hi_max != hi_min)
+
+
+def exact_candidates_masked(hi_mask2d: jnp.ndarray,
+                            labels2d: jnp.ndarray) -> jnp.ndarray:
+    """:func:`exact_candidates` from phase A's higher-neighbor bitmask.
+
+    Bit j of ``hi_mask2d`` (``NEIGHBOR_OFFSETS`` order) encodes exactly the
+    rank comparison ``rank[nb_j] > rank[self]``, so the result is
+    bit-identical to the rank-based test without re-deriving ranks —
+    the fused path's candidate generator.
+    """
+    no_lbl = jnp.iinfo(jnp.int32).max
+    hi_max = jnp.full(hi_mask2d.shape, -1, jnp.int32)
+    hi_min = jnp.full(hi_mask2d.shape, no_lbl, jnp.int32)
+    for j, (dr, dc) in enumerate(NEIGHBOR_OFFSETS):
+        nlbl = shift2d(labels2d, dr, dc, jnp.int32(-1))
+        higher = (hi_mask2d >> j) & 1 == 1
         hi_max = jnp.where(higher, jnp.maximum(hi_max, nlbl), hi_max)
         hi_min = jnp.where(higher, jnp.minimum(hi_min, nlbl), hi_min)
     return (hi_max >= 0) & (hi_max != hi_min)
@@ -186,18 +324,13 @@ def reindex_components(rank_flat: jnp.ndarray, labels_flat: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Step 5: sequential merge sweep (paper-faithful, fixed shape)
+# Phase C: merge sweep + diagram assembly (paper steps 5-6)
 # ---------------------------------------------------------------------------
 
 def _find_vec(parent: jnp.ndarray, start: jnp.ndarray) -> jnp.ndarray:
     """Vectorized union-find root lookup (parent is fixed during the search)."""
-    def cond(p):
-        return jnp.any(parent[p] != p)
-
-    def body(p):
-        return parent[p]
-
-    return jax.lax.while_loop(cond, body, start)
+    p, _ = fixed_point_iterate(lambda q: parent[q], start)
+    return p
 
 
 def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
@@ -261,69 +394,32 @@ def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
     return dval, dpos, overflow
 
 
-# ---------------------------------------------------------------------------
-# Full algorithm (paper Algorithm 1)
-# ---------------------------------------------------------------------------
+def phase_c(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
+            labels_flat: jnp.ndarray, cand_flat: jnp.ndarray,
+            shape: tuple[int, int], truncate_value=None, *,
+            max_features: int, max_candidates: int,
+            merge_impl: str = "scan") -> Diagram:
+    """Stage C: elder-rule merge + essential class + diagram (steps 5-6).
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("max_features", "max_candidates", "candidate_mode",
-                     "use_pallas", "interpret", "merge_impl"))
-def pixhomology(image: jnp.ndarray, truncate_value=None, *,
-                max_features: int = 256,
-                max_candidates: int = 4096,
-                candidate_mode: str = "exact",
-                use_pallas: bool | None = None,
-                interpret: bool = False,
-                merge_impl: str = "scan") -> Diagram:
-    """0-dim PH of a 2D image under the superlevel filtration (Algorithm 1).
-
-    Returns a fixed-capacity :class:`Diagram`, rows sorted by descending
-    (birth value, birth index); row 0 is the essential class of the global
-    maximum with death at the global minimum.
-
-    ``truncate_value`` (optional, traced): the paper's Variant-2 threshold.
-    Components born below it are dropped, merges below it are skipped, and
-    surviving non-essential components die at the threshold — the diagram
-    truncated at t.  Births/deaths >= t are bit-identical to the untruncated
-    run (tests/test_pipeline.py).
+    ``merge_impl="scan"`` is the paper-faithful sequential sweep;
+    ``"boruvka"`` the parallel merge forest (O(log C) rounds,
+    bit-identical — see ``parallel_merge.py``).
     """
-    if image.ndim != 2:
-        raise ValueError(f"expected 2D image, got shape {image.shape}")
-    h, w = image.shape
+    h, w = shape
     n = h * w
-    vals = image.reshape(-1)
-    rank = total_order_rank(vals)
+    vals = image_flat
+    is_root = labels_flat == jnp.arange(n, dtype=jnp.int32)
 
-    # Steps 1-2: basins via steepest ascent + pointer doubling.
-    pointers = steepest_neighbors(image, use_pallas=use_pallas,
-                                  interpret=interpret)
-    labels = resolve_labels(pointers)
-    is_root = labels == jnp.arange(n, dtype=jnp.int32)
-
-    # Steps 3-4: death-point candidates.
-    rank2d = rank.reshape(h, w)
-    if candidate_mode == "exact":
-        cand = exact_candidates(rank2d, labels.reshape(h, w)).reshape(-1)
-    elif candidate_mode == "paper":
-        comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
-        cand = paper_candidates(rank2d, comp2d, use_pallas=use_pallas,
-                                interpret=interpret).reshape(-1)
-    else:
-        raise ValueError(f"unknown candidate_mode {candidate_mode!r}")
-
-    # Step 5: merge sweep — faithful sequential scan, or the Boruvka
-    # parallel merge forest (beyond-paper; O(log C) rounds, bit-identical).
     if merge_impl == "scan":
         dval, dpos, overflow_k = merge_components(
-            vals, rank, labels, cand, (h, w), max_candidates,
+            vals, rank_flat, labels_flat, cand_flat, (h, w), max_candidates,
             truncate_value=truncate_value)
     elif merge_impl == "boruvka":
         from repro.core import parallel_merge
-        cand_b = cand if truncate_value is None else \
-            cand & (vals >= truncate_value)
+        cand_b = cand_flat if truncate_value is None else \
+            cand_flat & (vals >= truncate_value)
         dval, dpos, overflow_k = parallel_merge.boruvka_merge(
-            vals, rank, labels, cand_b, (h, w), max_candidates)
+            vals, rank_flat, labels_flat, cand_b, (h, w), max_candidates)
     else:
         raise ValueError(f"unknown merge_impl {merge_impl!r}")
 
@@ -335,14 +431,14 @@ def pixhomology(image: jnp.ndarray, truncate_value=None, *,
                          dval)
 
     # Essential class: global maximum dies at the global minimum (paper fig 3).
-    gmax = jnp.argmax(rank)
-    gmin = jnp.argmin(rank)
+    gmax = jnp.argmax(rank_flat)
+    gmin = jnp.argmin(rank_flat)
     dval = dval.at[gmax].set(vals[gmin])
     dpos = dpos.at[gmax].set(gmin)
 
     # Step 6: persistence diagram, descending by birth.
     f = min(max_features, n)
-    root_key = jnp.where(is_root, rank, jnp.int32(-1))
+    root_key = jnp.where(is_root, rank_flat, jnp.int32(-1))
     _, root_pix = jax.lax.top_k(root_key, f)
     row_valid = jnp.arange(f) < jnp.sum(is_root, dtype=jnp.int32)
 
@@ -360,6 +456,75 @@ def pixhomology(image: jnp.ndarray, truncate_value=None, *,
                    jnp.minimum(c, f), n_unmerged, overflow)
 
 
+# ---------------------------------------------------------------------------
+# Full algorithm (paper Algorithm 1): phase_a -> phase_b -> phase_c
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_features", "max_candidates", "candidate_mode",
+                     "use_pallas", "interpret", "merge_impl", "phase_a_impl",
+                     "strip_rows"))
+def pixhomology(image: jnp.ndarray, truncate_value=None, *,
+                max_features: int = 256,
+                max_candidates: int = 4096,
+                candidate_mode: str = "exact",
+                use_pallas: bool | None = None,
+                interpret: bool = False,
+                merge_impl: str = "scan",
+                phase_a_impl: str = "fused",
+                strip_rows: int = 8) -> Diagram:
+    """0-dim PH of a 2D image under the superlevel filtration (Algorithm 1).
+
+    Returns a fixed-capacity :class:`Diagram`, rows sorted by descending
+    (birth value, birth index); row 0 is the essential class of the global
+    maximum with death at the global minimum.
+
+    ``truncate_value`` (optional, traced): the paper's Variant-2 threshold.
+    Components born below it are dropped, merges below it are skipped, and
+    surviving non-essential components die at the threshold — the diagram
+    truncated at t.  Births/deaths >= t are bit-identical to the untruncated
+    run (tests/test_pipeline.py).
+
+    ``phase_a_impl``/``strip_rows`` select the stage implementations (see
+    the module docstring); every combination is bit-identical — only the
+    compiled program changes, which is why the pair is part of the
+    engine's plan key (``PHConfig.stage_signature``).
+    """
+    if image.ndim != 2:
+        raise ValueError(f"expected 2D image, got shape {image.shape}")
+    h, w = image.shape
+    vals = image.reshape(-1)
+    rank = total_order_rank(vals)
+
+    # Stage A: pointers + candidate flags; stage B: basin labels.
+    pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,
+                 use_pallas=use_pallas, interpret=interpret)
+    labels = phase_b(pa, (h, w), phase_a_impl=phase_a_impl,
+                     strip_rows=strip_rows)
+
+    # Steps 3-4: death-point candidates.
+    rank2d = rank.reshape(h, w)
+    if candidate_mode == "exact":
+        if pa.hi_mask is not None:
+            cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
+                                           labels.reshape(h, w)).reshape(-1)
+        else:
+            cand = exact_candidates(rank2d, labels.reshape(h, w)).reshape(-1)
+    elif candidate_mode == "paper":
+        is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
+        comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
+        cand = paper_candidates(rank2d, comp2d, use_pallas=use_pallas,
+                                interpret=interpret).reshape(-1)
+    else:
+        raise ValueError(f"unknown candidate_mode {candidate_mode!r}")
+
+    # Stage C: merge + essential class + diagram.
+    return phase_c(vals, rank, labels, cand, (h, w), truncate_value,
+                   max_features=max_features, max_candidates=max_candidates,
+                   merge_impl=merge_impl)
+
+
 def batched_pixhomology(images: jnp.ndarray, truncate_values=None,
                         **kwargs) -> Diagram:
     """vmap'd PixHomology over a batch (B, H, W) — one executor task each.
@@ -375,22 +540,33 @@ def num_candidates(image: jnp.ndarray,
                    candidate_mode: str = "exact",
                    truncate_value=None, *,
                    use_pallas: bool | None = None,
-                   interpret: bool = False) -> jnp.ndarray:
+                   interpret: bool = False,
+                   phase_a_impl: str = "fused",
+                   strip_rows: int = 8) -> jnp.ndarray:
     """Count death-point candidates (to size ``max_candidates``).
 
-    ``use_pallas``/``interpret`` follow the same semantics as
-    :func:`pixhomology` (and must match it for the count to size the same
-    dispatch); :meth:`repro.ph.PHEngine.num_candidates` forwards its config
+    The stage toggles follow the same semantics as :func:`pixhomology`
+    (and must match it for the count to size the same dispatch);
+    :meth:`repro.ph.PHEngine.num_candidates` forwards its config
     automatically.
     """
     h, w = image.shape
-    vals = image.reshape(-1)
-    rank = total_order_rank(vals)
-    labels = resolve_labels(steepest_neighbors(image, use_pallas=use_pallas,
-                                               interpret=interpret))
+    pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,
+                 use_pallas=use_pallas, interpret=interpret)
+    labels = phase_b(pa, (h, w), phase_a_impl=phase_a_impl,
+                     strip_rows=strip_rows)
+    # The rank argsort is only materialized on the branches that consume
+    # it (this helper runs eagerly, and the argsort dominates large
+    # images — the fused+exact path needs just the phase-A bitmask).
     if candidate_mode == "exact":
-        cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
+        if pa.hi_mask is not None:
+            cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
+                                           labels.reshape(h, w))
+        else:
+            rank = total_order_rank(image.reshape(-1))
+            cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
     else:
+        rank = total_order_rank(image.reshape(-1))
         is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
         comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
         cand = paper_candidates(rank.reshape(h, w), comp2d,

@@ -61,17 +61,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grid import NEIGHBOR_OFFSETS, higher_neighbor_basins, shift2d
+from repro.core.grid import (
+    fixed_point_iterate,
+    higher_neighbor_basins,
+    neg_inf as _neg_inf,
+)
 from repro.core.parallel_merge import boruvka_forest, chain_clique_edges
-from repro.core.pixhomology import Diagram, exact_candidates
+from repro.core.pixhomology import (
+    Diagram,
+    exact_candidates,
+    keyed_steepest_pointers,
+    resolve_labels,
+)
 
 _I32_MAX = np.iinfo(np.int32).max
-
-
-def _neg_inf(dtype):
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(-jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).min, dtype)
 
 
 class TiledDiagram(NamedTuple):
@@ -223,26 +226,18 @@ def load_tile_stacks(provider, grid: tuple[int, int], *,
 # Phase A (per tile): pointers + in-tile label resolution, frozen at halo
 # ---------------------------------------------------------------------------
 
-def _tile_pointers(pvals: jnp.ndarray, pgidx: jnp.ndarray) -> jnp.ndarray:
-    """Steepest-ascent pointer (local flat id) under the (value, global
-    index) total order; self included.  Halo fill (gidx -1) never wins."""
-    ph, pw = pvals.shape
-    flat = jnp.arange(ph * pw, dtype=jnp.int32).reshape(ph, pw)
-    fill_v = _neg_inf(pvals.dtype)
-    best_v, best_g, best_l = pvals, pgidx, flat
-    for dr, dc in NEIGHBOR_OFFSETS:
-        v = shift2d(pvals, dr, dc, fill_v)
-        g = shift2d(pgidx, dr, dc, jnp.int32(-1))
-        l = shift2d(flat, dr, dc, jnp.int32(-1))
-        better = (v > best_v) | ((v == best_v) & (g > best_g))
-        best_v = jnp.where(better, v, best_v)
-        best_g = jnp.where(better, g, best_g)
-        best_l = jnp.where(better, l, best_l)
-    return best_l
-
-
 def tile_phase_a(pvals: jnp.ndarray, pgidx: jnp.ndarray):
-    """Steps 1-2 on one halo-padded tile.
+    """Steps 1-2 on one halo-padded tile — the per-tile instantiation of
+    the core stage graph (``pixhomology.phase_a``/``phase_b`` with tiles
+    as the locality unit instead of row strips).
+
+    Pointers come from the shared :func:`~repro.core.pixhomology.\
+keyed_steepest_pointers` stage keyed by *global* pixel index (per-tile
+    order must be isomorphic to the global total order), and the
+    halo-frozen resolution is the shared
+    :func:`~repro.core.pixhomology.resolve_labels` doubling — exactly the
+    in-strip snap the fused phase-A kernel performs, with the tile halo
+    playing the strip boundary's role.
 
     Returns ``(ptr_owned, ring_gidx, ring_ptr, min_val, min_gidx)``:
     per owned pixel the global index of its in-tile basin root *or* of the
@@ -255,16 +250,9 @@ def tile_phase_a(pvals: jnp.ndarray, pgidx: jnp.ndarray):
     interior = jnp.asarray(_interior_mask(ph, pw))
     flat = jnp.arange(ph * pw, dtype=jnp.int32).reshape(ph, pw)
 
-    ptr_l = _tile_pointers(pvals, pgidx)
+    ptr_l = keyed_steepest_pointers(pvals, pgidx)
     m0 = jnp.where(interior, ptr_l, flat).reshape(-1)   # halo frozen to self
-
-    def cond(m):
-        return jnp.any(m[m] != m)
-
-    def body(m):
-        return m[m]
-
-    m = jax.lax.while_loop(cond, body, m0)
+    m = resolve_labels(m0)
     resolved_g = pgidx.reshape(-1)[m].reshape(ph, pw)
     ptr_owned = resolved_g[1:-1, 1:-1]
 
@@ -298,22 +286,17 @@ def resolve_ring_table(ring_gidx: jnp.ndarray, ring_ptr: jnp.ndarray):
     chain can only leave a tile through a halo pixel, which is a ring pixel
     of the neighboring tile — so pointer doubling on this table alone
     resolves every cross-tile chain to its basin root, in O(log) rounds of
-    O(boundary) work.  Returns ``(sg, sl)``: sorted ring pixel ids and
-    their final global basin labels.
+    O(boundary) work (the tiled twin of the whole-image compacted
+    frontier, ``pixhomology.resolve_labels_frontier``).  Returns
+    ``(sg, sl)``: sorted ring pixel ids and their final global basin
+    labels.
     """
     rg = ring_gidx.reshape(-1)
     rp = ring_ptr.reshape(-1)
     order = jnp.argsort(rg)
     sg = rg[order]
     sp = rp[order]
-
-    def cond(p):
-        return jnp.any(_table_follow(sg, p, p) != p)
-
-    def body(p):
-        return _table_follow(sg, p, p)
-
-    sl = jax.lax.while_loop(cond, body, sp)
+    sl, _ = fixed_point_iterate(lambda p: _table_follow(sg, p, p), sp)
     return sg, sl
 
 

@@ -136,7 +136,7 @@ def filter_threshold(img: np.ndarray, level) -> tuple[float | None,
     merges skipped, survivors truncated at t) — closer to the paper's
     "background pixels excluded from the subsequent analysis" than mutating
     the image would be, and it shortens the sequential merge sweep, which is
-    the actual Variant-2 win on TPU (EXPERIMENTS.md table 1).
+    the actual Variant-2 win on TPU (src/repro/ph/DESIGN.md §Perf).
     """
     factor = FILTER_FACTORS[_level_name(level)]
     if factor is None:

@@ -5,7 +5,7 @@ The paper's PixHomology spends its array time in ``maxpool2d`` /
 single VMEM-resident pass and make the reduction *separable* (vertical then
 horizontal), so each output tile does 4 comparisons/pixel instead of 8.
 
-TPU adaptation (DESIGN.md §2): Pallas BlockSpecs cannot express overlapping
+TPU adaptation (src/repro/ph/DESIGN.md §2): Pallas BlockSpecs cannot express overlapping
 (haloed) windows, so the host wrapper materializes three row-shifted views of
 the (-inf)-padded image (rows r-1, r, r+1).  The kernel then:
 
@@ -19,7 +19,7 @@ the (-inf)-padded image (rows r-1, r, r+1).  The kernel then:
 Cost: 3 HBM reads of the image instead of 1 (the shifted views) — the
 separable VMEM reduction and the fusion of max+argmax into one pass more than
 pay for it versus four independent XLA reduce_window calls (see
-EXPERIMENTS.md §Perf).  Row-block tiling keeps the VMEM working set to
+DESIGN.md §Perf).  Row-block tiling keeps the VMEM working set to
 ~6 * block_rows * W * 4 bytes; W up to ~64k columns fits comfortably in 16 MB
 VMEM with block_rows=8.
 

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.grid import neg_inf as _neg_inf  # noqa: F401  (re-export)
+from repro.core.grid import pos_inf as _pos_inf  # noqa: F401  (re-export)
 from repro.core.grid import shift2d
 
 # (dr, dc) offsets of the 3x3 window, self included.
@@ -24,18 +26,6 @@ OFFSETS = [(-1, -1), (-1, 0), (-1, 1),
 # Deprecated alias kept for one release; the shared util lives in
 # repro.core.grid so PixHomology and the pooling oracle use one shift.
 _shift = shift2d
-
-
-def _neg_inf(dtype) -> jnp.ndarray:
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(-jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).min, dtype)
-
-
-def _pos_inf(dtype) -> jnp.ndarray:
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
 def maxpool3x3(x: jnp.ndarray) -> jnp.ndarray:

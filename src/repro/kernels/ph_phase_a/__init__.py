@@ -1,0 +1,11 @@
+"""Fused PixHomology phase-A kernel (pointers + in-strip snap + flags).
+
+``ops.fused_phase_a`` is the public entry point; ``ref.py`` is the pure-XLA
+oracle the Pallas kernel (``kernel.py``) must match bit-exactly, and the
+backend the CPU path runs.  See ``src/repro/ph/DESIGN.md`` §2 for the
+stage-graph contract this kernel implements.
+"""
+from repro.kernels.ph_phase_a.ops import (  # noqa: F401
+    boundary_rows,
+    fused_phase_a,
+)

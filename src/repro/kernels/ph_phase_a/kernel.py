@@ -1,0 +1,137 @@
+"""Pallas TPU kernel for the fused PixHomology phase A.
+
+One VMEM pass per ``strip_rows``-row strip replaces what the pooled stage
+pipeline spends three HBM round trips plus the first ~log2(strip area)
+whole-image doubling iterations on (src/repro/ph/DESIGN.md §2/§Perf):
+
+  1. load three row-shifted planes of the (-inf)-padded image (the same
+     halo trick as the maxpool kernel: BlockSpecs cannot express
+     overlapping windows, so rows r-1 / r / r+1 arrive as separate
+     BlockSpec-tiled inputs, double-buffered by the Pallas pipeline);
+  2. reduce the 3x3 window to the steepest-ascent pointer with full
+     (value, row, col) total-order tie-breaking, masking out-of-image
+     lanes exactly (ref.py's fill index -1 can never win — unlike the
+     maxpool kernel this holds even for images containing the fill value);
+  3. pointer-chase **inside the strip**: doubling on the strip-local
+     pointer array, entirely in VMEM, until every pixel is snapped to its
+     furthest in-strip ancestor (escape targets frozen), then one
+     half-hop so emitted pointers land on basin roots or boundary rows of
+     adjacent strips — the invariant phase B's compacted frontier needs;
+  4. emit the strictly-higher 8-neighbor bitmask (basin-candidate flags)
+     from the planes already resident in VMEM.
+
+VMEM working set: 3 value planes of (strip_rows, W+2) plus ~6 int32
+(strip_rows, W) temporaries — ~56 KB per strip at strip_rows=8, W=1024,
+f32; W up to ~32k columns fits 16 MB VMEM.  The in-kernel chase is a
+1D gather over the strip-local flat array; rows are padded to a multiple
+of ``strip_rows`` with -inf (pad pixels self-root, so the chase cannot
+escape into them, and the host wrapper slices them off).
+
+Caveat (CPU-only CI): tests pin this kernel down bit-exactly in
+*interpret* mode; the Mosaic lowering of the data-dependent
+``while_loop`` + dynamic 1D gather is not exercised here (no TPU in the
+container).  If a given jaxlib's Mosaic rejects it, the stage graph
+degrades cleanly: ``use_pallas=False`` keeps the fused stage semantics
+on the bit-identical XLA twin (``ref.phase_a``), and
+``phase_a_impl="pooled"`` is the unfused fallback — both produce
+identical diagrams (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.grid import NEIGHBOR_OFFSETS, fixed_point_iterate
+from repro.kernels.maxpool.kernel import _pad_rows, _row_shifted_planes
+from repro.kernels.maxpool.ref import _neg_inf
+
+
+def _phase_a_kernel(r0_ref, r1_ref, r2_ref, ptr_ref, mask_ref, *,
+                    height: int, width: int, strip_rows: int):
+    i = pl.program_id(0)
+    s, w = strip_rows, width
+    planes = (r0_ref[...], r1_ref[...], r2_ref[...])   # (S, W+2) each
+    x = planes[1][:, 1:1 + w]                          # self values
+
+    lr = jax.lax.broadcasted_iota(jnp.int32, (s, w), 0)  # row within strip
+    cc = jax.lax.broadcasted_iota(jnp.int32, (s, w), 1)  # column
+    grow = i * jnp.int32(s) + lr                         # global row
+
+    # --- 3x3 argmax under (value, row, col), out-of-image never wins ---
+    best_v = x
+    best_dr = jnp.ones((s, w), jnp.int32)   # plane index: 1 = self row
+    best_dc = jnp.ones((s, w), jnp.int32)
+    for dr in (0, 1, 2):
+        for dc in (0, 1, 2):
+            if (dr, dc) == (1, 1):
+                continue
+            v = planes[dr][:, dc:dc + w]
+            inb = ((grow + (dr - 1) >= 0) & (grow + (dr - 1) < height)
+                   & (cc + (dc - 1) >= 0) & (cc + (dc - 1) < w))
+            key_gt = ((jnp.int32(dr) > best_dr)
+                      | ((jnp.int32(dr) == best_dr)
+                         & (jnp.int32(dc) > best_dc)))
+            take = inb & ((v > best_v) | ((v == best_v) & key_gt))
+            best_v = jnp.where(take, v, best_v)
+            best_dr = jnp.where(take, jnp.int32(dr), best_dr)
+            best_dc = jnp.where(take, jnp.int32(dc), best_dc)
+
+    # --- in-strip snap: doubling on the strip-local pointer array ---
+    tr = lr + best_dr - 1                 # target row within strip
+    tc = cc + best_dc - 1                 # target column (in-image by mask)
+    esc = (tr < 0) | (tr >= s)            # hop leaves the strip
+    lid = lr * w + cc
+    m0 = jnp.where(esc, lid, tr * w + tc).reshape(-1)
+    m, _ = fixed_point_iterate(lambda q: q[q], m0)
+
+    # Half-hop: emitted pointers are roots or boundary-row pixels of the
+    # adjacent strips, in global flat coordinates.
+    tgt_g = ((grow + best_dr - 1) * jnp.int32(w) + tc).reshape(-1)
+    gid = (grow * jnp.int32(w) + cc).reshape(-1)
+    escf = esc.reshape(-1)
+    ptr = jnp.where(escf[m], tgt_g[m], gid[m])
+    ptr_ref[...] = ptr.reshape(s, w)
+
+    # --- strictly-higher 8-neighbor bitmask (basin-candidate flags) ---
+    mask = jnp.zeros((s, w), jnp.int32)
+    for j, (dr, dc) in enumerate(NEIGHBOR_OFFSETS):
+        v = planes[dr + 1][:, dc + 1:dc + 1 + w]
+        inb = ((grow + dr >= 0) & (grow + dr < height)
+               & (cc + dc >= 0) & (cc + dc < w))
+        higher = v > x
+        if (dr, dc) > (0, 0):             # flat-index tie-break is static
+            higher = higher | (v == x)
+        mask = mask | jnp.where(inb & higher, jnp.int32(1 << j),
+                                jnp.int32(0))
+    mask_ref[...] = mask
+
+
+@functools.partial(jax.jit, static_argnames=("strip_rows", "interpret"))
+def phase_a(image: jnp.ndarray, *, strip_rows: int = 8,
+            interpret: bool = False):
+    """Fused phase A; bit-identical to ``ref.phase_a`` (flat int32 pair)."""
+    h, w = image.shape
+    s = max(1, min(strip_rows, h))
+    hp = -(-h // s) * s                    # ceil to a strip multiple
+    fill = _neg_inf(image.dtype)
+
+    r0, r1, r2 = _row_shifted_planes(image, fill)
+    r0, r1, r2 = (_pad_rows(p, hp - h, fill) for p in (r0, r1, r2))
+
+    kernel = functools.partial(_phase_a_kernel, height=h, width=w,
+                               strip_rows=s)
+    in_spec = pl.BlockSpec((s, w + 2), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((s, w), lambda i: (i, 0))
+    ptr, mask = pl.pallas_call(
+        kernel,
+        grid=(hp // s,),
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((hp, w), jnp.int32),
+                   jax.ShapeDtypeStruct((hp, w), jnp.int32)],
+        interpret=interpret,
+    )(r0, r1, r2)
+    return ptr[:h].reshape(-1), mask[:h].reshape(-1)

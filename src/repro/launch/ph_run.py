@@ -47,6 +47,13 @@ def main():
     ap.add_argument("--max-candidates", type=int, default=32768)
     ap.add_argument("--candidate-mode", choices=["exact", "paper"])
     ap.add_argument("--merge-impl", choices=["scan", "boruvka"])
+    ap.add_argument("--phase-a-impl", dest="phase_a_impl",
+                    choices=["fused", "pooled"],
+                    help="stage-A implementation: fused strip kernel "
+                         "(+compacted-frontier phase B) or the unfused "
+                         "pooled baseline")
+    ap.add_argument("--strip-rows", dest="strip_rows", type=int,
+                    help="fused phase-A strip height (Pallas block rows)")
     ap.add_argument("--no-regrow", action="store_true",
                     help="surface overflow instead of auto-regrowing")
     ap.add_argument("--tile-grid", dest="tile_grid", metavar="RxC",

@@ -15,6 +15,7 @@ from typing import Any
 
 CANDIDATE_MODES = ("exact", "paper")
 MERGE_IMPLS = ("scan", "boruvka")
+PHASE_A_IMPLS = ("fused", "pooled")
 DTYPES = (None, "float32", "float64", "int32", "bfloat16")
 BUCKET_ROUNDINGS = ("exact", "pow2")
 
@@ -100,9 +101,19 @@ class PHConfig:
     # Diagram / merge-sweep capacities (static shapes; padded).
     max_features: int = 8192
     max_candidates: int = 32768
-    # Algorithm variants.
+    # Algorithm variants / stage implementations (the stage graph: phase A
+    # pointers+flags, phase B label resolution, phase C merge — every
+    # combination is bit-identical, only the compiled program changes).
     candidate_mode: str = "exact"          # "exact" | "paper"
     merge_impl: str = "scan"               # "scan" | "boruvka"
+    # phase_a_impl "fused": the repro.kernels.ph_phase_a kernel (Pallas on
+    # TPU per use_pallas, its XLA reference elsewhere) + compacted-frontier
+    # phase B.  "pooled": the unfused three-pooled-pass baseline + dense
+    # whole-image doubling.
+    phase_a_impl: str = "fused"            # "fused" | "pooled"
+    # Strip height of the fused phase-A kernel (= its Pallas block rows and
+    # the frontier compaction factor: the frontier is ~2/strip_rows of n).
+    strip_rows: int = 8
     filter_level: FilterLevel = FilterLevel.VANILLA
     # Dtype policy: cast inputs before compute (None = keep input dtype).
     dtype: str | None = None
@@ -145,6 +156,12 @@ class PHConfig:
         if self.merge_impl not in MERGE_IMPLS:
             raise ValueError(f"merge_impl must be one of {MERGE_IMPLS}, "
                              f"got {self.merge_impl!r}")
+        if self.phase_a_impl not in PHASE_A_IMPLS:
+            raise ValueError(f"phase_a_impl must be one of {PHASE_A_IMPLS}, "
+                             f"got {self.phase_a_impl!r}")
+        if not isinstance(self.strip_rows, int) or self.strip_rows < 1:
+            raise ValueError(f"strip_rows must be a positive int, "
+                             f"got {self.strip_rows!r}")
         if self.dtype not in DTYPES:
             raise ValueError(f"dtype must be one of {DTYPES}, "
                              f"got {self.dtype!r}")
@@ -176,19 +193,34 @@ class PHConfig:
     def replace(self, **changes) -> "PHConfig":
         return dataclasses.replace(self, **changes)
 
+    def stage_signature(self) -> tuple:
+        """The stage-graph implementation choice, one tuple per stage.
+
+        Phase A (pointer/flag generation + its strip height and backend),
+        phase B (label resolution follows phase A: compacted frontier for
+        "fused", dense doubling for "pooled"), phase C (merge reduction).
+        Every signature computes bit-identical diagrams; the signature
+        keys *compiled programs*, so it is embedded in :meth:`plan_key`.
+        """
+        return (("a", self.phase_a_impl, self.strip_rows, self.use_pallas,
+                 self.interpret),
+                ("b", "frontier" if self.phase_a_impl == "fused"
+                 else "dense", self.candidate_mode),
+                ("c", self.merge_impl))
+
     def plan_key(self) -> tuple:
         """The config fields that affect *compiled executables*.
 
         Regrow policy, filter level, and ``prefetch_rounds`` are host-side
         decisions and are deliberately excluded (plan caches are
         per-:class:`PHEngine`, so share one engine to reuse plans across
-        those knobs).  ``bucket_rounding`` is included — it decides which
-        padded batch shapes get compiled.  Capacities are passed separately
-        by the engine (regrow re-dispatches at larger capacities under the
-        same config).
+        those knobs).  The :meth:`stage_signature` is included — it selects
+        the compiled stage programs; ``bucket_rounding`` is included — it
+        decides which padded batch shapes get compiled.  Capacities are
+        passed separately by the engine (regrow re-dispatches at larger
+        capacities under the same config).
         """
-        return (self.candidate_mode, self.merge_impl, self.dtype,
-                self.use_pallas, self.interpret, self.bucket_rounding,
+        return (self.stage_signature(), self.dtype, self.bucket_rounding,
                 self.tile.plan_fields() if self.tile is not None else None)
 
     # -- construction / serialization -------------------------------------
@@ -198,14 +230,16 @@ class PHConfig:
         """Build from an argparse ``Namespace`` (or any attribute bag).
 
         Recognized attributes (all optional): ``max_features``,
-        ``max_candidates``, ``candidate_mode``, ``merge_impl``, ``filter``
-        or ``filter_level``, ``dtype``, ``use_pallas``, ``interpret``,
+        ``max_candidates``, ``candidate_mode``, ``merge_impl``,
+        ``phase_a_impl``, ``strip_rows``, ``filter`` or ``filter_level``,
+        ``dtype``, ``use_pallas``, ``interpret``,
         ``no_regrow``/``auto_regrow``, ``max_regrows``,
         ``bucket_rounding``, ``prefetch_rounds``/``no_prefetch``.
         """
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
-                     "merge_impl", "dtype", "use_pallas", "interpret",
+                     "merge_impl", "phase_a_impl", "strip_rows", "dtype",
+                     "use_pallas", "interpret",
                      "max_regrows", "auto_regrow", "regrow_factor",
                      "regrow_features_ceiling", "regrow_candidates_ceiling",
                      "bucket_rounding", "prefetch_rounds"):

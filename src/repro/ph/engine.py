@@ -140,10 +140,15 @@ class PHEngine:
         }
 
     def _ph_kwargs(self, mf: int, mc: int) -> dict:
+        """Static kwargs of one compiled stage-graph program: capacities
+        plus the config's stage signature knobs (phase A impl/strip rows,
+        candidate mode, merge impl, backend toggles)."""
         cfg = self.config
         return dict(max_features=mf, max_candidates=mc,
                     candidate_mode=cfg.candidate_mode,
                     merge_impl=cfg.merge_impl,
+                    phase_a_impl=cfg.phase_a_impl,
+                    strip_rows=cfg.strip_rows,
                     use_pallas=cfg.use_pallas, interpret=cfg.interpret)
 
     def _local_plan(self, kind: str, shape, dtype, mf: int, mc: int,
@@ -174,7 +179,7 @@ class PHEngine:
         Per-image work is embarrassingly parallel, so it is pinned inside
         shard_map — XLA's sharding propagation otherwise replicates the
         merge-scan carries and emits ~70 TB of all-gathers per batch
-        (EXPERIMENTS.md §Perf iteration PH-1: collective 1407 s -> ~0).
+        (src/repro/ph/DESIGN.md §Perf PH-1: collective 1407 s -> ~0).
         """
         key = ("sharded", ctx, shape, str(dtype), mf, mc,
                self.config.plan_key())
@@ -411,7 +416,8 @@ class PHEngine:
             truncate_value = self._auto_threshold(image)
         return int(core_num_candidates(
             x, cfg.candidate_mode, truncate_value,
-            use_pallas=cfg.use_pallas, interpret=cfg.interpret))
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+            phase_a_impl=cfg.phase_a_impl, strip_rows=cfg.strip_rows))
 
     def should_tile(self, n_pixels: int) -> bool:
         """True when the config routes an ``n_pixels`` image through the

@@ -1,6 +1,6 @@
 """Workload partitioning strategies (paper §5.2.1 Variant 3), shape-aware.
 
-Spark semantics -> SPMD adaptation (DESIGN.md §2): executors are mesh
+Spark semantics -> SPMD adaptation (src/repro/ph/DESIGN.md §5): executors are mesh
 devices and work proceeds in synchronized *rounds* (one image per executor
 per round).  A strategy turns (image ids, cost estimates, m executors) into
 per-executor queues; the driver zips queues into rounds.  Makespan under

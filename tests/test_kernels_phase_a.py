@@ -1,0 +1,183 @@
+"""Fused phase-A kernel: interpret-mode parity with the XLA reference.
+
+The Pallas kernel and ``ref.py`` must agree bit-for-bit on pointers AND
+the higher-neighbor bitmask — across dtypes, tie-heavy images, and
+non-divisible strip heights — and the snapped pointers must satisfy the
+frontier invariant (every non-root pointer lands in a strip boundary
+row).  The interpret-mode cases here are the phase-A smoke tier-1 CI runs
+on every push (this container is CPU-only, like CI).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    diagram_to_array,
+    exact_candidates,
+    exact_candidates_masked,
+    persistence_oracle,
+    pixhomology,
+    resolve_labels,
+    resolve_labels_frontier,
+    steepest_neighbors,
+    total_order_rank,
+)
+from repro.kernels.ph_phase_a import boundary_rows, fused_phase_a
+from repro.kernels.ph_phase_a import kernel as pha_kernel
+from repro.kernels.ph_phase_a import ref as pha_ref
+
+
+def assert_kernel_matches_ref(img: np.ndarray, strip_rows: int):
+    x = jnp.asarray(img)
+    p_ref, m_ref = pha_ref.phase_a(x, strip_rows=strip_rows)
+    p_ker, m_ker = pha_kernel.phase_a(x, strip_rows=strip_rows,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_ker),
+                                  err_msg=f"ptr strip_rows={strip_rows}")
+    np.testing.assert_array_equal(np.asarray(m_ref), np.asarray(m_ker),
+                                  err_msg=f"mask strip_rows={strip_rows}")
+    return np.asarray(p_ref), np.asarray(m_ref)
+
+
+# ---------------------------------------------------------------------------
+# Kernel (interpret) vs XLA reference parity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([(8, 8), (13, 9), (12, 16), (7, 5)]),
+       st.sampled_from([1, 3, 4, 8, 32]),
+       st.integers(0, 2 ** 31 - 1))
+def test_kernel_parity_gaussian(shape, strip_rows, seed):
+    img = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    assert_kernel_matches_ref(img, strip_rows)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([(9, 7), (12, 12)]), st.sampled_from([2, 5, 8]),
+       st.integers(0, 2 ** 31 - 1), st.integers(2, 4))
+def test_kernel_parity_heavy_ties(shape, strip_rows, seed, levels):
+    """Tiny value range => massive ties; the static per-offset index
+    tie-break must agree with ref.py's (value, flat) order exactly."""
+    img = np.random.default_rng(seed).integers(
+        0, levels, size=shape).astype(np.float32)
+    assert_kernel_matches_ref(img, strip_rows)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, jnp.bfloat16])
+def test_kernel_parity_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    img = rng.integers(0, 40, size=(11, 13)).astype(np.float32)
+    img = jnp.asarray(img).astype(dtype)
+    assert_kernel_matches_ref(np.asarray(img), strip_rows=4)
+
+
+def test_kernel_parity_nondivisible_strips():
+    """H % strip_rows != 0: the padded rows must not perturb real pixels."""
+    rng = np.random.default_rng(7)
+    for h, s in [(13, 8), (17, 4), (9, 5), (3, 2)]:
+        img = rng.normal(size=(h, 11)).astype(np.float32)
+        assert_kernel_matches_ref(img, s)
+
+
+def test_kernel_parity_degenerate_shapes():
+    rng = np.random.default_rng(8)
+    for shape in [(1, 1), (1, 9), (9, 1), (2, 2)]:
+        img = rng.normal(size=shape).astype(np.float32)
+        for s in (1, 4, 64):
+            assert_kernel_matches_ref(img, s)
+
+
+def test_phase_a_interpret_smoke():
+    """The tier-1 CI smoke: full fused pixhomology through the Pallas
+    kernel in interpret mode stays oracle-equal."""
+    img = np.random.default_rng(0).normal(size=(12, 10)).astype(np.float32)
+    d = pixhomology(jnp.asarray(img), max_features=120, max_candidates=120,
+                    use_pallas=True, interpret=True)
+    assert not bool(d.overflow)
+    np.testing.assert_array_equal(diagram_to_array(d),
+                                  persistence_oracle(img))
+
+
+# ---------------------------------------------------------------------------
+# Snapped-pointer invariant + frontier resolution equivalence
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([(16, 12), (13, 9), (8, 24)]),
+       st.sampled_from([1, 4, 8, 16]),
+       st.integers(0, 2 ** 31 - 1))
+def test_snap_invariant_and_frontier_equivalence(shape, strip_rows, seed):
+    """Every snapped pointer is a basin root or lives in a boundary row,
+    and frontier resolution equals dense whole-image doubling bit-for-bit.
+    """
+    h, w = shape
+    img = jnp.asarray(np.random.default_rng(seed).normal(
+        size=shape).astype(np.float32))
+    ptr, _ = fused_phase_a(img, strip_rows=strip_rows, use_pallas=False)
+    ptr_np = np.asarray(ptr)
+
+    raw = steepest_neighbors(img)
+    roots = np.flatnonzero(np.asarray(raw) == np.arange(h * w))
+    b_rows = set(boundary_rows(h, strip_rows).tolist())
+    for tgt in np.unique(ptr_np):
+        assert tgt in roots or (tgt // w) in b_rows
+
+    dense = np.asarray(resolve_labels(raw))
+    frontier = np.asarray(resolve_labels_frontier(ptr, (h, w), strip_rows))
+    np.testing.assert_array_equal(dense, frontier)
+
+
+def test_boundary_rows_static_structure():
+    np.testing.assert_array_equal(boundary_rows(12, 4),
+                                  [0, 3, 4, 7, 8, 11])
+    np.testing.assert_array_equal(boundary_rows(13, 4),
+                                  [0, 3, 4, 7, 8, 11, 12])
+    np.testing.assert_array_equal(boundary_rows(5, 8), [0, 4])
+    np.testing.assert_array_equal(boundary_rows(1, 1), [0])
+    np.testing.assert_array_equal(boundary_rows(4, 1), [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Masked candidate generator == rank-based generator
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([(10, 10), (13, 7)]), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["gauss", "ties"]))
+def test_masked_candidates_match_rank_based(shape, seed, kind):
+    rng = np.random.default_rng(seed)
+    if kind == "gauss":
+        img = rng.normal(size=shape).astype(np.float32)
+    else:
+        img = rng.integers(0, 3, size=shape).astype(np.float32)
+    x = jnp.asarray(img)
+    h, w = shape
+    rank = total_order_rank(x.reshape(-1))
+    labels = resolve_labels(steepest_neighbors(x))
+    _, mask = fused_phase_a(x, strip_rows=4, use_pallas=False)
+    want = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
+    got = exact_candidates_masked(mask.reshape(h, w), labels.reshape(h, w))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Fused pipeline == pooled pipeline == oracle (stage interchangeability)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([(8, 8), (13, 9), (16, 5)]),
+       st.sampled_from([1, 4, 8]),
+       st.integers(0, 2 ** 31 - 1))
+def test_fused_pixhomology_matches_pooled_and_oracle(shape, strip_rows,
+                                                     seed):
+    img = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    h, w = shape
+    kw = dict(max_features=h * w, max_candidates=h * w)
+    fused = pixhomology(jnp.asarray(img), phase_a_impl="fused",
+                        strip_rows=strip_rows, **kw)
+    pooled = pixhomology(jnp.asarray(img), phase_a_impl="pooled", **kw)
+    for a, b in zip(fused, pooled):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(diagram_to_array(fused),
+                                  persistence_oracle(img))

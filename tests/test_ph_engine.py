@@ -67,6 +67,43 @@ def test_config_is_hashable_plan_key_ignores_regrow_policy():
     assert a.plan_key() == b.plan_key()
 
 
+def test_config_stage_signature_keys_compiled_programs():
+    with pytest.raises(ValueError):
+        PHConfig(phase_a_impl="bogus")
+    with pytest.raises(ValueError):
+        PHConfig(strip_rows=0)
+    # the stage signature selects compiled stage programs -> in the plan key
+    assert PHConfig().plan_key() != \
+        PHConfig(phase_a_impl="pooled").plan_key()
+    assert PHConfig().plan_key() != PHConfig(strip_rows=16).plan_key()
+    sig = PHConfig(phase_a_impl="fused", strip_rows=4).stage_signature()
+    assert ("a", "fused", 4, None, False) in sig
+    assert any(s[0] == "b" and "frontier" in s for s in sig)
+    # pooled phase A resolves densely; fused on the compacted frontier
+    assert any("dense" in s for s in
+               PHConfig(phase_a_impl="pooled").stage_signature())
+    cfg = PHConfig(phase_a_impl="pooled", strip_rows=32)
+    assert PHConfig.from_json(cfg.to_json()) == cfg
+
+    import argparse
+    ns = argparse.Namespace(phase_a_impl="pooled", strip_rows=16)
+    got = PHConfig.from_flags(ns)
+    assert got.phase_a_impl == "pooled" and got.strip_rows == 16
+
+
+def test_engine_stage_impls_agree_and_cache_separately():
+    img = _bumpy(6, (12, 12))
+    fused = PHEngine(PHConfig(max_features=256, max_candidates=256,
+                              strip_rows=4))
+    pooled = PHEngine(PHConfig(max_features=256, max_candidates=256,
+                               phase_a_impl="pooled"))
+    np.testing.assert_array_equal(fused.run(img).to_array(),
+                                  pooled.run(img).to_array())
+    np.testing.assert_array_equal(fused.run(img).to_array(),
+                                  persistence_oracle(img))
+    assert fused.num_candidates(img) == pooled.num_candidates(img)
+
+
 def test_config_bucket_and_prefetch_knobs():
     with pytest.raises(ValueError):
         PHConfig(bucket_rounding="pow3")

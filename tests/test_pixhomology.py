@@ -168,3 +168,45 @@ def test_jit_cache_stable_across_shapes():
     for shape in [(5, 9), (9, 5), (7, 7)]:
         img = np.random.default_rng(0).normal(size=shape).astype(np.float32)
         np.testing.assert_array_equal(run_exact(img), persistence_oracle(img))
+
+
+# ---------------------------------------------------------------------------
+# Stage graph: fused and pooled phase A are interchangeable implementations
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 14), st.integers(1, 14), st.integers(0, 2 ** 31 - 1))
+def test_pooled_stage_matches_oracle(h, w, seed):
+    """The unfused baseline stage pipeline stays oracle-exact (the suite's
+    other oracle tests run the fused default)."""
+    img = np.random.default_rng(seed).normal(size=(h, w)).astype(np.float32)
+    d = pixhomology(jnp.asarray(img), max_features=h * w,
+                    max_candidates=h * w, phase_a_impl="pooled")
+    np.testing.assert_array_equal(diagram_to_array(d),
+                                  persistence_oracle(img))
+
+
+def test_fused_stage_with_boruvka_and_truncation():
+    """Stage choices compose: fused phase A x Boruvka merge x Variant-2
+    truncation must all agree with the pooled/scan reference."""
+    img = np.random.default_rng(11).normal(size=(14, 10)).astype(np.float32)
+    for tv in (None, 0.2):
+        want = pixhomology(jnp.asarray(img), tv, max_features=140,
+                           max_candidates=140, phase_a_impl="pooled",
+                           merge_impl="scan")
+        got = pixhomology(jnp.asarray(img), tv, max_features=140,
+                          max_candidates=140, phase_a_impl="fused",
+                          strip_rows=4, merge_impl="boruvka")
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_num_candidates_agrees_across_stage_impls():
+    img = jnp.asarray(np.random.default_rng(3).normal(
+        size=(12, 12)).astype(np.float32))
+    k_fused = int(num_candidates(img, phase_a_impl="fused", strip_rows=4))
+    k_pooled = int(num_candidates(img, phase_a_impl="pooled"))
+    assert k_fused == k_pooled > 0
+    t = float(np.asarray(img).mean())
+    assert int(num_candidates(img, truncate_value=t)) == \
+        int(num_candidates(img, truncate_value=t, phase_a_impl="pooled"))

@@ -74,6 +74,28 @@ def test_tiled_int_dtype():
     assert_tiled_equal(img, (3, 2))
 
 
+def test_tiled_matches_fused_kernel_whole_image():
+    """The tiled path (shared stages: keyed_steepest_pointers +
+    resolve_labels with the halo frozen) must equal the whole-image fused
+    phase-A kernel route, including through the Pallas interpret backend.
+    """
+    import jax.numpy as jnp
+    from repro.core.tiling import TiledDiagram, tiled_pixhomology
+    img = np.random.default_rng(13).normal(size=(12, 12)).astype(np.float32)
+    whole = pixhomology(jnp.asarray(img), max_features=144,
+                        max_candidates=144, phase_a_impl="fused",
+                        strip_rows=4, use_pallas=True, interpret=True)
+    td = tiled_pixhomology(jnp.asarray(img), grid=(3, 3), max_features=144,
+                           tile_max_features=144, tile_max_candidates=144)
+    assert isinstance(td, TiledDiagram)
+    for field in whole._fields:
+        if field == "overflow":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(whole, field)),
+            np.asarray(getattr(td.diagram, field)), err_msg=field)
+
+
 # ---------------------------------------------------------------------------
 # Basins and merge saddles spanning 3+ tiles
 # ---------------------------------------------------------------------------
