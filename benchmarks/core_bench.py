@@ -20,6 +20,14 @@ stage numbers cannot oversell), frontier sizes, doubling-iteration counts,
 and phase-B gather volumes (the O(n·log depth) -> O(frontier·log depth)
 reduction from src/repro/ph/DESIGN.md §2).
 
+Phase C (rank-free merge keys): every row additionally times the phase-C
+stage and the key materialization under ``merge_keys="packed"`` (bit-cast
+int64 keys, candidate compaction) vs ``"rank"`` (the full-image stable
+argsort), and audits the compiled HLO of both phase-C programs for sort
+ops — ``full_image_sorts_packed`` must be 0: the packed path contains no
+sort whose operand spans all n pixels (its only sorts order the compact
+candidate/root buffers).  CI asserts exactly that on the smoke artifact.
+
   PYTHONPATH=src python -m benchmarks.core_bench --sizes 512 1024 \
       --out BENCH_core.json
 
@@ -32,6 +40,7 @@ from __future__ import annotations
 import argparse
 import functools
 import json
+import re
 import time
 from pathlib import Path
 
@@ -40,6 +49,28 @@ import jax.numpy as jnp
 import numpy as np
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+_SHAPE_DIMS = re.compile(r"\[(\d+(?:,\d+)*)\]")
+
+
+def _sort_audit(hlo_text: str, n: int) -> tuple[int, int]:
+    """(total sort ops, full-image sorts) in one compiled HLO module.
+
+    XLA sorts along the trailing dimension (that is where jax lowers
+    ``argsort``/``top_k``), so a sort whose trailing extent reaches the
+    pixel count n orders the whole image — the rank path's argsorts and
+    its full-array top_k selections.  The packed path's tournament
+    selections sort 2k-wide blocks and must report zero of them.
+    """
+    total = full = 0
+    for line in hlo_text.splitlines():
+        if " sort(" not in line:
+            continue
+        total += 1
+        trailing = [int(m.split(",")[-1]) for m in _SHAPE_DIMS.findall(line)]
+        if trailing and max(trailing) >= n:
+            full += 1
+    return total, full
 
 
 def _timeit(fn, *args, repeats: int = 3):
@@ -103,6 +134,114 @@ def _stage_fns(shape: tuple[int, int], strip_rows: int):
     return seed, pooled, fused
 
 
+def _phase_c_fns(shape: tuple[int, int], mf: int, mc: int):
+    """Jitted phase-C programs (key materialization + merge + diagram) for
+    the two key encodings, taking precomputed labels/candidates so the
+    timing isolates exactly the stage the packed keys change."""
+    from repro.core.pixhomology import phase_c, total_order_keys
+    h, w = shape
+
+    def run(vals, labels, cand, tv, merge_keys):
+        key = total_order_keys(vals, merge_keys)
+        return phase_c(vals, key, labels, cand, (h, w), tv,
+                       max_features=mf, max_candidates=mc,
+                       merge_impl="boruvka")
+
+    return (jax.jit(functools.partial(run, merge_keys="rank")),
+            jax.jit(functools.partial(run, merge_keys="packed")))
+
+
+def bench_merge_keys(img, *, strip_rows: int, repeats: int,
+                     end_to_end: bool) -> dict:
+    """Packed-vs-rank phase C: stage + e2e times and the HLO sort audit.
+
+    Runs under the Variant-2 ``filter_std`` threshold — the pipeline's
+    production regime, where candidates/roots are a small fraction of n
+    and capacity buffers are genuinely sub-image-sized (unfiltered astro
+    noise makes ~0.6n pixels candidates, at which point a k-candidate
+    selection is a full-image sort for any encoding)."""
+    from repro.core import packed_keys
+    from repro.core.pixhomology import (
+        exact_candidates_masked,
+        phase_a,
+        phase_b,
+        pixhomology,
+    )
+    from repro.data import astro
+    h, w = img.shape
+    n = h * w
+    tval, _ = astro.filter_threshold(np.asarray(img), "filter_std")
+    tv = jnp.asarray(tval, jnp.float32)
+
+    @jax.jit
+    def stages_ab(im):
+        pa = phase_a(im, strip_rows=strip_rows)
+        labels = phase_b(pa, (h, w), strip_rows=strip_rows)
+        cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
+                                       labels.reshape(h, w)).reshape(-1)
+        return labels, cand
+
+    labels, cand = jax.block_until_ready(stages_ab(img))
+    vals = img.reshape(-1)
+    # Size the buffers to the measured filtered workload so neither path
+    # overflows and the bit-equality below covers full diagrams; both
+    # paths share the same capacities.
+    n_cand = int(np.asarray(cand & (vals >= tv)).sum())
+    n_roots = int(np.asarray(
+        (labels == jnp.arange(n, dtype=jnp.int32)) & (vals >= tv)).sum())
+    mf, mc = max(n_roots, 1), max(n_cand, 1)
+    fn_rank, fn_packed = _phase_c_fns((h, w), mf, mc)
+
+    # Compile each program once: the compiled executable serves both the
+    # HLO sort audit and the timing loop.
+    comp_rank = fn_rank.lower(vals, labels, cand, tv).compile()
+    with packed_keys.key_scope("packed"):
+        comp_packed = fn_packed.lower(vals, labels, cand, tv).compile()
+
+    t_rank, d_rank = _timeit(comp_rank, vals, labels, cand, tv,
+                             repeats=repeats)
+    t_packed, d_packed = _timeit(comp_packed, vals, labels, cand, tv,
+                                 repeats=repeats)
+    assert not bool(d_rank.overflow), \
+        "bench capacities overflowed; raise mf/mc in bench_merge_keys"
+    np.testing.assert_array_equal(np.asarray(d_rank.birth),
+                                  np.asarray(d_packed.birth))
+    np.testing.assert_array_equal(np.asarray(d_rank.p_death),
+                                  np.asarray(d_packed.p_death))
+
+    sorts_rank, full_rank = _sort_audit(comp_rank.as_text(), n)
+    sorts_packed, full_packed = _sort_audit(comp_packed.as_text(), n)
+    assert full_packed == 0, \
+        f"packed phase C still contains {full_packed} full-image sort(s)"
+
+    row = {
+        "merge_keys_mf": mf,
+        "merge_keys_mc": mc,
+        "merge_keys_threshold": float(tval),
+        "phase_c_rank_s": t_rank,
+        "phase_c_packed_s": t_packed,
+        "phase_c_packed_speedup": t_rank / t_packed,
+        "hlo_sorts_rank": sorts_rank,
+        "hlo_sorts_packed": sorts_packed,
+        "full_image_sorts_rank": full_rank,
+        "full_image_sorts_packed": full_packed,
+    }
+
+    if end_to_end:
+        kw = dict(max_features=mf, max_candidates=mc, merge_impl="boruvka",
+                  strip_rows=strip_rows)
+        run_p = functools.partial(pixhomology, merge_keys="packed", **kw)
+        run_r = functools.partial(pixhomology, merge_keys="rank", **kw)
+        t_ep, d_p = _timeit(run_p, img, tv, repeats=repeats)
+        t_er, d_r = _timeit(run_r, img, tv, repeats=repeats)
+        np.testing.assert_array_equal(np.asarray(d_p.birth),
+                                      np.asarray(d_r.birth))
+        row["e2e_packed_s"] = t_ep
+        row["e2e_rank_s"] = t_er
+        row["e2e_packed_speedup"] = t_er / t_ep
+    return row
+
+
 def bench_size(size: int, *, strip_rows: int, repeats: int,
                end_to_end: bool, deep_sky: bool) -> dict:
     from repro.data import astro
@@ -157,8 +296,11 @@ def bench_size(size: int, *, strip_rows: int, repeats: int,
 
     if end_to_end:
         from repro.core.pixhomology import pixhomology
+        # Historical fused-vs-pooled comparison stays on rank keys so the
+        # trend is comparable across artifacts; the packed-vs-rank rows
+        # below carry the key-encoding comparison.
         kw = dict(max_features=min(4096, n), max_candidates=min(16384, n),
-                  merge_impl="boruvka")
+                  merge_impl="boruvka", merge_keys="rank")
         run_f = functools.partial(pixhomology, phase_a_impl="fused",
                                   strip_rows=strip_rows, **kw)
         run_p = functools.partial(pixhomology, phase_a_impl="pooled", **kw)
@@ -170,6 +312,9 @@ def bench_size(size: int, *, strip_rows: int, repeats: int,
         row["e2e_unfused_s"] = t_ep
         row["e2e_count"] = int(d_f.count)
         row["e2e_overflow"] = bool(d_f.overflow)
+
+    row.update(bench_merge_keys(img, strip_rows=strip_rows,
+                                repeats=repeats, end_to_end=end_to_end))
     return row
 
 
@@ -202,6 +347,11 @@ def main() -> None:
                   f"frontier {row['frontier_frac']:.1%}, "
                   f"gathers {row['phase_b_gather_unfused']:.2e}->"
                   f"{row['phase_b_gather_fused']:.2e})")
+            print(f"  phase C rank={row['phase_c_rank_s'] * 1e3:.1f}ms "
+                  f"packed={row['phase_c_packed_s'] * 1e3:.1f}ms "
+                  f"({row['phase_c_packed_speedup']:.1f}x; full-image "
+                  f"sorts {row['full_image_sorts_rank']}->"
+                  f"{row['full_image_sorts_packed']})")
 
     out_path = Path(args.out) if args.out else ARTIFACTS / "BENCH_core.json"
     out_path.parent.mkdir(parents=True, exist_ok=True)

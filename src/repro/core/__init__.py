@@ -1,4 +1,11 @@
 """Core PixHomology algorithm (the paper's primary contribution)."""
+from repro.core.packed_keys import (  # noqa: F401
+    monotone_key32,
+    pack_keys,
+    packable_dtype,
+    packed_index,
+    resolve_merge_keys,
+)
 from repro.core.pixhomology import (  # noqa: F401
     Diagram,
     PhaseA,
@@ -17,6 +24,7 @@ from repro.core.pixhomology import (  # noqa: F401
     resolve_labels,
     resolve_labels_frontier,
     steepest_neighbors,
+    total_order_keys,
     total_order_rank,
 )
 from repro.core.reference import diagram_to_array, persistence_oracle  # noqa: F401

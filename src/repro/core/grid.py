@@ -13,7 +13,9 @@ processing is bit-identical.
 ``higher_neighbor_basins`` is the shared flat-index gather those call sites
 used to copy-paste: for each pixel in ``x`` it reports, per neighbor slot,
 whether that neighbor is in-bounds and strictly higher under the total
-order, and which basin it belongs to.
+order, and which basin it belongs to.  It is generic over the key
+encoding — dense int32 ranks and packed int64 ``(value, index)`` keys
+(``repro.core.packed_keys``) compare identically.
 
 ``fixed_point_iterate`` is the single pointer-chase loop every label/root
 resolution in the stage graph runs on (whole-image doubling, in-strip and
@@ -91,19 +93,22 @@ def shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
     return padded[1 + dr : 1 + dr + h, 1 + dc : 1 + dc + w]
 
 
-def higher_neighbor_basins(x: jnp.ndarray, xrank: jnp.ndarray,
-                           rank_flat: jnp.ndarray, labels_flat: jnp.ndarray,
+def higher_neighbor_basins(x: jnp.ndarray, xkey: jnp.ndarray,
+                           key_flat: jnp.ndarray, labels_flat: jnp.ndarray,
                            shape: tuple[int, int],
                            valid=True) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Per 8-neighbor of flat pixel ids ``x``: (strictly-higher?, basin).
 
-    ``x``/``xrank`` may be scalars or any matching shape; ``valid`` is an
-    extra mask broadcast against them (lanes with ``valid=False`` report
-    ``ok=False`` everywhere).  Returns ``(ok, basin)`` with a trailing
-    8-slot axis in :data:`NEIGHBOR_OFFSETS` order:
+    ``key_flat`` is any order-isomorphic encoding of the ``(value, index)``
+    total order — dense int32 ranks or packed int64 keys; only ``>`` is
+    ever applied to it.  ``x``/``xkey`` may be scalars or any matching
+    shape; ``valid`` is an extra mask broadcast against them (lanes with
+    ``valid=False`` report ``ok=False`` everywhere).  Returns
+    ``(ok, basin)`` with a trailing 8-slot axis in
+    :data:`NEIGHBOR_OFFSETS` order:
 
     * ``ok[..., j]``  — neighbor j is inside ``shape`` AND has a strictly
-      larger total-order rank than ``xrank`` (AND ``valid``);
+      larger total-order key than ``xkey`` (AND ``valid``);
     * ``basin[..., j]`` — ``labels_flat`` at neighbor j (clamped garbage
       where ``ok`` is False; always mask with ``ok``).
 
@@ -120,7 +125,7 @@ def higher_neighbor_basins(x: jnp.ndarray, xrank: jnp.ndarray,
         rr, cc = xr + dr, xc + dc
         inb = (rr >= 0) & (rr < h) & (cc >= 0) & (cc < w)
         nid = jnp.clip(rr * w + cc, 0, n - 1)
-        higher = rank_flat[nid] > xrank
+        higher = key_flat[nid] > xkey
         oks.append(inb & higher & valid)
         basins.append(labels_flat[nid])
     return jnp.stack(oks, axis=-1), jnp.stack(basins, axis=-1)

@@ -39,22 +39,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grid import fixed_point_iterate, higher_neighbor_basins
+from repro.core.packed_keys import key_pad, masked_top_k, packed_index
 
 
-def candidate_edges(rank_flat, labels_flat, cand_flat, shape,
+def candidate_edges(key_flat, labels_flat, cand_flat, shape,
                     max_candidates: int):
-    """Top-K candidates -> chained basin edges (K, 8) flat: [rank_x, a, b]."""
+    """Top-K candidates -> chained basin edges (K, 8) flat: [key_x, a, b].
+
+    ``key_flat``: dense ranks or packed int64 keys; on packed keys the
+    selection runs as a blockwise tournament
+    (``packed_keys.masked_top_k``) — same retained set and order,
+    no full-image sort.
+    """
     h, w = shape
     n = h * w
     k = min(max_candidates, n)
-    cand_rank = jnp.where(cand_flat, rank_flat, jnp.int32(-1))
-    top_ranks, top_pix = jax.lax.top_k(cand_rank, k)
-    valid = top_ranks >= 0
-    ok, lbl = higher_neighbor_basins(top_pix, top_ranks, rank_flat,
+    pad = key_pad(key_flat.dtype)
+    top_keys, top_pix = masked_top_k(key_flat, cand_flat, k)
+    valid = top_keys > pad
+    ok, lbl = higher_neighbor_basins(top_pix, top_keys, key_flat,
                                      labels_flat, shape, valid)  # (K, 8)
     edge_ok, prev_lbl = chain_clique_edges(ok, lbl)
-    ranks = jnp.broadcast_to(top_ranks[:, None], ok.shape)
-    return (jnp.where(edge_ok, ranks, -1).reshape(-1),
+    keys = jnp.broadcast_to(top_keys[:, None], ok.shape)
+    return (jnp.where(edge_ok, keys, pad).reshape(-1),
             jnp.where(edge_ok, lbl, 0).reshape(-1),
             jnp.where(edge_ok, prev_lbl, 0).reshape(-1))
 
@@ -86,12 +93,13 @@ def chain_clique_edges(ok: jnp.ndarray, lbl: jnp.ndarray):
 def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
     """Elder-rule Boruvka forest over an abstract vertex/edge instance.
 
-    ``v_rank``: (V,) int32 birth key per vertex — any strictly increasing
-    assignment under the (birth value, birth index) total order; dead or
-    padded vertices carry -1 and must have no live edges.
-    ``e_rank``: (E,) int32 saddle key per edge — order-isomorphic to the
+    ``v_rank``: (V,) birth key per vertex — any order-isomorphic
+    assignment under the (birth value, birth index) total order (dense
+    int32 ranks or packed int64 keys); dead or padded vertices carry the
+    dtype-min pad sentinel and must have no live edges.
+    ``e_rank``: (E,) saddle key per edge — order-isomorphic to the
     saddle (value, index) total order, EQUAL for edges sharing a saddle
-    pixel; -1 marks padding.
+    pixel; the dtype-min sentinel marks padding.
     ``e_val``/``e_pos``: (E,) death value / position recorded when an edge
     kills a vertex.  ``e_a``/``e_b``: (E,) endpoint vertex ids.
 
@@ -101,6 +109,7 @@ def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
     """
     nv = v_rank.shape[0]
     n_edges = e_rank.shape[0]
+    e_pad = key_pad(e_rank.dtype)
     neg_inf = (-jnp.inf if jnp.issubdtype(e_val.dtype, jnp.floating)
                else jnp.iinfo(e_val.dtype).min)
 
@@ -117,11 +126,11 @@ def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
         roots = resolve(parent)
         ra = roots[e_a]
         rb = roots[e_b]
-        alive = (e_rank >= 0) & (ra != rb)
-        key = jnp.where(alive, e_rank, -1)
+        alive = (e_rank > e_pad) & (ra != rb)
+        key = jnp.where(alive, e_rank, e_pad)
 
-        # Pass 1: per-cluster best saddle rank (scatter-max on both ends).
-        best = jnp.full(nv, -1, jnp.int32)
+        # Pass 1: per-cluster best saddle key (scatter-max on both ends).
+        best = jnp.full(nv, e_pad, e_rank.dtype)
         best = best.at[jnp.where(alive, ra, nv)].max(key, mode="drop")
         best = best.at[jnp.where(alive, rb, nv)].max(key, mode="drop")
         # Pass 2: per-cluster winning edge index among rank ties.
@@ -162,22 +171,28 @@ def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
     return dval, dpos
 
 
-def boruvka_merge(image_flat, rank_flat, labels_flat, cand_flat, shape,
+def boruvka_merge(image_flat, key_flat, labels_flat, cand_flat, shape,
                   max_candidates: int, max_rounds: int = 40):
     """Parallel replacement for ``pixhomology.merge_components``.
 
     Whole-image instantiation of :func:`boruvka_forest`: vertices are the n
-    pixels keyed by the global rank (only basin roots carry live edges).
+    pixels keyed by the global total order (only basin roots carry live
+    edges).  Packed keys carry their pixel index in the low bits, so the
+    key -> pixel map is a mask; dense ranks need the inverse permutation
+    (one more argsort — the fallback's price).
     """
     n = image_flat.shape[0]
-    e_rank, e_a, e_b = candidate_edges(rank_flat, labels_flat, cand_flat,
-                                       shape, max_candidates)
-    # Map candidate rank back to pixel id for death values/positions.
-    perm = jnp.argsort(rank_flat, stable=True)       # rank -> pixel id
-    e_pos = perm[jnp.clip(e_rank, 0)]
+    e_key, e_a, e_b = candidate_edges(key_flat, labels_flat, cand_flat,
+                                      shape, max_candidates)
+    # Map the saddle key back to its pixel id for death values/positions.
+    if key_flat.dtype == jnp.int64:
+        e_pos = jnp.clip(packed_index(e_key), 0)     # pad keys -> pixel 0
+    else:
+        perm = jnp.argsort(key_flat, stable=True)    # rank -> pixel id
+        e_pos = perm[jnp.clip(e_key, 0)]
     e_val = image_flat[e_pos]
 
-    dval, dpos = boruvka_forest(rank_flat, e_rank, e_val, e_pos, e_a, e_b)
+    dval, dpos = boruvka_forest(key_flat, e_key, e_val, e_pos, e_a, e_b)
 
     n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
     overflow = n_cand > min(max_candidates, n)

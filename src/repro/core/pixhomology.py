@@ -35,7 +35,16 @@ whole-image, batched, sharded, and tiled paths all compose the same stages:
 * **Phase C — merge + diagram** (:func:`phase_c`).  Death-point
   candidates (steps 3-4, below) are reduced by the sequential elder-rule
   sweep or the parallel Boruvka forest, the essential class is closed at
-  the global minimum, and the fixed-capacity diagram is emitted.
+  the global minimum, and the fixed-capacity diagram is emitted.  Every
+  comparison keys on an order-isomorphic encoding of the strict
+  ``(value, flat_index)`` total order, selected by ``merge_keys``:
+  ``"packed"`` (default) bit-casts each value to a monotone int64
+  ``(key32 << 32) | index`` (:mod:`repro.core.packed_keys`) — **no
+  full-image argsort anywhere**, every top-k a capacity-bounded
+  blockwise tournament; ``"rank"`` is the argsort-materialized dense
+  rank fallback
+  (> 32-bit dtypes, or callers without an x64 scope).  Both paths are
+  bit-identical (tests/test_merge_keys.py).
 
 Candidate generators (steps 3-4): ``candidate_mode="exact"`` keeps pixels
 whose *higher* 8-neighbors span >= 2 distinct basins — provably a superset
@@ -69,6 +78,8 @@ from repro.core.grid import (  # noqa: F401
     neg_inf,
     shift2d,
 )
+from repro.core import packed_keys
+from repro.core.packed_keys import key_pad, key_top, masked_top_k
 from repro.kernels.maxpool import ops as pool_ops
 from repro.kernels.ph_phase_a import ops as phase_a_ops
 
@@ -107,6 +118,22 @@ def total_order_rank(values_flat: jnp.ndarray) -> jnp.ndarray:
     n = values_flat.shape[0]
     perm = jnp.argsort(values_flat, stable=True)  # ties -> ascending index
     return jnp.zeros(n, jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def total_order_keys(values_flat: jnp.ndarray,
+                     merge_keys: str) -> jnp.ndarray:
+    """Phase-C merge keys: an order-isomorphic encoding of (value, index).
+
+    ``"packed"``: :func:`repro.core.packed_keys.pack_keys` int64 bit-keys,
+    O(n) with no sort; ``"rank"``: the dense int32 argsort ranks.  Both
+    encodings compare identically under ``>``; phase C never uses any
+    other operation on them.
+    """
+    if merge_keys == "packed":
+        return packed_keys.pack_keys(values_flat)
+    if merge_keys == "rank":
+        return total_order_rank(values_flat)
+    raise ValueError(f"unknown merge_keys {merge_keys!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -227,24 +254,26 @@ def phase_b(pa: PhaseA, shape: tuple[int, int], *,
 # Steps 3-4: candidate death points
 # ---------------------------------------------------------------------------
 
-def exact_candidates(rank2d: jnp.ndarray, labels2d: jnp.ndarray) -> jnp.ndarray:
+def exact_candidates(key2d: jnp.ndarray, labels2d: jnp.ndarray) -> jnp.ndarray:
     """Pixels whose strictly-higher 8-neighbors span >= 2 distinct basins.
 
     This is exactly the set of pixels at which the union-find sweep can merge
     two components, so it is complete (no lost deaths) and is a strict subset
     of the paper's step-3 edge set (tighter distillation).
 
-    Labels may exceed the local pixel count (the tiled path passes *global*
-    labels on a halo-padded tile), so the no-neighbor sentinel for ``hi_min``
-    is int32 max rather than ``rank2d.size``.
+    ``key2d`` is any order-isomorphic total-order key image (dense ranks or
+    packed int64 keys).  Labels may exceed the local pixel count (the tiled
+    path passes *global* labels on a halo-padded tile), so the no-neighbor
+    sentinel for ``hi_min`` is int32 max rather than ``key2d.size``.
     """
     no_lbl = jnp.iinfo(jnp.int32).max
-    hi_max = jnp.full(rank2d.shape, -1, jnp.int32)
-    hi_min = jnp.full(rank2d.shape, no_lbl, jnp.int32)
+    fill = key_pad(key2d.dtype)
+    hi_max = jnp.full(key2d.shape, -1, jnp.int32)
+    hi_min = jnp.full(key2d.shape, no_lbl, jnp.int32)
     for dr, dc in NEIGHBOR_OFFSETS:
-        nrank = shift2d(rank2d, dr, dc, jnp.int32(-1))
+        nkey = shift2d(key2d, dr, dc, fill)
         nlbl = shift2d(labels2d, dr, dc, jnp.int32(-1))
-        higher = nrank > rank2d  # border fill -1 is never higher
+        higher = nkey > key2d  # border fill (dtype min) is never higher
         hi_max = jnp.where(higher, jnp.maximum(hi_max, nlbl), hi_max)
         hi_min = jnp.where(higher, jnp.minimum(hi_min, nlbl), hi_min)
     return (hi_max >= 0) & (hi_max != hi_min)
@@ -270,7 +299,7 @@ def exact_candidates_masked(hi_mask2d: jnp.ndarray,
     return (hi_max >= 0) & (hi_max != hi_min)
 
 
-def paper_candidates(rank2d: jnp.ndarray, comp2d: jnp.ndarray,
+def paper_candidates(key2d: jnp.ndarray, comp2d: jnp.ndarray,
                      *, use_pallas: bool | None = None,
                      interpret: bool = False) -> jnp.ndarray:
     """Paper-literal steps 3-4: component edges, then min/saddle distillation.
@@ -279,28 +308,30 @@ def paper_candidates(rank2d: jnp.ndarray, comp2d: jnp.ndarray,
     Edge:   maxpool2d(M) != -maxpool2d(-M)           (paper line 6)
     Keep:   local minima or axis saddles of I        (paper "distillation")
     """
-    n = rank2d.size
     edge = (pool_ops.maxpool3x3(comp2d, use_pallas=use_pallas,
                                 interpret=interpret)
             != pool_ops.minpool3x3(comp2d, use_pallas=use_pallas,
                                    interpret=interpret))
 
-    # Neighbor ranks with directional fills: for "min along" tests a missing
-    # neighbor counts as higher (fill n); for "max along" as lower (fill -1).
-    def nb(dr, dc, fill):
-        return shift2d(rank2d, dr, dc, jnp.int32(fill))
+    # Neighbor keys with directional fills: for "min along" tests a missing
+    # neighbor counts as higher (dtype max); for "max along" as lower
+    # (dtype min) — valid keys never reach either sentinel.
+    hi, lo = key_top(key2d.dtype), key_pad(key2d.dtype)
 
-    local_min = jnp.ones(rank2d.shape, bool)
+    def nb(dr, dc, fill):
+        return shift2d(key2d, dr, dc, fill)
+
+    local_min = jnp.ones(key2d.shape, bool)
     for dr, dc in NEIGHBOR_OFFSETS:
-        local_min &= nb(dr, dc, n) > rank2d
+        local_min &= nb(dr, dc, hi) > key2d
 
     axes = [(0, 1), (1, 0), (1, 1), (1, -1)]
     min_along = []
     max_along = []
     for dr, dc in axes:
-        min_along.append((nb(dr, dc, n) > rank2d) & (nb(-dr, -dc, n) > rank2d))
-        max_along.append((nb(dr, dc, -1) < rank2d) & (nb(-dr, -dc, -1) < rank2d))
-    saddle = jnp.zeros(rank2d.shape, bool)
+        min_along.append((nb(dr, dc, hi) > key2d) & (nb(-dr, -dc, hi) > key2d))
+        max_along.append((nb(dr, dc, lo) < key2d) & (nb(-dr, -dc, lo) < key2d))
+    saddle = jnp.zeros(key2d.shape, bool)
     for a in range(len(axes)):
         for b in range(len(axes)):
             if a != b:
@@ -308,15 +339,18 @@ def paper_candidates(rank2d: jnp.ndarray, comp2d: jnp.ndarray,
     return edge & (local_min | saddle)
 
 
-def reindex_components(rank_flat: jnp.ndarray, labels_flat: jnp.ndarray,
+def reindex_components(key_flat: jnp.ndarray, labels_flat: jnp.ndarray,
                        is_root: jnp.ndarray) -> jnp.ndarray:
     """Paper step 2 re-indexing: component ids 0..C-1 ascending by birth.
 
-    Returns per-pixel component id; id C-1 = component of the global maximum.
+    Returns per-pixel component id; id C-1 = component of the global
+    maximum.  The root argsort here is inherent to the paper's incremental
+    component ids (only ``candidate_mode="paper"`` pays it; the exact mode
+    never re-indexes), so it remains on the packed-key path too.
     """
-    n = rank_flat.shape[0]
+    n = key_flat.shape[0]
     c = jnp.sum(is_root, dtype=jnp.int32)
-    root_key = jnp.where(is_root, rank_flat, jnp.int32(-1))
+    root_key = jnp.where(is_root, key_flat, key_pad(key_flat.dtype))
     order = jnp.argsort(root_key)               # non-roots first, roots asc
     slot = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
     comp_of_root = slot - (jnp.int32(n) - c)    # roots -> 0..C-1
@@ -333,26 +367,34 @@ def _find_vec(parent: jnp.ndarray, start: jnp.ndarray) -> jnp.ndarray:
     return p
 
 
-def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
+def merge_components(image_flat: jnp.ndarray, key_flat: jnp.ndarray,
                      labels_flat: jnp.ndarray, cand_flat: jnp.ndarray,
                      shape: tuple[int, int], max_candidates: int,
                      truncate_value=None):
     """Process candidates in descending (value, index) order, union-find merge.
+
+    ``key_flat``: dense int32 ranks or packed int64 keys — the sweep only
+    compares them.  On packed keys the top-k selection runs as a
+    blockwise tournament (``packed_keys.select_descending``): identical
+    retained set and order — including under candidate overflow — but no
+    sort spans more than 2k elements.  The rank path keeps the
+    full-array ``top_k`` (its ranks already cost a full argsort, so
+    there is nothing to save).
 
     Returns (death_val, death_pos, overflow): per-root death records.
     """
     h, w = shape
     n = h * w
     k = min(max_candidates, n)
+    pad = key_pad(key_flat.dtype)
 
     if truncate_value is not None:
         # Variant 2 (paper §5.2.1): sub-threshold pixels are excluded from
         # the analysis — merges below the threshold never run; the survivors
         # are truncated at the threshold by the caller.
         cand_flat = cand_flat & (image_flat >= truncate_value)
-    cand_rank = jnp.where(cand_flat, rank_flat, jnp.int32(-1))
     n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
-    top_ranks, top_pix = jax.lax.top_k(cand_rank, k)  # descending order
+    top_keys, top_pix = masked_top_k(key_flat, cand_flat, k)  # descending
     overflow = n_cand > k
 
     neg_inf = (-jnp.inf if jnp.issubdtype(image_flat.dtype, jnp.floating)
@@ -360,15 +402,15 @@ def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
 
     def step(carry, xs):
         parent, dval, dpos = carry
-        x, xrank = xs
-        valid = xrank >= 0
-        ok, basin = higher_neighbor_basins(x, xrank, rank_flat, labels_flat,
+        x, xkey = xs
+        valid = xkey > pad
+        ok, basin = higher_neighbor_basins(x, xkey, key_flat, labels_flat,
                                            (h, w), valid)  # (8,) each
 
         start = jnp.where(ok, basin, x)      # x is never a root: safe filler
         roots = _find_vec(parent, start)
-        root_rank = jnp.where(ok, rank_flat[roots], jnp.int32(-1))
-        elder = roots[jnp.argmax(root_rank)]
+        root_key = jnp.where(ok, key_flat[roots], pad)
+        elder = roots[jnp.argmax(root_key)]
 
         # Deduplicate equal roots among the 8 slots; younger distinct roots die.
         dup = jnp.zeros(8, bool)
@@ -389,12 +431,12 @@ def merge_components(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
     dval0 = jnp.full(n, neg_inf, image_flat.dtype)
     dpos0 = jnp.full(n, -1, jnp.int32)
     (parent, dval, dpos), _ = jax.lax.scan(
-        step, (parent0, dval0, dpos0), (top_pix, top_ranks))
+        step, (parent0, dval0, dpos0), (top_pix, top_keys))
     del parent
     return dval, dpos, overflow
 
 
-def phase_c(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
+def phase_c(image_flat: jnp.ndarray, key_flat: jnp.ndarray,
             labels_flat: jnp.ndarray, cand_flat: jnp.ndarray,
             shape: tuple[int, int], truncate_value=None, *,
             max_features: int, max_candidates: int,
@@ -403,7 +445,10 @@ def phase_c(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
 
     ``merge_impl="scan"`` is the paper-faithful sequential sweep;
     ``"boruvka"`` the parallel merge forest (O(log C) rounds,
-    bit-identical — see ``parallel_merge.py``).
+    bit-identical — see ``parallel_merge.py``).  ``key_flat`` carries the
+    total order in either encoding (ranks / packed); on packed keys the
+    diagram's root top-k also runs as a blockwise tournament, so phase C
+    contains no full-image-length sort at all.
     """
     h, w = shape
     n = h * w
@@ -412,14 +457,14 @@ def phase_c(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
 
     if merge_impl == "scan":
         dval, dpos, overflow_k = merge_components(
-            vals, rank_flat, labels_flat, cand_flat, (h, w), max_candidates,
+            vals, key_flat, labels_flat, cand_flat, (h, w), max_candidates,
             truncate_value=truncate_value)
     elif merge_impl == "boruvka":
         from repro.core import parallel_merge
         cand_b = cand_flat if truncate_value is None else \
             cand_flat & (vals >= truncate_value)
         dval, dpos, overflow_k = parallel_merge.boruvka_merge(
-            vals, rank_flat, labels_flat, cand_b, (h, w), max_candidates)
+            vals, key_flat, labels_flat, cand_b, (h, w), max_candidates)
     else:
         raise ValueError(f"unknown merge_impl {merge_impl!r}")
 
@@ -431,15 +476,14 @@ def phase_c(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
                          dval)
 
     # Essential class: global maximum dies at the global minimum (paper fig 3).
-    gmax = jnp.argmax(rank_flat)
-    gmin = jnp.argmin(rank_flat)
+    gmax = jnp.argmax(key_flat).astype(jnp.int32)
+    gmin = jnp.argmin(key_flat).astype(jnp.int32)
     dval = dval.at[gmax].set(vals[gmin])
     dpos = dpos.at[gmax].set(gmin)
 
     # Step 6: persistence diagram, descending by birth.
     f = min(max_features, n)
-    root_key = jnp.where(is_root, rank_flat, jnp.int32(-1))
-    _, root_pix = jax.lax.top_k(root_key, f)
+    _, root_pix = masked_top_k(key_flat, is_root, f)
     row_valid = jnp.arange(f) < jnp.sum(is_root, dtype=jnp.int32)
 
     neg_inf = (-jnp.inf if jnp.issubdtype(vals.dtype, jnp.floating)
@@ -464,16 +508,57 @@ def phase_c(image_flat: jnp.ndarray, rank_flat: jnp.ndarray,
     jax.jit,
     static_argnames=("max_features", "max_candidates", "candidate_mode",
                      "use_pallas", "interpret", "merge_impl", "phase_a_impl",
-                     "strip_rows"))
+                     "strip_rows", "merge_keys"))
+def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
+                 max_features: int = 256,
+                 max_candidates: int = 4096,
+                 candidate_mode: str = "exact",
+                 use_pallas: bool | None = None,
+                 interpret: bool = False,
+                 merge_impl: str = "scan",
+                 phase_a_impl: str = "fused",
+                 strip_rows: int = 8,
+                 merge_keys: str = "rank") -> Diagram:
+    """Jitted Algorithm-1 core; ``merge_keys`` must arrive fully resolved
+    (the public :func:`pixhomology` wrapper resolves it and opens the x64
+    scope the packed encoding needs)."""
+    if image.ndim != 2:
+        raise ValueError(f"expected 2D image, got shape {image.shape}")
+    packed_keys.assert_key_context(merge_keys)
+    h, w = image.shape
+    vals = image.reshape(-1)
+    key = total_order_keys(vals, merge_keys)
+
+    # Stage A: pointers + candidate flags; stage B: basin labels.
+    pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,
+                 use_pallas=use_pallas, interpret=interpret)
+    labels = phase_b(pa, (h, w), phase_a_impl=phase_a_impl,
+                     strip_rows=strip_rows)
+
+    # Steps 3-4: death-point candidates.
+    key2d = key.reshape(h, w)
+    if candidate_mode == "exact":
+        if pa.hi_mask is not None:
+            cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
+                                           labels.reshape(h, w)).reshape(-1)
+        else:
+            cand = exact_candidates(key2d, labels.reshape(h, w)).reshape(-1)
+    elif candidate_mode == "paper":
+        is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
+        comp2d = reindex_components(key, labels, is_root).reshape(h, w)
+        cand = paper_candidates(key2d, comp2d, use_pallas=use_pallas,
+                                interpret=interpret).reshape(-1)
+    else:
+        raise ValueError(f"unknown candidate_mode {candidate_mode!r}")
+
+    # Stage C: merge + essential class + diagram.
+    return phase_c(vals, key, labels, cand, (h, w), truncate_value,
+                   max_features=max_features, max_candidates=max_candidates,
+                   merge_impl=merge_impl)
+
+
 def pixhomology(image: jnp.ndarray, truncate_value=None, *,
-                max_features: int = 256,
-                max_candidates: int = 4096,
-                candidate_mode: str = "exact",
-                use_pallas: bool | None = None,
-                interpret: bool = False,
-                merge_impl: str = "scan",
-                phase_a_impl: str = "fused",
-                strip_rows: int = 8) -> Diagram:
+                merge_keys: str = "packed", **kwargs) -> Diagram:
     """0-dim PH of a 2D image under the superlevel filtration (Algorithm 1).
 
     Returns a fixed-capacity :class:`Diagram`, rows sorted by descending
@@ -486,54 +571,32 @@ def pixhomology(image: jnp.ndarray, truncate_value=None, *,
     truncated at t.  Births/deaths >= t are bit-identical to the untruncated
     run (tests/test_pipeline.py).
 
-    ``phase_a_impl``/``strip_rows`` select the stage implementations (see
-    the module docstring); every combination is bit-identical — only the
-    compiled program changes, which is why the pair is part of the
-    engine's plan key (``PHConfig.stage_signature``).
+    ``phase_a_impl``/``strip_rows``/``merge_keys`` select the stage
+    implementations (see the module docstring); every combination is
+    bit-identical — only the compiled program changes, which is why they
+    are part of the engine's plan key (``PHConfig.stage_signature``).
+    ``merge_keys="packed"`` (the default) resolves to ``"rank"`` for
+    > 32-bit dtypes or when the int64 scope cannot be opened; the packed
+    trace runs under :func:`repro.core.packed_keys.key_scope`, entered
+    here when this is the outermost call.
     """
-    if image.ndim != 2:
-        raise ValueError(f"expected 2D image, got shape {image.shape}")
-    h, w = image.shape
-    vals = image.reshape(-1)
-    rank = total_order_rank(vals)
-
-    # Stage A: pointers + candidate flags; stage B: basin labels.
-    pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,
-                 use_pallas=use_pallas, interpret=interpret)
-    labels = phase_b(pa, (h, w), phase_a_impl=phase_a_impl,
-                     strip_rows=strip_rows)
-
-    # Steps 3-4: death-point candidates.
-    rank2d = rank.reshape(h, w)
-    if candidate_mode == "exact":
-        if pa.hi_mask is not None:
-            cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
-                                           labels.reshape(h, w)).reshape(-1)
-        else:
-            cand = exact_candidates(rank2d, labels.reshape(h, w)).reshape(-1)
-    elif candidate_mode == "paper":
-        is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
-        comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
-        cand = paper_candidates(rank2d, comp2d, use_pallas=use_pallas,
-                                interpret=interpret).reshape(-1)
-    else:
-        raise ValueError(f"unknown candidate_mode {candidate_mode!r}")
-
-    # Stage C: merge + essential class + diagram.
-    return phase_c(vals, rank, labels, cand, (h, w), truncate_value,
-                   max_features=max_features, max_candidates=max_candidates,
-                   merge_impl=merge_impl)
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, image.dtype)
+    with packed_keys.key_scope(merge_keys):
+        return _pixhomology(image, truncate_value, merge_keys=merge_keys,
+                            **kwargs)
 
 
-def batched_pixhomology(images: jnp.ndarray, truncate_values=None,
-                        **kwargs) -> Diagram:
+def batched_pixhomology(images: jnp.ndarray, truncate_values=None, *,
+                        merge_keys: str = "packed", **kwargs) -> Diagram:
     """vmap'd PixHomology over a batch (B, H, W) — one executor task each.
 
     ``truncate_values``: optional (B,) per-image Variant-2 thresholds."""
-    fn = functools.partial(pixhomology, **kwargs)
-    if truncate_values is None:
-        return jax.vmap(lambda im: fn(im))(images)
-    return jax.vmap(lambda im, t: fn(im, t))(images, truncate_values)
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, images.dtype)
+    fn = functools.partial(_pixhomology, merge_keys=merge_keys, **kwargs)
+    with packed_keys.key_scope(merge_keys):
+        if truncate_values is None:
+            return jax.vmap(lambda im: fn(im))(images)
+        return jax.vmap(lambda im, t: fn(im, t))(images, truncate_values)
 
 
 def num_candidates(image: jnp.ndarray,
@@ -542,35 +605,43 @@ def num_candidates(image: jnp.ndarray,
                    use_pallas: bool | None = None,
                    interpret: bool = False,
                    phase_a_impl: str = "fused",
-                   strip_rows: int = 8) -> jnp.ndarray:
+                   strip_rows: int = 8,
+                   merge_keys: str = "packed") -> jnp.ndarray:
     """Count death-point candidates (to size ``max_candidates``).
 
     The stage toggles follow the same semantics as :func:`pixhomology`
     (and must match it for the count to size the same dispatch);
     :meth:`repro.ph.PHEngine.num_candidates` forwards its config
-    automatically.
+    automatically.  The candidate *set* is key-encoding invariant, but
+    ``merge_keys`` still picks how the total order is materialized on the
+    branches that need it (packed bit-keys avoid the argsort here too).
     """
     h, w = image.shape
-    pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,
-                 use_pallas=use_pallas, interpret=interpret)
-    labels = phase_b(pa, (h, w), phase_a_impl=phase_a_impl,
-                     strip_rows=strip_rows)
-    # The rank argsort is only materialized on the branches that consume
-    # it (this helper runs eagerly, and the argsort dominates large
-    # images — the fused+exact path needs just the phase-A bitmask).
-    if candidate_mode == "exact":
-        if pa.hi_mask is not None:
-            cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
-                                           labels.reshape(h, w))
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, image.dtype)
+    with packed_keys.key_scope(merge_keys):
+        pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,
+                     use_pallas=use_pallas, interpret=interpret)
+        labels = phase_b(pa, (h, w), phase_a_impl=phase_a_impl,
+                         strip_rows=strip_rows)
+        # Total-order keys are only materialized on the branches that
+        # consume them (this helper runs eagerly, and a rank argsort
+        # dominates large images — the fused+exact path needs just the
+        # phase-A bitmask).
+        if candidate_mode == "exact":
+            if pa.hi_mask is not None:
+                cand = exact_candidates_masked(pa.hi_mask.reshape(h, w),
+                                               labels.reshape(h, w))
+            else:
+                key = total_order_keys(image.reshape(-1), merge_keys)
+                cand = exact_candidates(key.reshape(h, w),
+                                        labels.reshape(h, w))
         else:
-            rank = total_order_rank(image.reshape(-1))
-            cand = exact_candidates(rank.reshape(h, w), labels.reshape(h, w))
-    else:
-        rank = total_order_rank(image.reshape(-1))
-        is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
-        comp2d = reindex_components(rank, labels, is_root).reshape(h, w)
-        cand = paper_candidates(rank.reshape(h, w), comp2d,
-                                use_pallas=use_pallas, interpret=interpret)
-    if truncate_value is not None:
-        cand = cand & (image >= truncate_value)
-    return jnp.sum(cand, dtype=jnp.int32)
+            key = total_order_keys(image.reshape(-1), merge_keys)
+            is_root = labels == jnp.arange(h * w, dtype=jnp.int32)
+            comp2d = reindex_components(key, labels, is_root).reshape(h, w)
+            cand = paper_candidates(key.reshape(h, w), comp2d,
+                                    use_pallas=use_pallas,
+                                    interpret=interpret)
+        if truncate_value is not None:
+            cand = cand & (image >= truncate_value)
+        return jnp.sum(cand, dtype=jnp.int32)

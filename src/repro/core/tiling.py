@@ -12,7 +12,10 @@ while staying **bit-identical** to ``pixhomology`` on the whole image:
    pointer-doubling label resolution *frozen at the halo* (each owned pixel
    resolves to an in-tile basin root or to a halo pixel it exits through);
    exact candidate detection and clique-chained saddle edges computed on a
-   per-tile rank that is order-isomorphic to the global total order.
+   per-tile total-order key that is order-isomorphic to the global order —
+   packed ``(value, global index)`` int64 bit-keys by default (no per-tile
+   sort; ``repro.core.packed_keys``), or lexsort-materialized dense ranks
+   on the ``merge_keys="rank"`` fallback.
 
 2. *Boundary condensation* (O(boundary), not O(n)): the 1-px ring of every
    tile is collected into a sorted (pixel -> exit pointer) table; pointer
@@ -61,11 +64,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packed_keys
 from repro.core.grid import (
     fixed_point_iterate,
     higher_neighbor_basins,
     neg_inf as _neg_inf,
 )
+from repro.core.packed_keys import key_pad, masked_top_k, pack_keys
 from repro.core.parallel_merge import boruvka_forest, chain_clique_edges
 from repro.core.pixhomology import (
     Diagram,
@@ -306,7 +311,7 @@ def resolve_ring_table(ring_gidx: jnp.ndarray, ring_ptr: jnp.ndarray):
 
 def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
                  tile_max_candidates: int, tile_max_features: int,
-                 truncated: bool):
+                 truncated: bool, merge_keys: str = "rank"):
     """Steps 3-4 on one tile with final global labels.
 
     Returns per-tile compact pieces of the global merge instance:
@@ -314,6 +319,13 @@ def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
     the top-``tile_max_features`` basin roots, the tile's unfiltered
     maximum root (for the essential class), and candidate/root counts for
     overflow detection.
+
+    ``merge_keys="packed"`` keys every comparison on the packed
+    ``(value, global index)`` int64 bit-key — per-tile packed keys are
+    *globally* order-isomorphic by construction, so the two per-tile
+    argsorts (the rank lexsort) disappear along with the full-tile
+    ``top_k`` sorts (blockwise tournament selection).  ``"rank"`` keeps
+    the lexsort-materialized per-tile dense ranks.
     """
     ph, pw = pvals.shape
     tr, tc = ph - 2, pw - 2
@@ -331,23 +343,33 @@ def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
     plbl = jnp.where(interior, jnp.pad(lbl_owned, 1, constant_values=-1),
                      frame_lbl)
 
-    # Per-tile rank, order-isomorphic to the global (value, index) order
-    # (halo fill keys (-inf, -1) sort strictly below every real pixel).
-    order = jnp.lexsort((pgidx.reshape(-1), pvals.reshape(-1)))
-    rank = jnp.zeros(n_loc, jnp.int32).at[order].set(
-        jnp.arange(n_loc, dtype=jnp.int32))
+    if merge_keys == "packed":
+        # Packed (value, global index) keys are order-isomorphic to the
+        # global total order on the padded tile directly — no sort.  Halo
+        # fill cells (value -inf/int-min, gidx -1) pack low word 0: below
+        # every real pixel (for integer dtype-min fills they reach the
+        # pad sentinel itself, which is fine — halo cells are excluded by
+        # the interior mask, never by key comparison).
+        key = pack_keys(pvals.reshape(-1), pgidx.reshape(-1))
+    else:
+        # Per-tile rank, order-isomorphic to the global (value, index)
+        # order (halo fill keys (-inf, -1) sort strictly below every real
+        # pixel).
+        order = jnp.lexsort((pgidx.reshape(-1), pvals.reshape(-1)))
+        key = jnp.zeros(n_loc, jnp.int32).at[order].set(
+            jnp.arange(n_loc, dtype=jnp.int32))
+    pad = key_pad(key.dtype)
 
-    cand2d = exact_candidates(rank.reshape(ph, pw), plbl) & interior
+    cand2d = exact_candidates(key.reshape(ph, pw), plbl) & interior
     if truncated:
         cand2d &= pvals >= tv
     cand_flat = cand2d.reshape(-1)
     n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
 
     k = min(tile_max_candidates, tr * tc)
-    cand_rank = jnp.where(cand_flat, rank, jnp.int32(-1))
-    top_ranks, top_loc = jax.lax.top_k(cand_rank, k)
-    valid = top_ranks >= 0
-    ok, lbl = higher_neighbor_basins(top_loc, top_ranks, rank,
+    top_keys, top_loc = masked_top_k(key, cand_flat, k)
+    valid = top_keys > pad
+    ok, lbl = higher_neighbor_basins(top_loc, top_keys, key,
                                      plbl.reshape(-1), (ph, pw), valid)
     edge_ok, prev_lbl = chain_clique_edges(ok, lbl)          # (k, 8)
     e_val = jnp.broadcast_to(pvals.reshape(-1)[top_loc][:, None], ok.shape)
@@ -368,10 +390,9 @@ def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
     n_roots = jnp.sum(root_mask, dtype=jnp.int32)
 
     f = min(tile_max_features, tr * tc)
-    own_rank = rank.reshape(ph, pw)[1:-1, 1:-1]
-    root_key = jnp.where(root_mask, own_rank, jnp.int32(-1)).reshape(-1)
-    top_rk, top_ri = jax.lax.top_k(root_key, f)
-    rvalid = top_rk >= 0
+    own_key = key.reshape(ph, pw)[1:-1, 1:-1].reshape(-1)
+    top_rk, top_ri = masked_top_k(own_key, root_mask.reshape(-1), f)
+    rvalid = top_rk > pad
     root_gidx = jnp.where(rvalid, own_gidx.reshape(-1)[top_ri], -1)
     root_val = jnp.where(rvalid, own_vals.reshape(-1)[top_ri], fill_v)
 
@@ -395,14 +416,19 @@ def _slot_lookup(sorted_key, slot_of, q):
 def seam_merge(root_val, root_gidx, root_valid,
                e_val, e_pos, e_a, e_b, e_valid,
                rmax_val, rmax_gidx, gmin_val, gmin_gidx,
-               tv, *, truncated: bool, max_features: int, dtype):
+               tv, *, truncated: bool, max_features: int, dtype,
+               merge_keys: str = "rank"):
     """Elder-rule reduction of the concatenated per-tile instances.
 
     Compact vertex set = listed basin roots; edges reference roots by
     global pixel id and are slotted through a sorted lookup table.  The
     reduction itself is :func:`repro.core.parallel_merge.boruvka_forest`.
-    Returns ``(birth, death, p_birth, p_death, count, n_unmerged,
-    merge_overflow)``.
+    ``merge_keys="packed"`` keys vertices and edges on the packed
+    ``(value, global index)`` int64 directly — edges sharing a saddle
+    pixel are equal-keyed *by construction*, so the two dense-rank
+    argsorts of the ``"rank"`` path (vertex lexsort + edge group ranking)
+    disappear.  Returns ``(birth, death, p_birth, p_death, count,
+    n_unmerged, merge_overflow)``.
     """
     rv = root_val.reshape(-1)
     rg = root_gidx.reshape(-1)
@@ -421,25 +447,34 @@ def seam_merge(root_val, root_gidx, root_valid,
     sb, fb = _slot_lookup(sorted_g, order_g, e_b.reshape(-1))
     alive = e_valid.reshape(-1) & fa & fb   # missing endpoint => tile overflow
 
-    # Vertex birth keys: rank of (value, global index) among valid roots.
-    vorder = jnp.lexsort((rg, rv, ok_r.astype(jnp.int32)))
-    vrank_raw = jnp.zeros(nv, jnp.int32).at[vorder].set(
-        jnp.arange(nv, dtype=jnp.int32))
-    v_rank = jnp.where(ok_r, vrank_raw, -1)
+    if merge_keys == "packed":
+        # Vertex birth / edge saddle keys: packed (value, global index) —
+        # order-isomorphic with no sort, equal exactly when the saddle
+        # pixel coincides.
+        i64_pad = key_pad(jnp.int64)
+        v_rank = jnp.where(ok_r, pack_keys(rv, rg), i64_pad)
+        e_rank = jnp.where(alive, pack_keys(ev, ep), i64_pad)
+    else:
+        # Vertex birth keys: rank of (value, global index) among valid
+        # roots.
+        vorder = jnp.lexsort((rg, rv, ok_r.astype(jnp.int32)))
+        vrank_raw = jnp.zeros(nv, jnp.int32).at[vorder].set(
+            jnp.arange(nv, dtype=jnp.int32))
+        v_rank = jnp.where(ok_r, vrank_raw, key_pad(jnp.int32))
 
-    # Edge saddle keys: dense rank of (value, global index), EQUAL for edges
-    # sharing a saddle pixel (the Boruvka tie rule depends on it).
-    ne = ev.shape[0]
-    akey = alive.astype(jnp.int32)
-    eorder = jnp.lexsort((ep, ev, akey))
-    s_ak, s_ev, s_ep = akey[eorder], ev[eorder], ep[eorder]
-    new_grp = jnp.concatenate([
-        jnp.ones((1,), bool),
-        (s_ak[1:] != s_ak[:-1]) | (s_ev[1:] != s_ev[:-1])
-        | (s_ep[1:] != s_ep[:-1])])
-    grp = (jnp.cumsum(new_grp.astype(jnp.int32)) - 1)
-    erank_raw = jnp.zeros(ne, jnp.int32).at[eorder].set(grp)
-    e_rank = jnp.where(alive, erank_raw, -1)
+        # Edge saddle keys: dense rank of (value, global index), EQUAL for
+        # edges sharing a saddle pixel (the Boruvka tie rule depends on it).
+        ne = ev.shape[0]
+        akey = alive.astype(jnp.int32)
+        eorder = jnp.lexsort((ep, ev, akey))
+        s_ak, s_ev, s_ep = akey[eorder], ev[eorder], ep[eorder]
+        new_grp = jnp.concatenate([
+            jnp.ones((1,), bool),
+            (s_ak[1:] != s_ak[:-1]) | (s_ev[1:] != s_ev[:-1])
+            | (s_ep[1:] != s_ep[:-1])])
+        grp = (jnp.cumsum(new_grp.astype(jnp.int32)) - 1)
+        erank_raw = jnp.zeros(ne, jnp.int32).at[eorder].set(grp)
+        e_rank = jnp.where(alive, erank_raw, key_pad(jnp.int32))
 
     dval, dpos = boruvka_forest(v_rank, e_rank, ev.astype(dtype), ep,
                                 jnp.clip(sa, 0), jnp.clip(sb, 0))
@@ -460,12 +495,13 @@ def seam_merge(root_val, root_gidx, root_valid,
                                      dval[es]))
     dpos = dpos.at[es].set(jnp.where(assign, gmin_gidx, dpos[es]))
 
-    # Diagram rows, descending (birth value, birth index).
+    # Diagram rows, descending (birth value, birth index); ``v_rank`` is
+    # already pad-keyed on invalid slots, and the vertex set is compact
+    # (listed roots, never full-image), so one top_k serves both key paths.
     c = jnp.sum(ok_r, dtype=jnp.int32)
     f = max_features
     kk = min(f, nv)
-    root_key = jnp.where(ok_r, vrank_raw, jnp.int32(-1))
-    _, top_slot = jax.lax.top_k(root_key, kk)
+    _, top_slot = jax.lax.top_k(v_rank, kk)
     row_valid = jnp.arange(kk) < c
 
     birth = jnp.full(f, neg_inf, dtype).at[:kk].set(
@@ -490,13 +526,31 @@ def seam_merge(root_val, root_gidx, root_valid,
 @functools.partial(
     jax.jit,
     static_argnames=("grid", "max_features", "tile_max_features",
-                     "tile_max_candidates", "shard_ctx"))
+                     "tile_max_candidates", "shard_ctx", "merge_keys"))
+def _tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
+                       grid: tuple[int, int],
+                       max_features: int = 8192,
+                       tile_max_features: int = 2048,
+                       tile_max_candidates: int = 8192,
+                       shard_ctx=None,
+                       merge_keys: str = "rank") -> TiledDiagram:
+    """Jitted host-resident-image core of :func:`tiled_pixhomology`."""
+    if image.ndim != 2:
+        raise ValueError(f"expected 2D image, got shape {image.shape}")
+    h, w = image.shape
+    validate_grid((h, w), grid)
+    gidx2d = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
+    pvals = split_tiles(image, grid, _neg_inf(image.dtype))
+    pgidx = split_tiles(gidx2d, grid, jnp.int32(-1))
+    return _tiled_pixhomology_stacks(
+        pvals, pgidx, truncate_value, shape=(h, w), grid=grid,
+        max_features=max_features, tile_max_features=tile_max_features,
+        tile_max_candidates=tile_max_candidates, shard_ctx=shard_ctx,
+        merge_keys=merge_keys)
+
+
 def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
-                      grid: tuple[int, int],
-                      max_features: int = 8192,
-                      tile_max_features: int = 2048,
-                      tile_max_candidates: int = 8192,
-                      shard_ctx=None) -> TiledDiagram:
+                      merge_keys: str = "packed", **kwargs) -> TiledDiagram:
     """0-dim PH of one 2D image via halo-tiled decomposition (bit-identical
     to ``pixhomology(image, truncate_value, candidate_mode="exact")``).
 
@@ -507,45 +561,35 @@ def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
     mesh's data axes (tile count must divide by the dp size); the compact
     condensation/seam stages stay replicated (they are O(boundary), not
     O(pixels)).
+    ``merge_keys``: packed int64 ``(value, global index)`` keys (default;
+    no per-tile or seam argsorts) or the dense-rank fallback — resolved
+    exactly like :func:`repro.core.pixhomology.pixhomology`.
 
     This is the host-resident-image convenience wrapper; the compute core
     is :func:`tiled_pixhomology_stacks`, fed either by the in-jit
     ``split_tiles`` below or by :func:`load_tile_stacks` (tile-provider
     path with O(tile) host residency).
     """
-    if image.ndim != 2:
-        raise ValueError(f"expected 2D image, got shape {image.shape}")
-    h, w = image.shape
-    validate_grid((h, w), grid)
-    gidx2d = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
-    pvals = split_tiles(image, grid, _neg_inf(image.dtype))
-    pgidx = split_tiles(gidx2d, grid, jnp.int32(-1))
-    return tiled_pixhomology_stacks(
-        pvals, pgidx, truncate_value, shape=(h, w), grid=grid,
-        max_features=max_features, tile_max_features=tile_max_features,
-        tile_max_candidates=tile_max_candidates, shard_ctx=shard_ctx)
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, image.dtype)
+    with packed_keys.key_scope(merge_keys):
+        return _tiled_pixhomology(image, truncate_value,
+                                  merge_keys=merge_keys, **kwargs)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("shape", "grid", "max_features", "tile_max_features",
-                     "tile_max_candidates", "shard_ctx"))
-def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
-                             truncate_value=None, *,
-                             shape: tuple[int, int],
-                             grid: tuple[int, int],
-                             max_features: int = 8192,
-                             tile_max_features: int = 2048,
-                             tile_max_candidates: int = 8192,
-                             shard_ctx=None) -> TiledDiagram:
-    """Halo-tiled PH on pre-staged tile stacks (the streaming entry point).
-
-    ``pvals``/``pgidx``: (T, tr+2, tc+2) halo-padded value / global-index
-    stacks in row-major tile order — exactly what ``split_tiles`` produces
-    from a whole image, or :func:`load_tile_stacks` from a tile provider
-    without any host ever materializing the image.  Semantics otherwise
-    identical to :func:`tiled_pixhomology`.
-    """
+                     "tile_max_candidates", "shard_ctx", "merge_keys"))
+def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
+                              truncate_value=None, *,
+                              shape: tuple[int, int],
+                              grid: tuple[int, int],
+                              max_features: int = 8192,
+                              tile_max_features: int = 2048,
+                              tile_max_candidates: int = 8192,
+                              shard_ctx=None,
+                              merge_keys: str = "rank") -> TiledDiagram:
+    """Jitted tile-stack core of :func:`tiled_pixhomology_stacks`."""
     h, w = shape
     validate_grid((h, w), grid)
     gr, gc = grid
@@ -554,6 +598,7 @@ def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
     if pvals.shape != (n_tiles, tr + 2, tc + 2):
         raise ValueError(f"tile stack shape {pvals.shape} does not match "
                          f"image {shape} under grid {grid}")
+    packed_keys.assert_key_context(merge_keys)
     truncated = truncate_value is not None
     tv = (jnp.asarray(truncate_value) if truncated
           else _neg_inf(jnp.float32))
@@ -563,7 +608,7 @@ def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
         functools.partial(tile_phase_b,
                           tile_max_candidates=tile_max_candidates,
                           tile_max_features=tile_max_features,
-                          truncated=truncated),
+                          truncated=truncated, merge_keys=merge_keys),
         in_axes=(0, 0, 0, None, None, None))
 
     if shard_ctx is not None:
@@ -611,7 +656,8 @@ def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
      merge_overflow) = seam_merge(
         root_val, root_gidx, root_valid, e_val, e_pos, e_a, e_b, e_valid,
         rmax_val, rmax_gidx, gmin_val, gmin_gidx, tv,
-        truncated=truncated, max_features=f_global, dtype=pvals.dtype)
+        truncated=truncated, max_features=f_global, dtype=pvals.dtype,
+        merge_keys=merge_keys)
 
     tile_overflow = (jnp.any(n_cand > min(tile_max_candidates, tr * tc))
                      | jnp.any(n_roots > min(tile_max_features, tr * tc)))
@@ -621,13 +667,33 @@ def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
                         n_roots, n_cand)
 
 
+def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
+                             truncate_value=None, *,
+                             merge_keys: str = "packed",
+                             **kwargs) -> TiledDiagram:
+    """Halo-tiled PH on pre-staged tile stacks (the streaming entry point).
+
+    ``pvals``/``pgidx``: (T, tr+2, tc+2) halo-padded value / global-index
+    stacks in row-major tile order — exactly what ``split_tiles`` produces
+    from a whole image, or :func:`load_tile_stacks` from a tile provider
+    without any host ever materializing the image.  Semantics otherwise
+    identical to :func:`tiled_pixhomology` (including ``merge_keys``
+    resolution and its x64 scope).
+    """
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, pvals.dtype)
+    with packed_keys.key_scope(merge_keys):
+        return _tiled_pixhomology_stacks(pvals, pgidx, truncate_value,
+                                         merge_keys=merge_keys, **kwargs)
+
+
 # ---------------------------------------------------------------------------
 # Per-tile cost model (dryrun / capacity planning)
 # ---------------------------------------------------------------------------
 
 def per_tile_cost(tile_shape: tuple[int, int], dtype, n_tiles: int,
                   tile_max_features: int = 2048,
-                  tile_max_candidates: int = 8192) -> dict:
+                  tile_max_candidates: int = 8192,
+                  merge_keys: str = "packed") -> dict:
     """Compile the per-tile phase programs and report their memory footprint.
 
     This is the dryrun cost model for the tiled plan: everything here scales
@@ -636,6 +702,7 @@ def per_tile_cost(tile_shape: tuple[int, int], dtype, n_tiles: int,
     device.
     """
     tr, tc = tile_shape
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, dtype)
     pv = jax.ShapeDtypeStruct((tr + 2, tc + 2), dtype)
     pg = jax.ShapeDtypeStruct((tr + 2, tc + 2), jnp.int32)
     ring = len(_ring_coords(tr, tc)[0])
@@ -644,15 +711,17 @@ def per_tile_cost(tile_shape: tuple[int, int], dtype, n_tiles: int,
     tv = jax.ShapeDtypeStruct((), jnp.float32)
 
     out: dict = {"tile_shape": [tr, tc], "ring_pixels": ring,
-                 "table_entries": n_tiles * ring}
+                 "table_entries": n_tiles * ring, "merge_keys": merge_keys}
     for name, fn, args in (
             ("phase_a", jax.jit(tile_phase_a), (pv, pg)),
             ("phase_b",
              jax.jit(functools.partial(
                  tile_phase_b, tile_max_candidates=tile_max_candidates,
-                 tile_max_features=tile_max_features, truncated=True)),
+                 tile_max_features=tile_max_features, truncated=True,
+                 merge_keys=merge_keys)),
              (pv, pg, ptr, table, table, tv))):
-        compiled = fn.lower(*args).compile()
+        with packed_keys.key_scope(merge_keys):
+            compiled = fn.lower(*args).compile()
         ma = compiled.memory_analysis()
         out[name] = {
             "argument_bytes": int(ma.argument_size_in_bytes),

@@ -145,7 +145,7 @@ def _run_pixhomology(ctx, shape_name: str) -> dict:
     sds = jax.ShapeDtypeStruct((b, h, w), jnp.float32)
     tsds = jax.ShapeDtypeStruct((b,), jnp.float32)
     with ctx.mesh:
-        lowered = plan.fn.lower(sds, tsds)
+        lowered = plan.lower(sds, tsds)
         compiled = lowered.compile()
     out = {"lower_ok": True, "compile_ok": True}
     out.update(_analyze(compiled, None, None))
@@ -179,7 +179,7 @@ def _run_pixhomology_hetero(ctx, shape_name: str) -> dict:
             plan = engine.sharded_plan(ctx, (b, hb, wb),
                                        jnp.dtype(jnp.float32), f, k)
             with ctx.mesh:
-                compiled = plan.fn.lower(
+                compiled = plan.lower(
                     jax.ShapeDtypeStruct((b, hb, wb), jnp.float32),
                     jax.ShapeDtypeStruct((b,), jnp.float32)).compile()
             cell = analyzed[(hb, wb)] = _analyze(compiled, None, None)

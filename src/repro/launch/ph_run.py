@@ -47,6 +47,12 @@ def main():
     ap.add_argument("--max-candidates", type=int, default=32768)
     ap.add_argument("--candidate-mode", choices=["exact", "paper"])
     ap.add_argument("--merge-impl", choices=["scan", "boruvka"])
+    ap.add_argument("--merge-keys", dest="merge_keys",
+                    choices=["packed", "rank"],
+                    help="phase-C total-order keys: packed (value, index) "
+                         "int64 bit-keys (no full-image argsort; falls "
+                         "back to rank for > 32-bit dtypes) or dense "
+                         "argsort ranks")
     ap.add_argument("--phase-a-impl", dest="phase_a_impl",
                     choices=["fused", "pooled"],
                     help="stage-A implementation: fused strip kernel "

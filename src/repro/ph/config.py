@@ -13,6 +13,8 @@ import enum
 import json
 from typing import Any
 
+from repro.core.packed_keys import MERGE_KEYS  # noqa: F401  (single source)
+
 CANDIDATE_MODES = ("exact", "paper")
 MERGE_IMPLS = ("scan", "boruvka")
 PHASE_A_IMPLS = ("fused", "pooled")
@@ -106,6 +108,11 @@ class PHConfig:
     # combination is bit-identical, only the compiled program changes).
     candidate_mode: str = "exact"          # "exact" | "paper"
     merge_impl: str = "scan"               # "scan" | "boruvka"
+    # Phase-C total-order keys: "packed" bit-casts (value, index) into
+    # monotone int64 keys (no full-image argsort anywhere; needs a <= 32-bit
+    # dtype and an int64 scope, else it resolves to the fallback), "rank"
+    # materializes dense argsort ranks.  Bit-identical either way.
+    merge_keys: str = "packed"             # "packed" | "rank"
     # phase_a_impl "fused": the repro.kernels.ph_phase_a kernel (Pallas on
     # TPU per use_pallas, its XLA reference elsewhere) + compacted-frontier
     # phase B.  "pooled": the unfused three-pooled-pass baseline + dense
@@ -156,6 +163,9 @@ class PHConfig:
         if self.merge_impl not in MERGE_IMPLS:
             raise ValueError(f"merge_impl must be one of {MERGE_IMPLS}, "
                              f"got {self.merge_impl!r}")
+        if self.merge_keys not in MERGE_KEYS:
+            raise ValueError(f"merge_keys must be one of {MERGE_KEYS}, "
+                             f"got {self.merge_keys!r}")
         if self.phase_a_impl not in PHASE_A_IMPLS:
             raise ValueError(f"phase_a_impl must be one of {PHASE_A_IMPLS}, "
                              f"got {self.phase_a_impl!r}")
@@ -206,7 +216,7 @@ class PHConfig:
                  self.interpret),
                 ("b", "frontier" if self.phase_a_impl == "fused"
                  else "dense", self.candidate_mode),
-                ("c", self.merge_impl))
+                ("c", self.merge_impl, self.merge_keys))
 
     def plan_key(self) -> tuple:
         """The config fields that affect *compiled executables*.
@@ -231,15 +241,16 @@ class PHConfig:
 
         Recognized attributes (all optional): ``max_features``,
         ``max_candidates``, ``candidate_mode``, ``merge_impl``,
-        ``phase_a_impl``, ``strip_rows``, ``filter`` or ``filter_level``,
+        ``merge_keys``, ``phase_a_impl``, ``strip_rows``,
+        ``filter`` or ``filter_level``,
         ``dtype``, ``use_pallas``, ``interpret``,
         ``no_regrow``/``auto_regrow``, ``max_regrows``,
         ``bucket_rounding``, ``prefetch_rounds``/``no_prefetch``.
         """
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
-                     "merge_impl", "phase_a_impl", "strip_rows", "dtype",
-                     "use_pallas", "interpret",
+                     "merge_impl", "merge_keys", "phase_a_impl",
+                     "strip_rows", "dtype", "use_pallas", "interpret",
                      "max_regrows", "auto_regrow", "regrow_factor",
                      "regrow_features_ceiling", "regrow_candidates_ceiling",
                      "bucket_rounding", "prefetch_rounds"):

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import Diagram, batched_pixhomology, diagram_to_array, \
     num_candidates as core_num_candidates, pixhomology
+from repro.core.packed_keys import key_scope, resolve_merge_keys
 from repro.distributed.context import shard_map_compat
 from repro.ph.config import FilterLevel, PHConfig, TileSpec
 
@@ -46,19 +47,33 @@ def threshold_dtype(image_dtype):
 
 
 class Plan:
-    """One cached compiled executable plus its trace/call counters."""
+    """One cached compiled executable plus its trace/call counters.
 
-    __slots__ = ("fn", "key", "traces", "calls")
+    ``merge_keys`` records the *resolved* phase-C key encoding; packed
+    plans trace, lower, and execute inside the int64
+    :func:`repro.core.packed_keys.key_scope` — the scope must wrap the
+    outermost jit call, which is exactly what ``__call__``/:meth:`lower`
+    are.
+    """
 
-    def __init__(self, fn: Callable, key: tuple):
+    __slots__ = ("fn", "key", "traces", "calls", "merge_keys")
+
+    def __init__(self, fn: Callable, key: tuple, merge_keys: str = "rank"):
         self.fn = fn
         self.key = key
         self.traces = 0
         self.calls = 0
+        self.merge_keys = merge_keys
 
     def __call__(self, *args):
         self.calls += 1
-        return self.fn(*args)
+        with key_scope(self.merge_keys):
+            return self.fn(*args)
+
+    def lower(self, *args):
+        """``fn.lower(*args)`` under the plan's key scope (dryrun path)."""
+        with key_scope(self.merge_keys):
+            return self.fn.lower(*args)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,15 +128,18 @@ class PHEngine:
 
     # -- plan cache --------------------------------------------------------
 
-    def get_plan(self, key: tuple, builder: Callable[[Plan], Callable]) -> Plan:
+    def get_plan(self, key: tuple, builder: Callable[[Plan], Callable],
+                 merge_keys: str = "rank") -> Plan:
         """Fetch or build the compiled plan for ``key``.
 
         ``builder(plan)`` returns the callable; it receives the plan object
         so traced wrappers can bump ``plan.traces`` at trace time.
+        ``merge_keys`` is the *resolved* key encoding — packed plans run
+        their trace/lower/execute under the int64 key scope.
         """
         plan = self._plans.get(key)
         if plan is None:
-            plan = Plan(None, key)
+            plan = Plan(None, key, merge_keys)
             plan.fn = builder(plan)
             self._plans[key] = plan
             self._misses += 1
@@ -139,14 +157,22 @@ class PHEngine:
             "regrows": len(self.regrow_log),
         }
 
-    def _ph_kwargs(self, mf: int, mc: int) -> dict:
+    def _merge_keys_for(self, dtype) -> str:
+        """The resolved phase-C key encoding for ``dtype`` under this
+        config (packed falls back to rank on > 32-bit dtypes or when the
+        int64 scope is unavailable — bit-identical either way)."""
+        return resolve_merge_keys(self.config.merge_keys, dtype)
+
+    def _ph_kwargs(self, mf: int, mc: int, merge_keys: str) -> dict:
         """Static kwargs of one compiled stage-graph program: capacities
         plus the config's stage signature knobs (phase A impl/strip rows,
-        candidate mode, merge impl, backend toggles)."""
+        candidate mode, merge impl/keys, backend toggles).  ``merge_keys``
+        arrives resolved — the plan's key scope matches it."""
         cfg = self.config
         return dict(max_features=mf, max_candidates=mc,
                     candidate_mode=cfg.candidate_mode,
                     merge_impl=cfg.merge_impl,
+                    merge_keys=merge_keys,
                     phase_a_impl=cfg.phase_a_impl,
                     strip_rows=cfg.strip_rows,
                     use_pallas=cfg.use_pallas, interpret=cfg.interpret)
@@ -156,11 +182,12 @@ class PHEngine:
         """Plan for the non-sharded entry points: ``kind`` selects the
         callee ("single" -> pixhomology, "batched" -> its vmap)."""
         callee = pixhomology if kind == "single" else batched_pixhomology
+        mk = self._merge_keys_for(dtype)
         key = (kind, shape, str(dtype), mf, mc, truncated,
                self.config.plan_key())
 
         def build(plan: Plan):
-            kw = self._ph_kwargs(mf, mc)
+            kw = self._ph_kwargs(mf, mc, mk)
 
             def compute(x, tv=None):
                 plan.traces += 1   # python side effect: runs per (re)trace
@@ -170,7 +197,7 @@ class PHEngine:
                 return jax.jit(lambda im, tv: compute(im, tv))
             return jax.jit(lambda im: compute(im))
 
-        return self.get_plan(key, build)
+        return self.get_plan(key, build, mk)
 
     def sharded_plan(self, ctx, shape, dtype, mf: int, mc: int) -> Plan:
         """shard_map'd batched PH over ``ctx.dp_axes`` (always thresholded:
@@ -181,12 +208,13 @@ class PHEngine:
         merge-scan carries and emits ~70 TB of all-gathers per batch
         (src/repro/ph/DESIGN.md §Perf PH-1: collective 1407 s -> ~0).
         """
+        mk = self._merge_keys_for(dtype)
         key = ("sharded", ctx, shape, str(dtype), mf, mc,
                self.config.plan_key())
 
         def build(plan: Plan):
             from jax.sharding import PartitionSpec as P
-            kw = self._ph_kwargs(mf, mc)
+            kw = self._ph_kwargs(mf, mc, mk)
             dp = ctx.dp_axes
             out_specs = Diagram(P(dp, None), P(dp, None), P(dp, None),
                                 P(dp, None), P(dp), P(dp), P(dp))
@@ -207,7 +235,7 @@ class PHEngine:
                 in_specs=(P(dp, None, None), P(dp)),
                 out_specs=out_specs))
 
-        return self.get_plan(key, build)
+        return self.get_plan(key, build, mk)
 
     def tiled_plan(self, shape, dtype, grid, mf: int, tf: int, tk: int,
                    truncated: bool, ctx=None) -> Plan:
@@ -218,6 +246,7 @@ class PHEngine:
         phases over the mesh's data axes via ``shard_map``.
         """
         from repro.core.tiling import tiled_pixhomology
+        mk = self._merge_keys_for(dtype)
         key = ("tiled", ctx, shape, str(dtype), grid, mf, tf, tk, truncated,
                self.config.plan_key())
 
@@ -227,13 +256,13 @@ class PHEngine:
                 return tiled_pixhomology(
                     x, tv, grid=grid, max_features=mf,
                     tile_max_features=tf, tile_max_candidates=tk,
-                    shard_ctx=ctx)
+                    shard_ctx=ctx, merge_keys=mk)
 
             if truncated:
                 return jax.jit(lambda im, tv: compute(im, tv))
             return jax.jit(lambda im: compute(im))
 
-        return self.get_plan(key, build)
+        return self.get_plan(key, build, mk)
 
     def tiled_stacks_plan(self, shape, dtype, grid, mf: int, tf: int,
                           tk: int, truncated: bool, ctx=None) -> Plan:
@@ -241,6 +270,7 @@ class PHEngine:
         (``repro.core.tiling.tiled_pixhomology_stacks``) — the streaming
         path where no host-resident image exists."""
         from repro.core.tiling import tiled_pixhomology_stacks
+        mk = self._merge_keys_for(dtype)
         key = ("tiled_stacks", ctx, shape, str(dtype), grid, mf, tf, tk,
                truncated, self.config.plan_key())
 
@@ -250,13 +280,13 @@ class PHEngine:
                 return tiled_pixhomology_stacks(
                     pv, pg, tv, shape=shape, grid=grid, max_features=mf,
                     tile_max_features=tf, tile_max_candidates=tk,
-                    shard_ctx=ctx)
+                    shard_ctx=ctx, merge_keys=mk)
 
             if truncated:
                 return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))
             return jax.jit(lambda pv, pg: compute(pv, pg))
 
-        return self.get_plan(key, build)
+        return self.get_plan(key, build, mk)
 
     # -- capacity regrow ---------------------------------------------------
 
@@ -417,7 +447,8 @@ class PHEngine:
         return int(core_num_candidates(
             x, cfg.candidate_mode, truncate_value,
             use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-            phase_a_impl=cfg.phase_a_impl, strip_rows=cfg.strip_rows))
+            phase_a_impl=cfg.phase_a_impl, strip_rows=cfg.strip_rows,
+            merge_keys=cfg.merge_keys))
 
     def should_tile(self, n_pixels: int) -> bool:
         """True when the config routes an ``n_pixels`` image through the
