@@ -1,0 +1,148 @@
+"""Declarative perf/sanity gate over BENCH_*.json artifacts (CI's teeth).
+
+One rule table per artifact; each rule is ``(name, check)`` where
+``check(doc)`` returns an error string or ``None``.  Every rule runs
+(failures accumulate — one broken field doesn't mask the rest) and a
+non-empty failure list exits 1.  This replaces ad-hoc inline asserts in
+the workflow file: the gate is code-reviewed, versioned next to the
+benchmarks it guards, and runnable locally::
+
+  PYTHONPATH=src python -m benchmarks.perf_gate \
+      --core BENCH_core.json --serve BENCH_serve.json
+
+Gated invariants:
+
+* ``BENCH_core.json`` — the packed merge-key fields exist on every row
+  and the packed phase-C path compiles with **zero full-image sorts**
+  (the PR 5 rank-free guarantee must not quietly regress).
+* ``BENCH_serve.json`` — a warmed server re-traces **nothing** over the
+  sustained mixed-shape stream (``steady_state_traces == 0``), every
+  bucket reports ordered p50<=p95<=p99 latency summaries and nonzero
+  occupancy, nothing failed or was rejected in steady state, and the
+  saturation burst actually engaged backpressure (rejections > 0).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+CORE_FIELDS = ("phase_c_packed_s", "phase_c_rank_s",
+               "phase_c_packed_speedup", "hlo_sorts_packed",
+               "full_image_sorts_packed", "full_image_sorts_rank")
+
+
+def _core_fields(doc):
+    if not doc:
+        return "empty artifact"
+    for row in doc:
+        for field in CORE_FIELDS:
+            if field not in row:
+                return f"{row.get('name', '?')}: missing {field}"
+    return None
+
+
+def _core_no_full_sorts(doc):
+    for row in doc:
+        if row.get("full_image_sorts_packed") != 0:
+            return (f"{row.get('name', '?')}: packed phase C compiled "
+                    f"{row['full_image_sorts_packed']} full-image sorts")
+    return None
+
+
+def _serve_zero_traces(doc):
+    sst = doc.get("steady", {}).get("steady_state_traces")
+    if sst != 0:
+        return f"steady_state_traces == {sst!r}, want 0 (warm pool leak)"
+    return None
+
+
+def _serve_clean_steady(doc):
+    s = doc.get("steady", {})
+    for k in ("failed", "rejected"):
+        if s.get(k, -1) != 0:
+            return f"steady.{k} == {s.get(k)!r}, want 0"
+    if s.get("completed", 0) <= 0 or s.get("completed") != s.get(
+            "submitted"):
+        return (f"steady completed {s.get('completed')!r} != "
+                f"submitted {s.get('submitted')!r}")
+    return None
+
+
+def _serve_latency_summaries(doc):
+    buckets = doc.get("steady", {}).get("buckets", {})
+    if not buckets:
+        return "steady section has no buckets"
+    for label, b in buckets.items():
+        occ = b.get("occupancy")
+        if not occ or occ <= 0:
+            return f"bucket {label}: occupancy {occ!r}"
+        for series in ("queue_wait_s", "e2e_s"):
+            s = b.get(series, {})
+            ps = [s.get("p50"), s.get("p95"), s.get("p99")]
+            if any(p is None for p in ps):
+                return f"bucket {label}: {series} missing percentiles"
+            if not ps[0] <= ps[1] <= ps[2]:
+                return f"bucket {label}: {series} percentiles unordered"
+    return None
+
+
+def _serve_backpressure(doc):
+    sat = doc.get("saturation")
+    if sat is None:
+        return None     # smoke may run --no-saturation
+    if sat.get("rejected", 0) <= 0:
+        return "saturation burst produced no rejections"
+    if sat.get("retry_after_s_mean", 0) <= 0:
+        return "rejections carried no retry_after_s hint"
+    if sat.get("failed", -1) != 0:
+        return f"saturation failed {sat.get('failed')!r} requests"
+    return None
+
+
+RULES = {
+    "core": [("packed merge-key fields present", _core_fields),
+             ("packed phase C has zero full-image sorts",
+              _core_no_full_sorts)],
+    "serve": [("zero steady-state traces", _serve_zero_traces),
+              ("steady stream clean", _serve_clean_steady),
+              ("per-bucket SLO summaries", _serve_latency_summaries),
+              ("saturation engages backpressure", _serve_backpressure)],
+}
+
+
+def run_gate(kind: str, path: str) -> list[str]:
+    try:
+        doc = json.load(open(path))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"[{kind}] {path}: unreadable ({e})"]
+    failures = []
+    for name, check in RULES[kind]:
+        err = check(doc)
+        status = "ok" if err is None else f"FAIL: {err}"
+        print(f"[{kind}] {name}: {status}")
+        if err is not None:
+            failures.append(f"[{kind}] {name}: {err}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--core", help="BENCH_core.json path")
+    ap.add_argument("--serve", help="BENCH_serve.json path")
+    args = ap.parse_args()
+    if not (args.core or args.serve):
+        ap.error("nothing to gate: pass --core and/or --serve")
+    failures = []
+    for kind in ("core", "serve"):
+        path = getattr(args, kind)
+        if path:
+            failures += run_gate(kind, path)
+    if failures:
+        print(f"\nperf gate: {len(failures)} failure(s)")
+        sys.exit(1)
+    print("\nperf gate: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Serving benchmark: warmed daemon SLOs + saturation (BENCH_serve.json).
+
+Two measured sections over :mod:`repro.serving`:
+
+``steady``
+    Boot a :class:`~repro.serving.PHServer`, ``warmup()`` the plan pool
+    (the warmup dummy pre-walks the capacity regrow chain, so its cost —
+    reported as ``warmup.seconds`` — buys a trace-free steady state),
+    then drive a sustained mixed-shape stream from ``--clients``
+    submitter threads.  Reports per-bucket p50/p95/p99 queue-wait and
+    end-to-end latency, batch occupancy, throughput, plan-cache stats,
+    and ``steady_state_traces`` — the engine's own trace counters
+    measured across the stream, asserted **zero** here and again by
+    ``benchmarks.perf_gate`` on the artifact.
+
+``saturation``
+    A second server with a tiny admission bound (``--sat-queue``) hit
+    with an instantaneous burst: proves backpressure engages (rejections
+    counted, every rejection carrying a ``retry_after_s`` hint) and the
+    accepted requests still all resolve.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --buckets 64 128 \
+      --clients 4 --requests 32 --out BENCH_serve.json
+
+CI runs a small-bucket smoke per push, uploads the artifact, and gates
+on it via ``python -m benchmarks.perf_gate --serve BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.ph import PHConfig, PHEngine, ServeSpec
+from repro.serving import AdmissionError, PHServer
+
+
+def mixed_shapes(buckets, rng, count):
+    """Shapes cycling the bucket set, 60-100%% of each side: every
+    dispatch exercises pad + repair, none escapes its bucket."""
+    out = []
+    for i in range(count):
+        hb, wb = buckets[i % len(buckets)]
+        out.append((int(rng.integers(max(2, int(hb * 0.6)), hb + 1)),
+                    int(rng.integers(max(2, int(wb * 0.6)), wb + 1))))
+    return out
+
+
+def steady_section(config, args) -> dict:
+    engine = PHEngine(config)
+    server = PHServer(engine)
+    warm = server.warmup()
+    results = {"ok": 0}
+    lock = threading.Lock()
+
+    def client(cid):
+        rng = np.random.default_rng(args.seed + 100 + cid)
+        futs = []
+        for shape in mixed_shapes(config.serve.buckets, rng,
+                                  args.requests):
+            futs.append(server.submit(
+                rng.normal(size=shape).astype(np.float32)))
+        for f in futs:
+            f.result(timeout=600)
+        with lock:
+            results["ok"] += len(futs)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(args.clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert server.drain(60), "steady stream failed to drain"
+    elapsed = time.perf_counter() - t0
+    stats = server.stats()
+    server.shutdown()
+    sst = stats["steady_state_traces"]
+    assert sst == 0, \
+        f"steady state re-traced {sst} plans: {stats['engine']}"
+    assert stats["failed"] == 0 and stats["rejected"] == 0
+    assert stats["completed"] == results["ok"] \
+        == args.clients * args.requests
+    return {"warmup": warm,
+            "clients": args.clients,
+            "requests": results["ok"],
+            "elapsed_s": round(elapsed, 4),
+            "throughput_rps": round(results["ok"] / elapsed, 2),
+            **stats}
+
+
+def saturation_section(config, args) -> dict:
+    """Burst a tiny-queue server: backpressure must reject, survivors
+    must resolve."""
+    sat_spec = ServeSpec(buckets=config.serve.buckets,
+                         batch_cap=config.serve.batch_cap,
+                         max_queue=args.sat_queue,
+                         # slow tick: the burst outruns the drain
+                         tick_interval_s=0.05,
+                         admission="reject")
+    engine = PHEngine(config.replace(serve=sat_spec))
+    server = PHServer(engine)
+    server.warmup()
+    rng = np.random.default_rng(args.seed + 999)
+    burst = args.sat_burst
+    hb, wb = sat_spec.buckets[0]
+    futs, rejected, retry_hints = [], 0, []
+    for _ in range(burst):
+        img = rng.normal(size=(hb, wb)).astype(np.float32)
+        try:
+            futs.append(server.submit(img))
+        except AdmissionError as e:
+            rejected += 1
+            retry_hints.append(e.retry_after_s)
+    for f in futs:
+        f.result(timeout=600)
+    assert server.drain(60)
+    stats = server.stats()
+    server.shutdown()
+    assert rejected > 0, \
+        f"burst of {burst} never saturated max_queue={args.sat_queue}"
+    assert stats["rejected"] == rejected
+    assert stats["completed"] == len(futs) == burst - rejected
+    return {"burst": burst,
+            "max_queue": args.sat_queue,
+            "accepted": len(futs),
+            "rejected": rejected,
+            "retry_after_s_mean": round(float(np.mean(retry_hints)), 6),
+            **stats}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--buckets", type=int, nargs="+", default=[64, 128])
+    ap.add_argument("--batch-cap", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--tick-ms", type=float, default=2.0)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="requests per client in the steady section")
+    ap.add_argument("--sat-queue", type=int, default=4,
+                    help="admission bound for the saturation burst")
+    ap.add_argument("--sat-burst", type=int, default=48)
+    ap.add_argument("--filter", dest="filter_level", default=None,
+                    choices=["vanilla", "filter_std", "filter_database"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-saturation", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    kw = {}
+    if args.filter_level:
+        from repro.ph import FilterLevel
+        kw["filter_level"] = FilterLevel(args.filter_level)
+    config = PHConfig(serve=ServeSpec(
+        buckets=tuple(args.buckets), batch_cap=args.batch_cap,
+        max_queue=args.max_queue,
+        tick_interval_s=args.tick_ms / 1e3), **kw)
+
+    out = {"config": json.loads(config.to_json()),
+           "steady": steady_section(config, args)}
+    if not args.no_saturation:
+        out["saturation"] = saturation_section(config, args)
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    brief = {"steady_state_traces": out["steady"]["steady_state_traces"],
+             "throughput_rps": out["steady"]["throughput_rps"],
+             "occupancy": {k: v["occupancy"] for k, v in
+                           out["steady"]["buckets"].items()},
+             "p95_e2e_s": {k: v["e2e_s"].get("p95") for k, v in
+                           out["steady"]["buckets"].items()},
+             "saturation_rejected":
+                 out.get("saturation", {}).get("rejected")}
+    print(json.dumps(brief, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

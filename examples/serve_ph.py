@@ -1,0 +1,73 @@
+"""PH-as-a-service client snippet: submit, await futures, read SLOs.
+
+    PYTHONPATH=src python examples/serve_ph.py
+
+Boots an in-process :class:`repro.serving.PHServer` over one warmed
+engine, submits a burst of mixed-shape star fields from a few client
+threads (what the daemon is for — request-at-a-time traffic, not a
+prepared batch), and prints per-bucket latency percentiles. Each future
+resolves to exactly what ``engine.run(image)`` would return.
+
+For the CLI twin see ``python -m repro.launch.ph_serve``; for the gated
+benchmark see ``benchmarks/serve_bench.py``.
+"""
+import threading
+
+import numpy as np
+
+from repro.ph import PHConfig, PHEngine, ServeSpec
+from repro.serving import AdmissionError, PHServer
+
+
+def main():
+    config = PHConfig(serve=ServeSpec(buckets=(64, 128), batch_cap=4,
+                                      max_queue=32, admission="reject"))
+    engine = PHEngine(config)
+
+    with PHServer(engine) as server:
+        info = server.warmup()     # pre-trace the warm plan pool
+        print(f"warmup: {info['plans']} plans in {info['seconds']:.1f}s")
+
+        from repro.data import astro
+        rng = np.random.default_rng(0)
+        done = []
+        lock = threading.Lock()
+
+        def client(cid, n=8):
+            for i in range(n):
+                size = int(rng.integers(40, 129))
+                img = astro.generate_image(image_id=cid * 100 + i,
+                                           size=size)
+                try:
+                    fut = server.submit(img)
+                except AdmissionError as e:     # backpressure engaged
+                    print(f"client {cid}: rejected, retry in "
+                          f"{e.retry_after_s:.3f}s")
+                    continue
+                res = fut.result(timeout=120)   # a full PHResult
+                with lock:
+                    done.append(int(res.diagram.count))
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        stats = server.stats()
+        print(f"\nresolved {len(done)} requests "
+              f"(total objects: {sum(done)}); "
+              f"steady-state traces: {stats['steady_state_traces']}")
+        for label, b in stats["buckets"].items():
+            e2e = b["e2e_s"]
+            if not e2e.get("count"):
+                continue
+            print(f"  bucket {label}: occupancy {b['occupancy']:.2f}, "
+                  f"e2e p50 {e2e['p50'] * 1e3:.1f}ms "
+                  f"p95 {e2e['p95'] * 1e3:.1f}ms "
+                  f"p99 {e2e['p99'] * 1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

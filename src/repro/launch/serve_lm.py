@@ -1,4 +1,8 @@
-"""Batched serving driver: prefill + greedy decode over request batches.
+"""**Language-model** serving demo: prefill + greedy decode over batches.
+
+Not the PH service — persistent-homology serving lives in
+``launch/ph_serve.py`` (daemon: :mod:`repro.serving`).  This script is
+the LM-side counterpart kept for the transformer scaffold.
 
 Continuous-batching-lite: requests are grouped into fixed-size batches
 (padded), prefilled once, then decoded step-by-step with the sharded

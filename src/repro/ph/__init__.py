@@ -13,11 +13,13 @@ tests and internals, but applications, examples, launch scripts, and
 benchmarks go through this package.
 """
 from repro.ph.config import (  # noqa: F401
+    ADMISSION_POLICIES,
     CANDIDATE_MODES,
     DTYPES,
     MERGE_IMPLS,
     FilterLevel,
     PHConfig,
+    ServeSpec,
     TileSpec,
     parse_grid,
 )

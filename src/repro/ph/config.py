@@ -20,6 +20,7 @@ MERGE_IMPLS = ("scan", "boruvka")
 PHASE_A_IMPLS = ("fused", "pooled")
 DTYPES = (None, "float32", "float64", "int32", "bfloat16")
 BUCKET_ROUNDINGS = ("exact", "pow2")
+ADMISSION_POLICIES = ("reject", "block")
 
 
 def parse_grid(value) -> tuple[int, int]:
@@ -76,6 +77,73 @@ class TileSpec:
         """The fields that affect compiled tiled executables (capacities
         are keyed separately by the engine, like max_features)."""
         return (self.grid, self.halo)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Serving-daemon policy for :class:`repro.serving.PHServer`.
+
+    ``buckets`` is the fixed bucket set the daemon batches into (each
+    entry a square size or an ``(H, W)`` pair); ``None`` derives a bucket
+    per request shape via ``PHConfig.bucket_rounding`` (plans then trace
+    on first use instead of at :meth:`repro.ph.PHEngine.warmup`).  Every
+    dispatch runs at the fixed batch shape ``(batch_cap, H, W)`` — short
+    ticks pad free rows by repeating a real request — so one warmed plan
+    per bucket serves every steady-state tick.
+
+    ``max_queue`` bounds the *per-bucket* pending-request depth; at the
+    bound, admission follows ``admission``: ``"reject"`` raises
+    :class:`repro.serving.AdmissionError` (carrying a ``retry_after_s``
+    hint), ``"block"`` makes ``submit`` wait for a slot (backpressure
+    propagates to the caller).  ``tick_interval_s`` is the coalescing
+    window: a dispatch leaves once its bucket reaches ``batch_cap``
+    requests or the oldest pending request has waited one tick.
+    """
+
+    buckets: tuple[tuple[int, int], ...] | None = None
+    batch_cap: int = 4
+    max_queue: int = 64
+    tick_interval_s: float = 0.002
+    admission: str = "reject"
+
+    def __post_init__(self):
+        if self.buckets is not None:
+            norm = []
+            for b in self.buckets:
+                if isinstance(b, (int,)):
+                    b = (b, b)
+                b = tuple(int(x) for x in b)
+                if len(b) != 2 or not all(x >= 1 for x in b):
+                    raise ValueError(f"bucket must be a size or (H, W) of "
+                                     f"ints >= 1, got {b!r}")
+                norm.append(b)
+            if len(set(norm)) != len(norm):
+                raise ValueError(f"duplicate serve buckets in {norm}")
+            # Smallest-first, so bucket assignment picks the tightest fit.
+            object.__setattr__(self, "buckets",
+                               tuple(sorted(norm,
+                                            key=lambda s: (s[0] * s[1], s))))
+        for field in ("batch_cap", "max_queue"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{field} must be a positive int, got {v!r}")
+        if not (isinstance(self.tick_interval_s, (int, float))
+                and self.tick_interval_s >= 0):
+            raise ValueError(f"tick_interval_s must be >= 0, "
+                             f"got {self.tick_interval_s!r}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission must be one of "
+                             f"{ADMISSION_POLICIES}, got {self.admission!r}")
+
+    def replace(self, **changes) -> "ServeSpec":
+        return dataclasses.replace(self, **changes)
+
+    def plan_fields(self) -> tuple:
+        """The fields that decide compiled batch shapes: the bucket set
+        and the fixed dispatch batch size.  Queue depth, tick interval,
+        and admission policy are host-side scheduling and excluded (like
+        ``prefetch_rounds``)."""
+        return (self.buckets, self.batch_cap)
 
 
 class FilterLevel(str, enum.Enum):
@@ -146,6 +214,11 @@ class PHConfig:
     # prefetch_rounds: rounds the driver's background loader may stage
     # ahead of the computing round (0 = fully serial load->compute).
     prefetch_rounds: int = 1
+    # Serving-daemon policy (None = engine not used for serving).  The
+    # bucket set and batch cap decide which padded batch shapes compile
+    # (and which plans PHEngine.warmup pre-traces); queue depth / tick /
+    # admission are host-side.
+    serve: ServeSpec | None = None
 
     def __post_init__(self):
         if isinstance(self.filter_level, str) and \
@@ -157,6 +230,11 @@ class PHConfig:
         if self.tile is not None and not isinstance(self.tile, TileSpec):
             raise ValueError(f"tile must be a TileSpec or None, "
                              f"got {type(self.tile).__name__}")
+        if isinstance(self.serve, dict):
+            object.__setattr__(self, "serve", ServeSpec(**self.serve))
+        if self.serve is not None and not isinstance(self.serve, ServeSpec):
+            raise ValueError(f"serve must be a ServeSpec or None, "
+                             f"got {type(self.serve).__name__}")
         if self.candidate_mode not in CANDIDATE_MODES:
             raise ValueError(f"candidate_mode must be one of "
                              f"{CANDIDATE_MODES}, got {self.candidate_mode!r}")
@@ -231,7 +309,8 @@ class PHConfig:
         capacities under the same config).
         """
         return (self.stage_signature(), self.dtype, self.bucket_rounding,
-                self.tile.plan_fields() if self.tile is not None else None)
+                self.tile.plan_fields() if self.tile is not None else None,
+                self.serve.plan_fields() if self.serve is not None else None)
 
     # -- construction / serialization -------------------------------------
 
@@ -245,7 +324,10 @@ class PHConfig:
         ``filter`` or ``filter_level``,
         ``dtype``, ``use_pallas``, ``interpret``,
         ``no_regrow``/``auto_regrow``, ``max_regrows``,
-        ``bucket_rounding``, ``prefetch_rounds``/``no_prefetch``.
+        ``bucket_rounding``, ``prefetch_rounds``/``no_prefetch``; serving:
+        ``serve`` (bool), ``serve_buckets`` (sizes or ``"HxW"`` strings),
+        ``serve_batch_cap``, ``serve_max_queue``, ``serve_tick_ms``,
+        ``serve_admission``.
         """
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
@@ -278,6 +360,23 @@ class PHConfig:
             tile_kw["grid"] = parse_grid(tile_kw["grid"])
         if tile_kw or getattr(args, "tile", False):
             kw["tile"] = TileSpec(**tile_kw)
+        serve_kw: dict[str, Any] = {}
+        for attr, field in (("serve_buckets", "buckets"),
+                            ("serve_batch_cap", "batch_cap"),
+                            ("serve_max_queue", "max_queue"),
+                            ("serve_admission", "admission")):
+            v = getattr(args, attr, None)
+            if v is not None:
+                serve_kw[field] = v
+        tick_ms = getattr(args, "serve_tick_ms", None)
+        if tick_ms is not None:
+            serve_kw["tick_interval_s"] = float(tick_ms) / 1e3
+        if serve_kw.get("buckets") is not None:
+            serve_kw["buckets"] = tuple(
+                parse_grid(b) if isinstance(b, str) and "x" in b.lower()
+                else int(b) for b in serve_kw["buckets"])
+        if serve_kw or getattr(args, "serve", False):
+            kw["serve"] = ServeSpec(**serve_kw)
         kw.update(overrides)
         return cls(**kw)
 

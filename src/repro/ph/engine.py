@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 from typing import Any, Callable
 
 import jax
@@ -54,9 +56,16 @@ class Plan:
     :func:`repro.core.packed_keys.key_scope` — the scope must wrap the
     outermost jit call, which is exactly what ``__call__``/:meth:`lower`
     are.
+
+    Thread safety: concurrent submitters (the serving daemon, the hammer
+    regression test) may race into one plan.  The *first* call — the one
+    that traces — is serialized under the plan lock so two threads cannot
+    both pay (and double-count) the trace; once ``traces > 0`` the
+    compiled executable is reached without the lock, so steady-state
+    calls run concurrently.
     """
 
-    __slots__ = ("fn", "key", "traces", "calls", "merge_keys")
+    __slots__ = ("fn", "key", "traces", "calls", "merge_keys", "_lock")
 
     def __init__(self, fn: Callable, key: tuple, merge_keys: str = "rank"):
         self.fn = fn
@@ -64,9 +73,16 @@ class Plan:
         self.traces = 0
         self.calls = 0
         self.merge_keys = merge_keys
+        self._lock = threading.Lock()
 
     def __call__(self, *args):
-        self.calls += 1
+        with self._lock:
+            self.calls += 1
+            cold = self.traces == 0
+        if cold:
+            with self._lock:
+                with key_scope(self.merge_keys):
+                    return self.fn(*args)
         with key_scope(self.merge_keys):
             return self.fn(*args)
 
@@ -125,37 +141,48 @@ class PHEngine:
         self._hits = 0
         self._misses = 0
         self.regrow_log: list[dict] = []
+        # Guards the plan cache, the regrow memo, and every counter:
+        # concurrent submitters (the serving daemon's clients, N threads
+        # hammering run()) share one engine, and an unguarded cache miss
+        # would let two threads build — and trace — the same plan twice.
+        # Tracing/compute happen *outside* this lock (Plan serializes its
+        # own first call), so the engine lock is never held across XLA.
+        self._lock = threading.RLock()
 
     # -- plan cache --------------------------------------------------------
 
     def get_plan(self, key: tuple, builder: Callable[[Plan], Callable],
                  merge_keys: str = "rank") -> Plan:
-        """Fetch or build the compiled plan for ``key``.
+        """Fetch or build the compiled plan for ``key`` (thread-safe: one
+        plan object per key, however many threads race the miss).
 
         ``builder(plan)`` returns the callable; it receives the plan object
         so traced wrappers can bump ``plan.traces`` at trace time.
         ``merge_keys`` is the *resolved* key encoding — packed plans run
         their trace/lower/execute under the int64 key scope.
         """
-        plan = self._plans.get(key)
-        if plan is None:
-            plan = Plan(None, key, merge_keys)
-            plan.fn = builder(plan)
-            self._plans[key] = plan
-            self._misses += 1
-        else:
-            self._hits += 1
-        return plan
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                plan = Plan(None, key, merge_keys)
+                plan.fn = builder(plan)
+                self._plans[key] = plan
+                self._misses += 1
+            else:
+                self._hits += 1
+            return plan
 
     def plan_stats(self) -> dict:
-        return {
-            "plans": len(self._plans),
-            "traces": sum(p.traces for p in self._plans.values()),
-            "calls": sum(p.calls for p in self._plans.values()),
-            "hits": self._hits,
-            "misses": self._misses,
-            "regrows": len(self.regrow_log),
-        }
+        with self._lock:
+            plans = list(self._plans.values())
+            return {
+                "plans": len(plans),
+                "traces": sum(p.traces for p in plans),
+                "calls": sum(p.calls for p in plans),
+                "hits": self._hits,
+                "misses": self._misses,
+                "regrows": len(self.regrow_log),
+            }
 
     def _merge_keys_for(self, dtype) -> str:
         """The resolved phase-C key encoding for ``dtype`` under this
@@ -326,7 +353,8 @@ class PHEngine:
         cfg = self.config
         mf, mc = self.initial_capacities(n)
         if cfg.auto_regrow and memo_key is not None:
-            got = self._grown.get(memo_key)
+            with self._lock:
+                got = self._grown.get(memo_key)
             if got:
                 mf = max(mf, min(got[0], n))
                 mc = max(mc, min(got[1], n))
@@ -337,14 +365,18 @@ class PHEngine:
             nmf, nmc = self.grow_capacities(mf, mc, n)
             if (nmf, nmc) == (mf, mc):
                 break   # at the ceiling: residual overflow is reported
-            self.regrow_log.append({"kind": kind, "from": (mf, mc),
-                                    "to": (nmf, nmc)})
+            with self._lock:
+                self.regrow_log.append({"kind": kind, "from": (mf, mc),
+                                        "to": (nmf, nmc)})
             mf, mc = nmf, nmc
             attempts += 1
             out = dispatch(mf, mc)
             over = overflowed(out)
         if attempts and memo_key is not None:
-            self._grown[memo_key] = (mf, mc)
+            with self._lock:
+                got = self._grown.get(memo_key)
+                if got is None or got < (mf, mc):
+                    self._grown[memo_key] = (mf, mc)
         return out, RegrowStats(attempts, mf, mc, bool(over))
 
     # -- data prep ---------------------------------------------------------
@@ -365,6 +397,90 @@ class PHEngine:
         t, _ = astro.filter_threshold(np.asarray(image),
                                       self.config.filter_level)
         return t
+
+    def auto_threshold(self, image) -> float | None:
+        """The Variant-2 threshold ``config.filter_level`` implies for
+        ``image`` (``None`` under VANILLA).  The serving daemon calls
+        this on the submitter's thread so the coalescing tick never pays
+        the host-side statistic."""
+        return self._auto_threshold(image)
+
+    # -- warm plan pool ----------------------------------------------------
+
+    def warmup(self, bucket_shapes=None, *, batch_sizes=None, dtype=None,
+               truncated: bool = True) -> dict:
+        """Pre-trace and compile the plans a steady-state request stream
+        will hit, so no request ever pays a trace (serving p50 latency
+        becomes compute-only).
+
+        ``bucket_shapes``: square sizes or ``(H, W)`` pairs; defaults to
+        the config's ``serve.buckets``.  For every bucket this pushes a
+        **worst-case dummy** (a checkerboard — the maximal
+        feature/candidate load a bucket can produce) through the normal
+        dispatch-with-regrow path, for the **single**-image plan plus one
+        **batched** plan per entry of ``batch_sizes`` (default: the
+        config's ``serve.batch_cap``, the fixed dispatch batch the daemon
+        pads every tick to).  Trace, lowering, compile, *and* the
+        overflow regrow chain all happen here: the sticky regrow memo
+        records the grown capacity tier, so steady-state requests start
+        at a tier whose plan already exists.  ``truncated`` warms the
+        thresholded program variants (what padded serving batches always
+        run; ``-inf`` thresholds make them exact no-ops for unfiltered
+        images).
+
+        Returns ``{"plans": ..., "traces": ..., "seconds": ...}`` — the
+        *new* plans/traces this warmup added.  After it, the existing
+        plan trace counters (:meth:`plan_stats`) let callers assert that
+        steady state re-traces nothing; ``benchmarks/serve_bench.py``
+        gates on exactly that.
+        """
+        spec = self.config.serve
+        if bucket_shapes is None:
+            if spec is None or spec.buckets is None:
+                raise ValueError("warmup needs bucket_shapes (or a config "
+                                 "serve spec with a fixed bucket set)")
+            bucket_shapes = spec.buckets
+        if batch_sizes is None:
+            batch_sizes = (spec.batch_cap,) if spec is not None else ()
+        before = self.plan_stats()
+        t0 = time.perf_counter()
+        for shape in bucket_shapes:
+            shape = (int(shape), int(shape)) if isinstance(shape, int) \
+                else tuple(shape)
+            h, w = shape
+            n = h * w
+            # Stride-2 peak grid: under 8-connectivity the local maxima
+            # of an image form an independent set of the king graph,
+            # whose maximum size is ceil(h/2)*ceil(w/2) — exactly the
+            # peaks planted here (distinct heights, so no plateaus merge
+            # them).  No real image of this bucket produces more
+            # features, so the regrow tier discovered here upper-bounds
+            # the tier any steady-state dispatch will ask for.
+            dummy = np.zeros(shape, np.dtype(dtype or "float32"))
+            peaks = dummy[::2, ::2]
+            peaks[...] = 1 + np.arange(peaks.size).reshape(peaks.shape)
+            x = self.cast_input(dummy)
+            tv = jnp.asarray(-np.inf, threshold_dtype(x.dtype))
+            over = lambda d: bool(np.any(np.asarray(d.overflow)))  # noqa: E731
+            for kind, b in [("single", None)] + [("batched", int(b))
+                                                 for b in batch_sizes]:
+                bshape = shape if b is None else (b, h, w)
+                xb = x if b is None else jnp.broadcast_to(x, bshape)
+                tb = tv if b is None else jnp.broadcast_to(tv, (b,))
+
+                def dispatch(mf, mc, kind=kind, bshape=bshape, xb=xb, tb=tb):
+                    plan = self._local_plan(kind, bshape, x.dtype, mf, mc,
+                                            truncated)
+                    return plan(xb, tb) if truncated else plan(xb)
+
+                out, _ = self.run_with_regrow(
+                    dispatch, over, n, kind,
+                    memo_key=(kind, bshape, str(x.dtype)))
+                jax.block_until_ready(out)
+        after = self.plan_stats()
+        return {"plans": after["plans"] - before["plans"],
+                "traces": after["traces"] - before["traces"],
+                "seconds": round(time.perf_counter() - t0, 4)}
 
     # -- public entry points ----------------------------------------------
 
@@ -400,12 +516,47 @@ class PHEngine:
             max_candidates=stats.final_max_candidates), stats,
             truncate_value)
 
-    def run_batch(self, images, truncate_values=None) -> PHResult:
-        """vmap'd PH over a (B, H, W) batch, regrowing on *any* overflow.
+    def run_batch(self, images, truncate_values=None, *,
+                  bucket: tuple[int, int] | None = None) -> PHResult:
+        """vmap'd PH over an image batch, regrowing on *any* overflow.
 
-        ``truncate_values``: optional (B,) thresholds; derived per image
-        from ``config.filter_level`` when omitted.
+        ``images``: a ``(B, H, W)`` array (one compiled batch — the fast
+        path), or a sequence of 2D images whose shapes may be **mixed**.
+        Mixed shapes are padded to one shape bucket — ``bucket``, or the
+        elementwise maximum of each image's
+        :func:`repro.pipeline.scheduler.bucket_shape` under
+        ``config.bucket_rounding`` — with the inert fill, and the two pad
+        artifacts are repaired host-side after compute
+        (:mod:`repro.pipeline.padding`), so every row of the result is
+        bit-identical to :meth:`run` on that image alone.  ``bucket``
+        also forces uniform-shape batches into a fixed padded dispatch
+        shape (what the serving daemon's warmed plans require).
+
+        ``truncate_values``: optional per-image thresholds ((B,) array or
+        sequence; ``None`` entries derive from ``config.filter_level``).
+        Padded rows always run thresholded; when neither an explicit nor
+        a filter-level threshold exists, the image minimum stands in
+        (exact — it keeps every real pixel and excludes every pad pixel).
         """
+        arr = images if hasattr(images, "ndim") else None
+        if arr is not None and arr.ndim == 3 and (
+                bucket is None or tuple(bucket) == tuple(arr.shape[1:])):
+            return self._run_batch_uniform(arr, truncate_values)
+        seq = [arr[i] for i in range(arr.shape[0])] if arr is not None \
+            else list(images)
+        if not seq:
+            raise ValueError("run_batch needs at least one image")
+        shapes = {tuple(np.shape(im)) for im in seq}
+        if any(len(s) != 2 for s in shapes):
+            raise ValueError(f"expected a (B, H, W) batch or a sequence of "
+                             f"2D images, got shapes {sorted(shapes)}")
+        if bucket is None and len(shapes) == 1:
+            return self._run_batch_uniform(np.stack(
+                [np.asarray(im) for im in seq]), truncate_values)
+        return self._run_batch_bucketed(seq, truncate_values, bucket)
+
+    def _run_batch_uniform(self, images, truncate_values=None) -> PHResult:
+        """One-compiled-shape (B, H, W) batch (the pre-serving path)."""
         x = self.cast_input(images)
         if x.ndim != 3:
             raise ValueError(f"expected (B, H, W) batch, got shape {x.shape}")
@@ -435,6 +586,68 @@ class PHEngine:
             max_features=stats.final_max_features,
             max_candidates=stats.final_max_candidates), stats,
             truncate_values)
+
+    def _run_batch_bucketed(self, seq, truncate_values,
+                            bucket: tuple[int, int] | None) -> PHResult:
+        """Mixed-shape batch via one shape-bucketed padded dispatch."""
+        from repro.pipeline.padding import pad_fixup, pad_image, \
+            pad_threshold, unpad_diagram
+        from repro.pipeline.scheduler import bucket_shape
+        imgs = [np.asarray(self.cast_input(im)) for im in seq]
+        if bucket is None:
+            per = [bucket_shape(im.shape, self.config.bucket_rounding)
+                   for im in imgs]
+            bucket = (max(s[0] for s in per), max(s[1] for s in per))
+        bucket = (int(bucket[0]), int(bucket[1]))
+        if truncate_values is None:
+            tvs: list = [None] * len(imgs)
+        else:
+            tvs = [None if t is None or not np.isfinite(t) else float(t)
+                   for t in np.asarray(truncate_values, object).tolist()] \
+                if not np.isscalar(truncate_values) \
+                else [float(truncate_values)] * len(imgs)
+        if len(tvs) != len(imgs):
+            raise ValueError(f"{len(tvs)} thresholds for {len(imgs)} images")
+
+        batch = np.empty((len(imgs), *bucket), imgs[0].dtype)
+        tvals = np.empty((len(imgs),), np.float64)
+        fixups: list = [None] * len(imgs)
+        for i, im in enumerate(imgs):
+            if im.dtype != imgs[0].dtype:
+                raise ValueError("mixed dtypes in one batch: "
+                                 f"{im.dtype} vs {imgs[0].dtype}")
+            t = tvs[i] if tvs[i] is not None else self._auto_threshold(im)
+            if im.shape != bucket:
+                t = pad_threshold(im, t)
+                fixups[i] = pad_fixup(im)
+            batch[i] = pad_image(im, bucket)
+            tvals[i] = -np.inf if t is None else t
+
+        dtype = batch.dtype
+        shape = batch.shape
+        n = bucket[0] * bucket[1]
+        xb = jnp.asarray(batch)
+        tvj = jnp.asarray(tvals, threshold_dtype(dtype))
+
+        def dispatch(mf, mc):
+            plan = self._local_plan("batched", shape, dtype, mf, mc, True)
+            return plan(xb, tvj)
+
+        diag, stats = self.run_with_regrow(
+            dispatch, lambda d: bool(np.any(np.asarray(d.overflow))),
+            n, "batched", memo_key=("batched", shape, str(dtype)))
+        rows = []
+        host = jax.tree.map(np.asarray, diag)
+        for i in range(len(imgs)):
+            d = Diagram(*(x[i] for x in host))
+            if fixups[i] is not None:
+                d = unpad_diagram(d, fixups[i], bucket)
+            rows.append(d)
+        stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+        return PHResult(stacked, self.config.replace(
+            max_features=stats.final_max_features,
+            max_candidates=stats.final_max_candidates), stats,
+            tvals)
 
     def num_candidates(self, image, truncate_value=None) -> int:
         """Count death-point candidates under this engine's config (for
@@ -573,7 +786,8 @@ class PHEngine:
         ceil_tf, ceil_tk = self._ceilings(tile_n)
         memo_key = ("tiled", tuple(shape), grid, str(dtype), ctx)
         if cfg.auto_regrow:
-            got = self._grown.get(memo_key)
+            with self._lock:
+                got = self._grown.get(memo_key)
             if got:
                 mf = max(mf, min(got[0], n))
                 tf = max(tf, min(got[1], tile_n))
@@ -602,13 +816,15 @@ class PHEngine:
                 ntk = min(tk * cfg.regrow_factor, ceil_tk)
             if (nmf, ntf, ntk) == (mf, tf, tk):
                 break   # at the ceilings: residual overflow is reported
-            self.regrow_log.append({"kind": "tiled",
-                                    "from": (mf, tf, tk),
-                                    "to": (nmf, ntf, ntk)})
+            with self._lock:
+                self.regrow_log.append({"kind": "tiled",
+                                        "from": (mf, tf, tk),
+                                        "to": (nmf, ntf, ntk)})
             mf, tf, tk = nmf, ntf, ntk
             attempts += 1
         if attempts:
-            self._grown[memo_key] = (mf, tf, tk)
+            with self._lock:
+                self._grown[memo_key] = (mf, tf, tk)
 
         # final_max_candidates reports the per-tile candidate capacity (the
         # knob that actually regrows on the tiled path).

@@ -22,6 +22,10 @@ leaving exactly two pad artifacts, both repaired host-side in
 * the essential class dies at the pad minimum (``-inf``) instead of the
   image minimum, which the loader records at generation time.
 
+The padding/repair primitives live in :mod:`repro.pipeline.padding` and
+are shared with ``PHEngine.run_batch``'s mixed-shape path and the serving
+daemon's coalescing tick.
+
 The compiled sharded program comes from the engine's plan cache
 (:meth:`repro.ph.PHEngine.sharded_plan`); this module only moves data and
 applies the engine's overflow auto-regrow policy round by round.
@@ -41,6 +45,7 @@ from repro.core import Diagram
 from repro.data import astro
 from repro.ph.config import FilterLevel
 from repro.ph.engine import PHEngine, threshold_dtype
+from repro.pipeline.padding import pad_fill_value, pad_fixup, unpad_diagram
 from repro.pipeline.scheduler import BucketRound, ImageMeta
 
 
@@ -148,9 +153,7 @@ class ShardedPHExecutor:
         hb, wb = rnd.shape
         bdt = np.asarray(
             self.engine.cast_input(np.zeros((), np.float32))).dtype
-        fill = (-np.inf if np.issubdtype(bdt, np.floating)
-                else np.iinfo(bdt).min)
-        batch = np.full((m, hb, wb), fill, bdt)
+        batch = np.full((m, hb, wb), pad_fill_value(bdt), bdt)
         tvals = np.full((m,), -np.inf, np.float32)
         fixups: list = [None] * len(rnd.entries)
         for k, (slot, meta) in enumerate(rnd.entries):
@@ -168,10 +171,7 @@ class ShardedPHExecutor:
                         "False)")
                 batch[slot, :h, :w] = img
                 tvals[slot] = t
-                # argmin = first (lowest flat index) occurrence of the
-                # minimum — exactly the gmin the essential class dies at.
-                mni = int(img.argmin())
-                fixups[k] = (h, w, img.reshape(-1)[mni], mni)
+                fixups[k] = pad_fixup(img)
             else:
                 batch[slot] = img
                 tvals[slot] = -np.inf if t is None else t
@@ -230,7 +230,7 @@ class ShardedPHExecutor:
         for k, (slot, meta) in enumerate(rnd.entries):
             d = Diagram(*(np.asarray(x[slot]) for x in diags))
             if staged.fixups[k] is not None:
-                d = _unpad_diagram(d, staged.fixups[k], rnd.shape)
+                d = unpad_diagram(d, staged.fixups[k], rnd.shape)
             out[meta.image_id] = d
         return out
 
@@ -324,29 +324,3 @@ def _require_square(shape) -> tuple[int, int]:
     return h, w
 
 
-def _unpad_diagram(d: Diagram, fixup, bucket: tuple[int, int]) -> Diagram:
-    """Undo the two pad artifacts of a bucket-padded image's diagram.
-
-    ``fixup = (H, W, min_val, min_idx)`` with indices in the *unpadded*
-    frame.  Real-pixel row order is preserved by right/bottom padding, so
-    remapping flat indices from stride ``Wb`` to stride ``W`` and restoring
-    the essential death (the true global minimum, recorded at load time)
-    makes the diagram bit-identical to the unpadded whole-image run.
-    """
-    h, w, mnv, mni = fixup
-    wb = bucket[1]
-
-    def remap(p):
-        p = p.copy()
-        valid = p >= 0
-        p[valid] = (p[valid] // wb) * w + (p[valid] % wb)
-        return p
-
-    p_birth = remap(d.p_birth)
-    p_death = remap(d.p_death)
-    death = d.death.copy()
-    if int(d.count) > 0:        # row 0 is the essential class (max birth)
-        death[0] = mnv
-        p_death[0] = mni
-    return Diagram(d.birth, death, p_birth, p_death,
-                   d.count, d.n_unmerged, d.overflow)

@@ -1,0 +1,114 @@
+"""Bucket padding and pad-artifact repair, shared by every padded dispatch.
+
+Three call sites stage mixed-shape images into one fixed compiled batch
+shape: the sharded executor's bucketed rounds
+(:meth:`repro.pipeline.executor.ShardedPHExecutor.load_round`), the
+engine's mixed-shape :meth:`repro.ph.PHEngine.run_batch`, and the serving
+daemon's coalescing tick (:class:`repro.serving.PHServer`).  They all rely
+on the same exactness argument (src/repro/ph/README.md "Padding
+correctness"):
+
+* pad pixels are filled with the dtype minimum (``-inf`` for floats), so
+  under a finite per-image Variant-2 threshold they are **provably
+  inert** — below every threshold, they produce no births, no candidates,
+  and no merges;
+* when no filter level supplies a threshold, the **image minimum** is an
+  exact substitute: ``pixhomology`` keeps pixels ``>= truncate_value``, so
+  a threshold at the minimum excludes nothing real while still excluding
+  every pad pixel (the essential death it clips is restored by the fixup
+  below) — this is what lets VANILLA requests share padded buckets;
+* the two residual artifacts are repaired host-side from load-time
+  metadata: flat indices are strided by the bucket width instead of the
+  image width (a pure remap, row order among real pixels is preserved by
+  right/bottom padding), and the essential class dies at the pad minimum
+  instead of the recorded image minimum.
+
+:func:`pad_fixup` captures the metadata at staging time;
+:func:`unpad_diagram` applies the repair, making padded diagrams
+bit-identical to unpadded per-image runs (incl. ``p_birth``/``p_death``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Diagram
+
+
+def pad_fill_value(dtype):
+    """The below-everything fill for pad pixels of ``dtype``."""
+    dtype = np.dtype(dtype)
+    return -np.inf if np.issubdtype(dtype, np.floating) \
+        else np.iinfo(dtype).min
+
+
+def pad_threshold(img: np.ndarray, threshold: float | None) -> float:
+    """The finite threshold a padded dispatch of ``img`` runs under.
+
+    An explicit finite ``threshold`` passes through; otherwise the image
+    minimum stands in (exact — see the module docstring).  Raises when no
+    finite threshold above the pad fill exists (an integer image whose
+    minimum sits at the dtype minimum is indistinguishable from its own
+    padding).
+    """
+    if threshold is not None and np.isfinite(threshold):
+        return float(threshold)
+    t = float(img.min())
+    fill = pad_fill_value(img.dtype)
+    if not np.isfinite(t) or t <= fill:
+        raise ValueError(
+            f"cannot pad image: no finite threshold above the pad fill "
+            f"{fill!r} (image minimum {t!r}); pass an explicit "
+            f"truncate_value or use exact-shape batches")
+    return t
+
+
+def pad_fixup(img: np.ndarray) -> tuple[int, int, float, int]:
+    """Repair metadata of one to-be-padded image: ``(H, W, min_val,
+    min_idx)`` with the index flat in the *unpadded* frame.  ``argmin``
+    returns the first (lowest flat index) occurrence of the minimum —
+    exactly the global minimum the essential class dies at."""
+    h, w = img.shape
+    mni = int(img.argmin())
+    return (h, w, img.reshape(-1)[mni], mni)
+
+
+def pad_image(img: np.ndarray, bucket: tuple[int, int]) -> np.ndarray:
+    """Right/bottom-pad ``img`` to ``bucket`` with the inert fill (row
+    order among real pixels is preserved, so :func:`unpad_diagram`'s
+    stride remap is exact)."""
+    h, w = img.shape
+    hb, wb = bucket
+    if (h, w) == (hb, wb):
+        return img
+    if h > hb or w > wb:
+        raise ValueError(f"image {img.shape} exceeds bucket {bucket}")
+    out = np.full((hb, wb), pad_fill_value(img.dtype), img.dtype)
+    out[:h, :w] = img
+    return out
+
+
+def unpad_diagram(d: Diagram, fixup, bucket: tuple[int, int]) -> Diagram:
+    """Undo the two pad artifacts of a bucket-padded image's diagram.
+
+    ``fixup = (H, W, min_val, min_idx)`` from :func:`pad_fixup`.
+    Remapping flat indices from stride ``Wb`` to stride ``W`` and
+    restoring the essential death makes the diagram bit-identical to the
+    unpadded whole-image run.
+    """
+    h, w, mnv, mni = fixup
+    wb = bucket[1]
+
+    def remap(p):
+        p = p.copy()
+        valid = p >= 0
+        p[valid] = (p[valid] // wb) * w + (p[valid] % wb)
+        return p
+
+    p_birth = remap(d.p_birth)
+    p_death = remap(d.p_death)
+    death = d.death.copy()
+    if int(d.count) > 0:        # row 0 is the essential class (max birth)
+        death[0] = mnv
+        p_death[0] = mni
+    return Diagram(d.birth, death, p_birth, p_death,
+                   d.count, d.n_unmerged, d.overflow)

@@ -185,6 +185,27 @@ def bucket_shape(shape: tuple[int, int], rounding: str = "pow2"
     raise ValueError(f"unknown bucket rounding {rounding!r}")
 
 
+def assign_bucket(shape: tuple[int, int],
+                  buckets: tuple[tuple[int, int], ...] | None = None,
+                  rounding: str = "pow2") -> tuple[int, int] | None:
+    """The serving bucket a request ``shape`` dispatches under.
+
+    With a fixed ``buckets`` set (``ServeSpec.buckets``, sorted
+    smallest-first) the tightest bucket containing the shape wins —
+    ``None`` when it fits none (the caller rejects the request; a
+    too-large image must go through the tiled path, not a padded batch).
+    Without one, the shape derives its own bucket via
+    :func:`bucket_shape`, exactly like the batch pipeline's rounds.
+    """
+    if buckets is None:
+        return bucket_shape(tuple(shape), rounding)
+    h, w = shape
+    for hb, wb in buckets:
+        if h <= hb and w <= wb:
+            return (hb, wb)
+    return None
+
+
 def effective_cost(cost: float, meta: ImageMeta,
                    shape: tuple[int, int]) -> float:
     """Pad-aware cost: running ``meta`` inside a ``shape``-padded program

@@ -1,0 +1,27 @@
+"""PH-as-a-service: async daemon, bucketed continuous batching, SLO metrics.
+
+    from repro.ph import PHConfig, PHEngine, ServeSpec
+    from repro.serving import PHServer
+
+    engine = PHEngine(PHConfig(serve=ServeSpec(buckets=(64, 128))))
+    with PHServer(engine) as srv:
+        srv.warmup()                        # pre-trace the warm plan pool
+        fut = srv.submit(image)             # Future[PHResult]
+        diagram = fut.result().diagram
+    print(srv.stats())                      # p50/p95/p99, occupancy, ...
+
+See :mod:`repro.serving.server` for the daemon and
+:mod:`repro.serving.metrics` for the SLO instrumentation;
+``launch/ph_serve.py`` wires both into a CLI demo and
+``benchmarks/serve_bench.py`` into the gated benchmark.
+"""
+from repro.serving.metrics import (  # noqa: F401
+    BucketMetrics,
+    Reservoir,
+    ServeMetrics,
+    bucket_label,
+)
+from repro.serving.server import (  # noqa: F401
+    AdmissionError,
+    PHServer,
+)

@@ -1,0 +1,323 @@
+"""PH-as-a-service: an async serving daemon over one shared PHEngine.
+
+The batch entry points grew bottom-up (PR 2 ``run_batch``, PR 3's
+prefetch-pipelined executor) but all assume the caller *has* a batch.
+A service sees the opposite shape of traffic: many independent clients,
+one image each, shapes mixed, arrival times arbitrary.  This module
+closes that gap with a daemon that keeps the engine's compiled plans hot
+and turns request streams into the fixed-shape batches those plans want:
+
+``submit(image, truncate_value) -> concurrent.futures.Future[PHResult]``
+    Clients enqueue and move on; the future resolves with exactly what
+    ``PHEngine.run(image, truncate_value)`` would have returned
+    (bit-identical — padding artifacts are repaired by
+    :mod:`repro.pipeline.padding` inside ``engine.run_batch``).
+
+**Coalescing tick** (modeled on the executor's prefetch loader thread):
+one daemon thread blocks until work arrives, sleeps one
+``tick_interval_s`` so concurrent submitters land in the same tick, then
+drains every non-empty bucket queue, up to ``batch_cap`` requests per
+bucket per pass.  Under sustained load the loop never sleeps —
+continuous batching.
+
+**Fixed dispatch shape**: a partially filled batch is padded to exactly
+``(batch_cap, Hb, Wb)`` by repeating a real request, so every dispatch
+of a bucket reuses the *one* plan ``warmup()`` traced for it.  Combined
+with the warmup dummy that pre-walks the regrow chain
+(:meth:`repro.ph.engine.PHEngine.warmup`), steady state re-traces
+nothing; ``steady_state_traces()`` measures exactly that and
+``benchmarks/serve_bench.py`` gates on it.
+
+**Admission control**: each bucket queue is bounded by ``max_queue``.
+At the bound, the ``"reject"`` policy raises :class:`AdmissionError`
+carrying a ``retry_after_s`` hint (estimated from the queue depth and
+recent batch latency); the ``"block"`` policy parks the submitting
+thread until space frees.  ``shutdown(drain=True)`` stops admission,
+lets the tick thread finish every queued request, and joins it;
+``drain=False`` fails undispatched futures instead.
+
+Thread model: client threads run ``submit`` (queue + metrics, no XLA);
+the single tick thread runs every dispatch.  The shared engine is
+internally locked (plan cache / regrow memo), so hammering the *engine*
+from more threads is also safe — the daemon just never needs to.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.ph.config import ServeSpec
+from repro.ph.engine import PHEngine, PHResult
+from repro.pipeline.scheduler import assign_bucket
+from repro.serving.metrics import ServeMetrics
+
+__all__ = ["AdmissionError", "PHServer"]
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit`` when a bucket queue is full under the
+    ``"reject"`` admission policy.  ``retry_after_s`` estimates when the
+    queue should have space (depth worth of batches at the recent
+    per-batch latency)."""
+
+    def __init__(self, message: str, retry_after_s: float):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
+
+
+class _Request:
+    __slots__ = ("image", "truncate_value", "bucket", "future", "t_submit")
+
+    def __init__(self, image, truncate_value, bucket):
+        self.image = image
+        self.truncate_value = truncate_value
+        self.bucket = bucket
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+
+
+class PHServer:
+    """Async PH daemon: bucketed continuous batching over one engine.
+
+    ``engine``: the shared :class:`PHEngine`; its ``config.serve``
+    (:class:`ServeSpec`) supplies the bucket set and serving knobs (a
+    default spec is used when absent — dynamic pow-2 buckets, which
+    serve correctly but cannot be fully pre-warmed).
+
+    Lifecycle: construct (``start=True`` spawns the tick thread
+    immediately), optionally :meth:`warmup`, ``submit`` at will, then
+    :meth:`shutdown` — or use it as a context manager, which shuts down
+    with a full drain::
+
+        with PHServer(engine) as srv:
+            srv.warmup()
+            futs = [srv.submit(img) for img in images]
+            diagrams = [f.result().diagram for f in futs]
+    """
+
+    def __init__(self, engine: PHEngine, *, start: bool = True,
+                 spec: ServeSpec | None = None):
+        if not isinstance(engine, PHEngine):
+            raise TypeError(f"engine must be a PHEngine, "
+                            f"got {type(engine).__name__}")
+        self.engine = engine
+        # ``spec`` overrides the engine config's serve spec — legitimate
+        # for the host-side knobs (max_queue / tick / admission), which
+        # never enter plan_key; keep buckets/batch_cap matched to the
+        # engine's warmed plans or warmup() again.
+        if spec is None:
+            spec = engine.config.serve \
+                if engine.config.serve is not None else ServeSpec()
+        self.spec: ServeSpec = spec
+        self.metrics = ServeMetrics(self.spec.batch_cap)
+        self._cond = threading.Condition()
+        self._queues: dict[tuple[int, int], deque[_Request]] = {}
+        if self.spec.buckets is not None:
+            for b in self.spec.buckets:     # fixed set, smallest-first
+                self._queues[b] = deque()
+        # Accepting from construction: a not-yet-started server queues
+        # submissions and dispatches them once start() spawns the tick
+        # thread (handy for priming; tests fill queues deterministically
+        # this way).  Only shutdown() stops admission.
+        self._accepting = True
+        self._stop = False
+        self._inflight = 0
+        self._thread: threading.Thread | None = None
+        self._warm_traces: int | None = None
+        if start:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        with self._cond:
+            if self._thread is not None:
+                raise RuntimeError("PHServer already started")
+            if not self._accepting:
+                raise RuntimeError("PHServer was shut down")
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._loop, name="ph-serve-tick", daemon=True)
+            self._thread.start()
+
+    def warmup(self, **kwargs) -> dict:
+        """Pre-trace the serving plans (delegates to
+        :meth:`PHEngine.warmup`) and snapshot the engine's trace counter;
+        :meth:`steady_state_traces` counts from here."""
+        info = self.engine.warmup(**kwargs)
+        self._warm_traces = self.engine.plan_stats()["traces"]
+        return info
+
+    def steady_state_traces(self) -> int | None:
+        """Plan traces since :meth:`warmup` (``None`` before warmup).
+        Zero on a warmed server is the whole point of the warm pool —
+        ``serve_bench`` asserts it over a sustained mixed-shape stream."""
+        if self._warm_traces is None:
+            return None
+        return self.engine.plan_stats()["traces"] - self._warm_traces
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every queued and in-flight request has resolved
+        (or ``timeout`` elapses).  Returns True when fully drained."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._inflight == 0
+                and not any(self._queues.values()), timeout)
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        """Stop admission and the tick thread.  ``drain=True`` (default)
+        lets every already-queued request run to completion first;
+        ``drain=False`` fails undispatched futures with
+        ``RuntimeError`` (an in-flight batch still completes)."""
+        with self._cond:
+            self._accepting = False
+            if not drain or self._thread is None:
+                # No tick thread -> nothing will ever drain the queues.
+                for q in self._queues.values():
+                    while q:
+                        q.popleft().future.set_exception(RuntimeError(
+                            "PHServer shut down before dispatch"))
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def __enter__(self) -> "PHServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=True)
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, image, truncate_value: float | None = None) -> Future:
+        """Enqueue one 2D image; returns a future resolving to the
+        :class:`PHResult` of ``engine.run(image, truncate_value)``
+        (computed inside a padded bucket batch, repaired bit-identical).
+
+        Raises :class:`AdmissionError` when the bucket queue is full
+        under the ``"reject"`` policy; blocks under ``"block"``;
+        ``ValueError`` for non-2D images or shapes exceeding the largest
+        configured bucket; ``RuntimeError`` once shut down.
+        """
+        img = np.asarray(image)
+        if img.ndim != 2:
+            raise ValueError(f"expected a 2D image, got shape {img.shape}")
+        bucket = assign_bucket(img.shape, self.spec.buckets,
+                               self.engine.config.bucket_rounding)
+        if bucket is None:
+            raise ValueError(
+                f"image shape {img.shape} exceeds the largest serve "
+                f"bucket {self.spec.buckets[-1]}")
+        req = _Request(img, truncate_value, bucket)
+        with self._cond:
+            if not self._accepting:
+                raise RuntimeError("PHServer is not accepting requests")
+            q = self._queues.setdefault(bucket, deque())
+            if len(q) >= self.spec.max_queue:
+                if self.spec.admission == "reject":
+                    self.metrics.record_reject(bucket)
+                    retry = self._retry_after(bucket)
+                    raise AdmissionError(
+                        f"bucket {bucket} queue full "
+                        f"({self.spec.max_queue}); retry in ~{retry:.3g}s",
+                        retry)
+                self._cond.wait_for(
+                    lambda: len(q) < self.spec.max_queue
+                    or not self._accepting)
+                if not self._accepting:
+                    raise RuntimeError(
+                        "PHServer shut down while blocked on admission")
+            q.append(req)
+            self.metrics.record_submit(bucket)
+            self._cond.notify_all()
+        return req.future
+
+    def stats(self) -> dict:
+        """Serving metrics snapshot + engine plan stats +
+        ``steady_state_traces``."""
+        snap = self.metrics.snapshot()
+        snap["engine"] = self.engine.plan_stats()
+        snap["steady_state_traces"] = self.steady_state_traces()
+        return snap
+
+    # -- daemon ------------------------------------------------------------
+
+    def _retry_after(self, bucket) -> float:
+        """Full-queue backoff hint: batches needed to drain the queue
+        times the recent per-batch latency (tick interval when no batch
+        has completed yet)."""
+        per_batch = self.metrics.mean_batch_seconds(bucket)
+        if per_batch is None:
+            per_batch = self.spec.tick_interval_s
+        batches = max(1, -(-self.spec.max_queue // self.spec.batch_cap))
+        return batches * max(per_batch, self.spec.tick_interval_s)
+
+    def _loop(self) -> None:
+        cond = self._cond
+        while True:
+            with cond:
+                cond.wait_for(lambda: self._stop
+                              or any(self._queues.values()))
+                if self._stop and not any(self._queues.values()):
+                    return
+            # Coalescing window: submitters racing this tick get into it.
+            if self.spec.tick_interval_s > 0 and not self._stop:
+                time.sleep(self.spec.tick_interval_s)
+            while True:
+                with cond:
+                    bucket = next(
+                        (b for b, q in self._queues.items() if q), None)
+                    if bucket is None:
+                        break
+                    q = self._queues[bucket]
+                    reqs = [q.popleft() for _ in
+                            range(min(len(q), self.spec.batch_cap))]
+                    self._inflight += len(reqs)
+                    cond.notify_all()   # blocked submitters: space freed
+                try:
+                    self._dispatch(bucket, reqs)
+                finally:
+                    with cond:
+                        self._inflight -= len(reqs)
+                        cond.notify_all()   # drain()/shutdown waiters
+
+    def _dispatch(self, bucket, reqs) -> None:
+        """Run one bucket micro-batch and resolve its futures.  A raise
+        anywhere in compute fails *this round's* futures only — the loop
+        (and every other queued request) carries on."""
+        t0 = time.perf_counter()
+        imgs = [r.image for r in reqs]
+        tvs = [r.truncate_value for r in reqs]
+        pad = self.spec.batch_cap - len(imgs)
+        if pad > 0:
+            # Fixed dispatch shape (batch_cap, Hb, Wb): repeat a real
+            # request into the free rows so the warmed plan always fits.
+            imgs = imgs + [imgs[0]] * pad
+            tvs = tvs + [tvs[0]] * pad
+        try:
+            out = self.engine.run_batch(imgs, tvs, bucket=bucket)
+        except Exception as exc:        # noqa: BLE001 — isolate the round
+            for r in reqs:
+                r.future.set_exception(exc)
+            self.metrics.record_failure(bucket, len(reqs))
+            return
+        t1 = time.perf_counter()
+        diag = out.diagram
+        thr = None if out.threshold is None else np.asarray(out.threshold)
+        for i, r in enumerate(reqs):
+            row = type(diag)(*(np.asarray(f)[i] for f in diag))
+            r.future.set_result(PHResult(
+                row, out.config, out.regrow,
+                None if thr is None else float(thr[i])))
+        self.metrics.record_batch(
+            bucket,
+            queue_waits=[t0 - r.t_submit for r in reqs],
+            e2e=[t1 - r.t_submit for r in reqs],
+            batch_s=t1 - t0)

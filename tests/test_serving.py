@@ -1,0 +1,372 @@
+"""PH-as-a-service: daemon lifecycle, admission, drain, faults, metrics.
+
+One warmed module-scoped engine backs most tests (compiles are the cost
+here); per-test PHServers override only host-side knobs (max_queue /
+tick / admission), which never enter plan_key, so the warmed plans are
+reused throughout.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ph import PHConfig, PHEngine, FilterLevel, ServeSpec
+from repro.pipeline.scheduler import assign_bucket
+from repro.serving import (
+    AdmissionError,
+    PHServer,
+    Reservoir,
+    ServeMetrics,
+    bucket_label,
+)
+
+BUCKETS = ((8, 8), (16, 16))
+CAP = 3
+SPEC = ServeSpec(buckets=BUCKETS, batch_cap=CAP, tick_interval_s=0.001)
+
+
+def _bumpy(seed=0, shape=(8, 8)):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+def _mixed_images(seed=0, n=6):
+    shapes = [(6, 5), (8, 8), (12, 10), (16, 16), (5, 9), (9, 14)]
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=shapes[i % len(shapes)]).astype(np.float32)
+            for i in range(n)]
+
+
+def _assert_diagrams_equal(d, ref):
+    """Valid rows bit-identical (capacity padding may differ)."""
+    c = int(d.count)
+    assert c == int(ref.count)
+    assert int(d.n_unmerged) == int(ref.n_unmerged)
+    assert bool(np.any(np.asarray(d.overflow))) == \
+        bool(np.any(np.asarray(ref.overflow)))
+    for a, b in ((d.birth, ref.birth), (d.death, ref.death),
+                 (d.p_birth, ref.p_birth), (d.p_death, ref.p_death)):
+        assert np.array_equal(np.asarray(a)[:c], np.asarray(b)[:c])
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eng = PHEngine(PHConfig(serve=SPEC))
+    info = eng.warmup()
+    assert info["plans"] == info["traces"] == 2 * len(BUCKETS)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: submit -> coalesce -> compute -> future resolution
+# ---------------------------------------------------------------------------
+
+def test_submit_to_future_bit_identity(engine):
+    imgs = _mixed_images(seed=1, n=8)
+    with PHServer(engine) as srv:
+        futs = [srv.submit(im) for im in imgs]
+        results = [f.result(timeout=120) for f in futs]
+    # Reference on a *separate* engine so this test leaves the shared
+    # plan cache untouched for the zero-trace test.
+    ref_eng = PHEngine(PHConfig())
+    for im, res in zip(imgs, results):
+        ref = ref_eng.run(im, truncate_value=res.threshold)
+        _assert_diagrams_equal(res.diagram, ref.diagram)
+
+
+def test_warmed_server_zero_steady_state_traces(engine):
+    with PHServer(engine) as srv:
+        srv.warmup()        # plans cached -> instant; snapshots traces
+        assert srv.steady_state_traces() == 0
+        futs = [srv.submit(im) for im in _mixed_images(seed=2, n=12)]
+        for f in futs:
+            f.result(timeout=120)
+        assert srv.steady_state_traces() == 0
+        st = srv.stats()
+    assert st["completed"] == 12
+    assert st["failed"] == st["rejected"] == 0
+    for b in st["buckets"].values():
+        if b["batches"]:
+            assert 0 < b["occupancy"] <= 1
+            assert b["e2e_s"]["p50"] <= b["e2e_s"]["p99"]
+
+
+def test_unstarted_server_queues_then_dispatches(engine):
+    srv = PHServer(engine, start=False)
+    futs = [srv.submit(_bumpy(i)) for i in range(4)]
+    time.sleep(0.05)
+    assert not any(f.done() for f in futs)
+    srv.start()
+    assert all(f.result(timeout=120).diagram.count >= 0 for f in futs)
+    srv.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Admission control and backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_at_full_queue(engine):
+    srv = PHServer(engine, start=False,
+                   spec=SPEC.replace(max_queue=2))
+    f1, f2 = srv.submit(_bumpy(0)), srv.submit(_bumpy(1))
+    with pytest.raises(AdmissionError) as ei:
+        srv.submit(_bumpy(2))
+    assert ei.value.retry_after_s > 0
+    srv.start()     # accepted requests still resolve
+    assert f1.result(timeout=120) and f2.result(timeout=120)
+    st = srv.stats()
+    srv.shutdown()
+    assert st["rejected"] == 1
+    assert st["buckets"][bucket_label(BUCKETS[0])]["rejected"] == 1
+    assert st["completed"] == 2
+
+
+def test_backpressure_block_until_space(engine):
+    srv = PHServer(engine, start=False,
+                   spec=SPEC.replace(max_queue=1, admission="block"))
+    f1 = srv.submit(_bumpy(0))
+    unblocked = []
+
+    def blocked_submit():
+        unblocked.append(srv.submit(_bumpy(1)))
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    assert t.is_alive() and not unblocked     # parked at admission
+    srv.start()                               # tick frees the slot
+    t.join(timeout=120)
+    assert not t.is_alive()
+    assert f1.result(timeout=120) and unblocked[0].result(timeout=120)
+    srv.shutdown()
+
+
+def test_blocked_submitter_released_by_shutdown(engine):
+    srv = PHServer(engine, start=False,
+                   spec=SPEC.replace(max_queue=1, admission="block"))
+    srv.submit(_bumpy(0))
+    errs = []
+
+    def blocked_submit():
+        try:
+            srv.submit(_bumpy(1))
+        except RuntimeError as e:
+            errs.append(e)
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    srv.shutdown(drain=False)
+    t.join(timeout=10)
+    assert len(errs) == 1 and not isinstance(errs[0], AdmissionError)
+
+
+def test_submit_validation(engine):
+    with PHServer(engine, start=False) as srv:
+        with pytest.raises(ValueError):
+            srv.submit(np.zeros((2, 3, 4), np.float32))   # not 2D
+        with pytest.raises(ValueError):
+            srv.submit(np.zeros((17, 17), np.float32))    # over top bucket
+    with pytest.raises(RuntimeError):
+        srv.submit(_bumpy())                              # shut down
+    with pytest.raises(RuntimeError):
+        srv.start()                                       # cannot restart
+
+
+# ---------------------------------------------------------------------------
+# Graceful drain and shutdown
+# ---------------------------------------------------------------------------
+
+def test_graceful_drain_delivers_all_inflight(engine):
+    srv = PHServer(engine, start=False)
+    futs = [srv.submit(im) for im in _mixed_images(seed=3, n=7)]
+    srv.start()
+    srv.shutdown(drain=True)        # stops admission, finishes the queue
+    assert all(f.done() for f in futs)
+    assert all(f.exception() is None for f in futs)
+
+
+def test_shutdown_without_drain_fails_pending(engine):
+    srv = PHServer(engine, start=False)
+    futs = [srv.submit(_bumpy(i)) for i in range(3)]
+    srv.shutdown(drain=False)
+    for f in futs:
+        with pytest.raises(RuntimeError):
+            f.result(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: one round's failure stays in that round
+# ---------------------------------------------------------------------------
+
+def test_fault_injected_round_isolated(engine, monkeypatch):
+    real = engine.run_batch
+    fails = {"left": 1}
+
+    def flaky(*a, **kw):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("injected dispatch failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(engine, "run_batch", flaky)
+    srv = PHServer(engine, start=False)
+    # 2*CAP same-bucket requests -> exactly two dispatch rounds, FIFO.
+    futs = [srv.submit(_bumpy(i)) for i in range(2 * CAP)]
+    srv.start()
+    assert srv.drain(120)
+    for f in futs[:CAP]:        # first round: the injected failure
+        with pytest.raises(RuntimeError, match="injected"):
+            f.result(timeout=5)
+    for f in futs[CAP:]:        # second round: unharmed
+        assert f.result(timeout=120).diagram.count >= 0
+    # the daemon survives: a fresh submit still resolves
+    assert srv.submit(_bumpy(99)).result(timeout=120)
+    st = srv.stats()
+    srv.shutdown()
+    assert st["failed"] == CAP
+    assert st["completed"] == CAP + 1
+
+
+# ---------------------------------------------------------------------------
+# Thread-safe shared engine (satellite: plan-cache lock)
+# ---------------------------------------------------------------------------
+
+def test_engine_hammered_from_threads_traces_once():
+    eng = PHEngine(PHConfig())
+    img = np.stack([_bumpy(0), _bumpy(1)])
+    barrier = threading.Barrier(8)
+    errs = []
+
+    def hammer():
+        try:
+            barrier.wait(timeout=30)
+            eng.run_batch(img)
+        except Exception as e:      # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errs
+    st = eng.plan_stats()
+    # 8 racing cache misses -> one plan, traced exactly once.
+    assert st["plans"] == 1 and st["traces"] == 1 and st["calls"] == 8
+
+
+# ---------------------------------------------------------------------------
+# Mixed-shape run_batch (satellite: bucketed padding bit-identity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("level", [FilterLevel.VANILLA, FilterLevel.STD])
+def test_run_batch_mixed_shapes_bit_identical(level):
+    eng = PHEngine(PHConfig(filter_level=level))
+    imgs = [_bumpy(0, (6, 5)), _bumpy(1, (8, 8)), _bumpy(2, (5, 9))]
+    out = eng.run_batch(imgs)
+    thr = np.asarray(out.threshold)
+    for i, im in enumerate(imgs):
+        row = type(out.diagram)(
+            *(np.asarray(f)[i] for f in out.diagram))
+        tv = None if not np.isfinite(thr[i]) else float(thr[i])
+        _assert_diagrams_equal(row, eng.run(im, truncate_value=tv).diagram)
+
+
+def test_run_batch_bucket_forces_padded_dispatch():
+    eng = PHEngine(PHConfig())
+    imgs = [_bumpy(0, (6, 6)), _bumpy(1, (6, 6))]
+    out = eng.run_batch(imgs, bucket=(8, 8))
+    ref = eng.run_batch(np.stack(imgs))
+    for i in range(2):
+        row = type(out.diagram)(*(np.asarray(f)[i] for f in out.diagram))
+        refr = type(ref.diagram)(*(np.asarray(f)[i] for f in ref.diagram))
+        _assert_diagrams_equal(row, refr)
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec config plumbing
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_validation():
+    assert ServeSpec(buckets=(32, (8, 16))).buckets == ((8, 16), (32, 32))
+    with pytest.raises(ValueError):
+        ServeSpec(buckets=(16, (16, 16)))       # duplicate after squaring
+    with pytest.raises(ValueError):
+        ServeSpec(batch_cap=0)
+    with pytest.raises(ValueError):
+        ServeSpec(max_queue=0)
+    with pytest.raises(ValueError):
+        ServeSpec(tick_interval_s=-1.0)
+    with pytest.raises(ValueError):
+        ServeSpec(admission="maybe")
+
+
+def test_serve_config_roundtrip_and_plan_key():
+    cfg = PHConfig(serve=ServeSpec(buckets=(16, 32), batch_cap=2))
+    again = PHConfig.from_json(cfg.to_json())
+    assert again == cfg and again.plan_key() == cfg.plan_key()
+    # host-side knobs stay out of plan_key; shape knobs go in
+    assert cfg.plan_key() == PHConfig(serve=ServeSpec(
+        buckets=(16, 32), batch_cap=2, max_queue=7,
+        admission="block")).plan_key()
+    assert cfg.plan_key() != PHConfig(serve=ServeSpec(
+        buckets=(16, 32), batch_cap=3)).plan_key()
+    assert PHConfig().plan_key()[-1] is None
+
+
+def test_serve_from_flags():
+    from types import SimpleNamespace
+    cfg = PHConfig.from_flags(SimpleNamespace(
+        serve=True, serve_buckets=["16", "32x48"], serve_batch_cap=8,
+        serve_tick_ms=5.0, serve_admission="block", serve_max_queue=9))
+    assert cfg.serve.buckets == ((16, 16), (32, 48))
+    assert cfg.serve.batch_cap == 8 and cfg.serve.max_queue == 9
+    assert abs(cfg.serve.tick_interval_s - 0.005) < 1e-12
+    assert cfg.serve.admission == "block"
+    assert PHConfig.from_flags(SimpleNamespace()).serve is None
+
+
+def test_assign_bucket():
+    bs = ((16, 16), (32, 32))
+    assert assign_bucket((5, 5), bs) == (16, 16)      # tightest fit
+    assert assign_bucket((16, 16), bs) == (16, 16)    # exact fit
+    assert assign_bucket((17, 4), bs) == (32, 32)
+    assert assign_bucket((33, 1), bs) is None         # over the top
+    assert assign_bucket((40, 40), None) == (64, 64)  # dynamic pow2
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def test_reservoir_window_and_percentiles():
+    r = Reservoir(4)
+    assert r.summary() == {"count": 0}
+    with pytest.raises(ValueError):
+        r.percentile(50)
+    for v in range(1, 11):
+        r.add(float(v))
+    assert len(r) == 10
+    s = r.summary()
+    assert s["count"] == 10 and s["max"] == 10.0
+    # only the ring window (last 4 values: 7..10) backs percentiles
+    assert 7.0 <= s["p50"] <= 10.0 and r.percentile(0) == 7.0
+    with pytest.raises(ValueError):
+        Reservoir(0)
+
+
+def test_serve_metrics_snapshot():
+    m = ServeMetrics(batch_cap=4)
+    b = (16, 16)
+    m.record_submit(b)
+    m.record_submit(b)
+    m.record_batch(b, queue_waits=[0.1, 0.2], e2e=[0.3, 0.4], batch_s=0.2)
+    m.record_reject(b)
+    snap = m.snapshot()
+    assert snap["submitted"] == 2 and snap["completed"] == 2
+    assert snap["rejected"] == 1
+    bs = snap["buckets"]["16x16"]
+    assert bs["occupancy"] == 0.5       # 2 rows of a 4-cap batch
+    assert bs["e2e_s"]["count"] == 2 and bs["rejected"] == 1
+    assert bucket_label((8, 128)) == "8x128"
