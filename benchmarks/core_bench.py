@@ -134,25 +134,35 @@ def _stage_fns(shape: tuple[int, int], strip_rows: int):
     return seed, pooled, fused
 
 
-def _phase_c_fns(shape: tuple[int, int], mf: int, mc: int):
-    """Jitted phase-C programs (key materialization + merge + diagram) for
-    the two key encodings, taking precomputed labels/candidates so the
-    timing isolates exactly the stage the packed keys change."""
+def _phase_c_fns(shape: tuple[int, int], mf: int, mc: int, *,
+                 phase_c_block: int = 1024, tournament_width: int = 2):
+    """Jitted phase-C programs (key materialization + merge + diagram),
+    taking precomputed labels/candidates so the timing isolates exactly
+    the stage under comparison: the two key encodings (both on the plain
+    XLA merge, the historical packed-vs-rank comparison) plus the fused
+    compact-instance impl on packed keys (the phase_c_impl comparison)."""
     from repro.core.pixhomology import phase_c, total_order_keys
     h, w = shape
 
-    def run(vals, labels, cand, tv, merge_keys):
+    def run(vals, labels, cand, tv, merge_keys, phase_c_impl):
         key = total_order_keys(vals, merge_keys)
         return phase_c(vals, key, labels, cand, (h, w), tv,
                        max_features=mf, max_candidates=mc,
-                       merge_impl="boruvka")
+                       merge_impl="boruvka", phase_c_impl=phase_c_impl,
+                       phase_c_block=phase_c_block,
+                       tournament_width=tournament_width)
 
-    return (jax.jit(functools.partial(run, merge_keys="rank")),
-            jax.jit(functools.partial(run, merge_keys="packed")))
+    return (jax.jit(functools.partial(run, merge_keys="rank",
+                                      phase_c_impl="xla")),
+            jax.jit(functools.partial(run, merge_keys="packed",
+                                      phase_c_impl="xla")),
+            jax.jit(functools.partial(run, merge_keys="packed",
+                                      phase_c_impl="fused")))
 
 
 def bench_merge_keys(img, *, strip_rows: int, repeats: int,
-                     end_to_end: bool) -> dict:
+                     end_to_end: bool, phase_c_block: int = 1024,
+                     tournament_width: int = 2) -> dict:
     """Packed-vs-rank phase C: stage + e2e times and the HLO sort audit.
 
     Runs under the Variant-2 ``filter_std`` threshold — the pipeline's
@@ -190,29 +200,68 @@ def bench_merge_keys(img, *, strip_rows: int, repeats: int,
     n_roots = int(np.asarray(
         (labels == jnp.arange(n, dtype=jnp.int32)) & (vals >= tv)).sum())
     mf, mc = max(n_roots, 1), max(n_cand, 1)
-    fn_rank, fn_packed = _phase_c_fns((h, w), mf, mc)
+    fn_rank, fn_packed, fn_fused = _phase_c_fns(
+        (h, w), mf, mc, phase_c_block=phase_c_block,
+        tournament_width=tournament_width)
 
     # Compile each program once: the compiled executable serves both the
     # HLO sort audit and the timing loop.
     comp_rank = fn_rank.lower(vals, labels, cand, tv).compile()
     with packed_keys.key_scope("packed"):
         comp_packed = fn_packed.lower(vals, labels, cand, tv).compile()
+        comp_fused = fn_fused.lower(vals, labels, cand, tv).compile()
 
     t_rank, d_rank = _timeit(comp_rank, vals, labels, cand, tv,
                              repeats=repeats)
     t_packed, d_packed = _timeit(comp_packed, vals, labels, cand, tv,
                                  repeats=repeats)
+    t_fused, d_fused = _timeit(comp_fused, vals, labels, cand, tv,
+                               repeats=repeats)
     assert not bool(d_rank.overflow), \
         "bench capacities overflowed; raise mf/mc in bench_merge_keys"
     np.testing.assert_array_equal(np.asarray(d_rank.birth),
                                   np.asarray(d_packed.birth))
     np.testing.assert_array_equal(np.asarray(d_rank.p_death),
                                   np.asarray(d_packed.p_death))
+    # phase_c_impl bit-identity on full diagrams (fused vs plain XLA).
+    for field in ("birth", "death", "p_birth", "p_death", "count"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(d_packed, field)),
+            np.asarray(getattr(d_fused, field)),
+            err_msg=f"fused phase C diverged from xla on {field}")
+
+    # Boruvka round counts (one untimed call per impl): the fused compact
+    # instance must never need *more* rounds than the full-image merge,
+    # and the merge-budget early exit keeps both at O(log C).
+    from repro.core.parallel_merge import boruvka_merge
+    from repro.kernels.ph_phase_c.ops import fused_merge
+
+    @jax.jit
+    def rounds_of(vals, labels, cand):
+        from repro.core.pixhomology import total_order_keys
+        key = total_order_keys(vals, "packed")
+        root_mask = (labels == jnp.arange(n, dtype=jnp.int32)) & (vals >= tv)
+        cand_b = cand & (vals >= tv)
+        *_, r_xla = boruvka_merge(
+            vals, key, labels, cand_b, (h, w), mc,
+            n_live=jnp.sum(root_mask, dtype=jnp.int32),
+            tournament_width=tournament_width)
+        *_, r_fused = fused_merge(
+            vals, key, labels, cand_b, root_mask, (h, w),
+            max_candidates=mc, max_features=mf,
+            phase_c_block=phase_c_block, tournament_width=tournament_width)
+        return r_xla, r_fused
+
+    with packed_keys.key_scope("packed"):
+        r_xla, r_fused = jax.block_until_ready(rounds_of(vals, labels, cand))
 
     sorts_rank, full_rank = _sort_audit(comp_rank.as_text(), n)
     sorts_packed, full_packed = _sort_audit(comp_packed.as_text(), n)
+    sorts_fused, full_fused = _sort_audit(comp_fused.as_text(), n)
     assert full_packed == 0, \
         f"packed phase C still contains {full_packed} full-image sort(s)"
+    assert full_fused == 0, \
+        f"fused phase C still contains {full_fused} full-image sort(s)"
 
     row = {
         "merge_keys_mf": mf,
@@ -221,10 +270,18 @@ def bench_merge_keys(img, *, strip_rows: int, repeats: int,
         "phase_c_rank_s": t_rank,
         "phase_c_packed_s": t_packed,
         "phase_c_packed_speedup": t_rank / t_packed,
+        # phase_c_impl comparison: both on packed keys, same capacities.
+        "phase_c_xla_s": t_packed,
+        "phase_c_fused_s": t_fused,
+        "phase_c_fused_speedup": t_packed / t_fused,
+        "boruvka_rounds_xla": int(r_xla),
+        "boruvka_rounds_fused": int(r_fused),
         "hlo_sorts_rank": sorts_rank,
         "hlo_sorts_packed": sorts_packed,
+        "hlo_sorts_fused": sorts_fused,
         "full_image_sorts_rank": full_rank,
         "full_image_sorts_packed": full_packed,
+        "full_image_sorts_fused": full_fused,
     }
 
     if end_to_end:
@@ -243,7 +300,10 @@ def bench_merge_keys(img, *, strip_rows: int, repeats: int,
 
 
 def bench_size(size: int, *, strip_rows: int, repeats: int,
-               end_to_end: bool, deep_sky: bool) -> dict:
+               end_to_end: bool, deep_sky: bool,
+               phase_c_block: int = 1024,
+               tournament_width: int = 2,
+               autotuned: dict | None = None) -> dict:
     from repro.data import astro
     from repro.kernels.ph_phase_a.ops import boundary_rows
 
@@ -314,7 +374,11 @@ def bench_size(size: int, *, strip_rows: int, repeats: int,
         row["e2e_overflow"] = bool(d_f.overflow)
 
     row.update(bench_merge_keys(img, strip_rows=strip_rows,
-                                repeats=repeats, end_to_end=end_to_end))
+                                repeats=repeats, end_to_end=end_to_end,
+                                phase_c_block=phase_c_block,
+                                tournament_width=tournament_width))
+    if autotuned:
+        row.update(autotuned)
     return row
 
 
@@ -328,17 +392,43 @@ def main() -> None:
                          "spanning the frame: the deep-chain regime)")
     ap.add_argument("--no-e2e", action="store_true",
                     help="skip the end-to-end pixhomology timings")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the roofline autotuner per size first (tiny "
+                         "measurement budget), fold the tuned strip_rows / "
+                         "phase_c_block / tournament_width into the bench, "
+                         "and persist the cache")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="autotune cache path (default "
+                         "artifacts/autotune_cache.json)")
     ap.add_argument("--out", default=None,
                     help="output path (default artifacts/BENCH_core.json)")
     args = ap.parse_args()
 
     rows = []
     for size in args.sizes:
+        strip_rows, pc_block, t_width = args.strip_rows, 1024, 2
+        autotuned = None
+        if args.autotune:
+            from repro.roofline import autotune as at
+            tp = at.autotune((size, size), "float32",
+                             path=args.autotune_cache,
+                             measure_top=2, trials=2)
+            autotuned = {"autotune_strip_rows": tp.strip_rows,
+                         "autotune_phase_c_block": tp.phase_c_block,
+                         "autotune_tournament_width": tp.tournament_width,
+                         "autotune_source": tp.source}
+            if tp.source != "default":
+                strip_rows, pc_block, t_width = (
+                    tp.strip_rows, tp.phase_c_block, tp.tournament_width)
+            print(f"autotune {size}x{size}: {autotuned}")
         variants = [False, True] if args.deep_sky else [False]
         for deep in variants:
-            row = bench_size(size, strip_rows=args.strip_rows,
+            row = bench_size(size, strip_rows=strip_rows,
                              repeats=args.repeats,
-                             end_to_end=not args.no_e2e, deep_sky=deep)
+                             end_to_end=not args.no_e2e, deep_sky=deep,
+                             phase_c_block=pc_block,
+                             tournament_width=t_width,
+                             autotuned=autotuned)
             rows.append(row)
             print(f"{row['name']}: seed={row['stage_seed_s'] * 1e3:.1f}ms "
                   f"unfused={row['stage_unfused_s'] * 1e3:.1f}ms "
@@ -352,6 +442,11 @@ def main() -> None:
                   f"({row['phase_c_packed_speedup']:.1f}x; full-image "
                   f"sorts {row['full_image_sorts_rank']}->"
                   f"{row['full_image_sorts_packed']})")
+            print(f"  phase C impl xla={row['phase_c_xla_s'] * 1e3:.1f}ms "
+                  f"fused={row['phase_c_fused_s'] * 1e3:.1f}ms "
+                  f"({row['phase_c_fused_speedup']:.1f}x; rounds "
+                  f"{row['boruvka_rounds_xla']}->"
+                  f"{row['boruvka_rounds_fused']})")
 
     out_path = Path(args.out) if args.out else ARTIFACTS / "BENCH_core.json"
     out_path.parent.mkdir(parents=True, exist_ok=True)

@@ -20,6 +20,23 @@ Gated invariants:
   bucket reports ordered p50<=p95<=p99 latency summaries and nonzero
   occupancy, nothing failed or was rejected in steady state, and the
   saturation burst actually engaged backpressure (rejections > 0).
+
+**Trajectory gating**: with ``--baseline-core``/``--baseline-serve`` the
+gate additionally compares the current artifact against a *committed
+baseline snapshot* (``benchmarks/baselines/BENCH_*.json``), so perf
+regressions fail CI instead of silently accumulating in artifacts.
+Trajectory rules are declarative tolerances over fields matched by row
+``name`` (rows present only on one side are skipped — adding a size or a
+field never breaks the gate):
+
+* ``exact``     — the value must equal the baseline (structural
+  invariants: full-image sort counts);
+* ``le``        — the value must not exceed the baseline (monotone
+  counters: Boruvka round counts — the early exit must not regress);
+* ``min_ratio`` — the speedup field must stay above ``ratio x baseline``
+  (timing-derived but machine-normalized: both numerator and denominator
+  move with the machine, so a big drop means a real regression, while
+  absolute seconds are deliberately *not* gated across machines).
 """
 from __future__ import annotations
 
@@ -29,7 +46,10 @@ import sys
 
 CORE_FIELDS = ("phase_c_packed_s", "phase_c_rank_s",
                "phase_c_packed_speedup", "hlo_sorts_packed",
-               "full_image_sorts_packed", "full_image_sorts_rank")
+               "full_image_sorts_packed", "full_image_sorts_rank",
+               "phase_c_fused_s", "phase_c_xla_s",
+               "phase_c_fused_speedup", "full_image_sorts_fused",
+               "boruvka_rounds_fused", "boruvka_rounds_xla")
 
 
 def _core_fields(doc):
@@ -44,10 +64,93 @@ def _core_fields(doc):
 
 def _core_no_full_sorts(doc):
     for row in doc:
-        if row.get("full_image_sorts_packed") != 0:
-            return (f"{row.get('name', '?')}: packed phase C compiled "
-                    f"{row['full_image_sorts_packed']} full-image sorts")
+        for field in ("full_image_sorts_packed", "full_image_sorts_fused"):
+            if row.get(field) != 0:
+                return (f"{row.get('name', '?')}: phase C compiled "
+                        f"{row[field]} full-image sorts ({field})")
     return None
+
+
+# -- baseline-trajectory rules ----------------------------------------------
+# field -> (mode, arg).  Modes: "exact" (must equal the baseline), "le"
+# (must not exceed it), "min_ratio" (must stay >= arg * baseline).  Only
+# machine-normalized fields appear here — never absolute seconds.
+
+CORE_TRAJECTORY = {
+    "full_image_sorts_packed": ("exact", None),
+    "full_image_sorts_fused": ("exact", None),
+    "boruvka_rounds_fused": ("le", None),
+    "boruvka_rounds_xla": ("le", None),
+    "phase_c_packed_speedup": ("min_ratio", 0.5),
+    "phase_c_fused_speedup": ("min_ratio", 0.5),
+}
+
+SERVE_TRAJECTORY = {
+    "steady.steady_state_traces": ("exact", None),
+    "steady.failed": ("exact", None),
+    "steady.rejected": ("exact", None),
+}
+
+
+def _check_value(label, mode, arg, cur, ref):
+    if mode == "exact" and cur != ref:
+        return f"{label}: {cur!r} != baseline {ref!r}"
+    if mode == "le" and cur > ref:
+        return f"{label}: {cur!r} > baseline {ref!r}"
+    if mode == "min_ratio" and cur < arg * ref:
+        return (f"{label}: {cur:.3g} < {arg} x baseline {ref:.3g} "
+                f"(regressed)")
+    return None
+
+
+def _core_trajectory(baseline):
+    """Row-matched (by ``name``) tolerance check against the committed
+    core baseline; rows/fields present on only one side are skipped."""
+    base_rows = {r.get("name"): r for r in baseline if isinstance(r, dict)}
+
+    def check(doc):
+        errs, matched = [], 0
+        for row in doc:
+            b = base_rows.get(row.get("name"))
+            if b is None:
+                continue
+            matched += 1
+            for field, (mode, arg) in CORE_TRAJECTORY.items():
+                if field not in row or field not in b:
+                    continue
+                err = _check_value(f"{row['name']}.{field}", mode, arg,
+                                   row[field], b[field])
+                if err:
+                    errs.append(err)
+        if not matched:
+            errs.append("no rows matched the baseline by name")
+        return "; ".join(errs) or None
+
+    return check
+
+
+def _dotted(doc, path):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _serve_trajectory(baseline):
+    def check(doc):
+        errs = []
+        for path, (mode, arg) in SERVE_TRAJECTORY.items():
+            cur, ref = _dotted(doc, path), _dotted(baseline, path)
+            if cur is None or ref is None:
+                continue
+            err = _check_value(path, mode, arg, cur, ref)
+            if err:
+                errs.append(err)
+        return "; ".join(errs) or None
+
+    return check
 
 
 def _serve_zero_traces(doc):
@@ -111,13 +214,22 @@ RULES = {
 }
 
 
-def run_gate(kind: str, path: str) -> list[str]:
+def run_gate(kind: str, path: str,
+             baseline_path: str | None = None) -> list[str]:
     try:
         doc = json.load(open(path))
     except (OSError, json.JSONDecodeError) as e:
         return [f"[{kind}] {path}: unreadable ({e})"]
+    rules = list(RULES[kind])
+    if baseline_path:
+        try:
+            baseline = json.load(open(baseline_path))
+        except (OSError, json.JSONDecodeError) as e:
+            return [f"[{kind}] baseline {baseline_path}: unreadable ({e})"]
+        make = _core_trajectory if kind == "core" else _serve_trajectory
+        rules.append((f"trajectory vs {baseline_path}", make(baseline)))
     failures = []
-    for name, check in RULES[kind]:
+    for name, check in rules:
         err = check(doc)
         status = "ok" if err is None else f"FAIL: {err}"
         print(f"[{kind}] {name}: {status}")
@@ -130,6 +242,12 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--core", help="BENCH_core.json path")
     ap.add_argument("--serve", help="BENCH_serve.json path")
+    ap.add_argument("--baseline-core",
+                    help="committed core baseline to gate the trajectory "
+                         "against (benchmarks/baselines/BENCH_core.json)")
+    ap.add_argument("--baseline-serve",
+                    help="committed serve baseline to gate the trajectory "
+                         "against (benchmarks/baselines/BENCH_serve.json)")
     args = ap.parse_args()
     if not (args.core or args.serve):
         ap.error("nothing to gate: pass --core and/or --serve")
@@ -137,7 +255,8 @@ def main():
     for kind in ("core", "serve"):
         path = getattr(args, kind)
         if path:
-            failures += run_gate(kind, path)
+            failures += run_gate(kind, path,
+                                 getattr(args, f"baseline_{kind}"))
     if failures:
         print(f"\nperf gate: {len(failures)} failure(s)")
         sys.exit(1)

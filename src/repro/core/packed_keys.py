@@ -185,7 +185,8 @@ def packed_index(keys: jnp.ndarray) -> jnp.ndarray:
 
 
 def select_descending(key_flat: jnp.ndarray, mask_flat: jnp.ndarray,
-                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      k: int, width: int = 2
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Top-``k`` masked keys in descending order: ``(keys, indices)``.
 
     Bit-identical to ``top_k(where(mask, key, pad), k)`` over the full
@@ -193,18 +194,24 @@ def select_descending(key_flat: jnp.ndarray, mask_flat: jnp.ndarray,
     construction, **including under overflow** (more than ``k`` set
     lanes: the k largest keys are retained, exactly like the rank path's
     full ``top_k``) — but evaluated as a blockwise tournament: each
-    halving round takes the per-block top-k of ``2k``-wide blocks, so no
-    sort ever spans more than ``2k`` elements (``lax.top_k`` lowers to a
-    full sort of its operand on CPU; this is how "top-k over candidates
-    only" stays true in the compiled HLO).  Lanes beyond the number of
-    set entries return the pad key and index -1.
+    round takes the per-block top-k of ``width * k``-wide blocks, so no
+    sort ever spans more than ``width * k`` elements (``lax.top_k``
+    lowers to a full sort of its operand on CPU; this is how "top-k over
+    candidates only" stays true in the compiled HLO).  ``width`` trades
+    round count against per-round sort extent (identical results for any
+    ``width >= 2`` — every global top-k element survives its block's
+    top-k — so it is a pure tuning knob, the one the autotuner picks).
+    Lanes beyond the number of set entries return the pad key and
+    index -1.
     """
     n = key_flat.shape[0]
     k = min(k, n)
+    if width < 2:
+        raise ValueError(f"tournament width must be >= 2, got {width}")
     pad = key_pad(key_flat.dtype)
     keys = jnp.where(mask_flat, key_flat, pad)
     ids = jnp.arange(n, dtype=jnp.int32)
-    block = 2 * k
+    block = width * k
     while keys.shape[0] > block:
         length = keys.shape[0]
         m = -(-length // block)
@@ -214,7 +221,7 @@ def select_descending(key_flat: jnp.ndarray, mask_flat: jnp.ndarray,
                 [keys, jnp.full(extra, pad, keys.dtype)])
             ids = jnp.concatenate([ids, jnp.full(extra, -1, jnp.int32)])
         top, order = jax.lax.top_k(keys.reshape(m, block), k)
-        keys = top.reshape(-1)                       # halves: m*k <= L/2 + k
+        keys = top.reshape(-1)                       # shrinks: m*k <= L/w + k
         ids = jnp.take_along_axis(ids.reshape(m, block), order,
                                   axis=1).reshape(-1)
     top, order = jax.lax.top_k(keys, k)
@@ -222,19 +229,20 @@ def select_descending(key_flat: jnp.ndarray, mask_flat: jnp.ndarray,
 
 
 def masked_top_k(key_flat: jnp.ndarray, mask_flat: jnp.ndarray,
-                 k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                 k: int, width: int = 2) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Descending top-``k`` of the masked keys: ``(keys, positions)``.
 
     The single selection primitive every phase-C site uses: packed int64
     keys route through the blockwise tournament
-    (:func:`select_descending`), dense int32 ranks through one full-array
-    ``top_k`` (their argsort already materialized the order, so there is
-    nothing left to save).  Lanes beyond the number of set entries carry
-    the pad key and an **in-range** position (clipped to 0) — consumers
-    must mask on ``keys > key_pad(...)``, never on the position.
+    (:func:`select_descending`, block extent ``width * k``), dense int32
+    ranks through one full-array ``top_k`` (their argsort already
+    materialized the order, so there is nothing left to save).  Lanes
+    beyond the number of set entries carry the pad key and an
+    **in-range** position (clipped to 0) — consumers must mask on
+    ``keys > key_pad(...)``, never on the position.
     """
     if key_flat.dtype == jnp.int64:
-        top, idx = select_descending(key_flat, mask_flat, k)
+        top, idx = select_descending(key_flat, mask_flat, k, width)
         return top, jnp.clip(idx, 0)
     masked = jnp.where(mask_flat, key_flat, key_pad(key_flat.dtype))
     return jax.lax.top_k(masked, min(k, key_flat.shape[0]))

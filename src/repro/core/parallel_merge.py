@@ -43,19 +43,21 @@ from repro.core.packed_keys import key_pad, masked_top_k, packed_index
 
 
 def candidate_edges(key_flat, labels_flat, cand_flat, shape,
-                    max_candidates: int):
+                    max_candidates: int, tournament_width: int = 2):
     """Top-K candidates -> chained basin edges (K, 8) flat: [key_x, a, b].
 
     ``key_flat``: dense ranks or packed int64 keys; on packed keys the
     selection runs as a blockwise tournament
-    (``packed_keys.masked_top_k``) — same retained set and order,
-    no full-image sort.
+    (``packed_keys.masked_top_k``, block extent
+    ``tournament_width * K``) — same retained set and order, no
+    full-image sort.
     """
     h, w = shape
     n = h * w
     k = min(max_candidates, n)
     pad = key_pad(key_flat.dtype)
-    top_keys, top_pix = masked_top_k(key_flat, cand_flat, k)
+    top_keys, top_pix = masked_top_k(key_flat, cand_flat, k,
+                                     tournament_width)
     valid = top_keys > pad
     ok, lbl = higher_neighbor_basins(top_pix, top_keys, key_flat,
                                      labels_flat, shape, valid)  # (K, 8)
@@ -90,7 +92,44 @@ def chain_clique_edges(ok: jnp.ndarray, lbl: jnp.ndarray):
     return edge_ok, prev_lbl
 
 
-def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
+def best_edge_reduce(key, ra, rb, nv: int):
+    """Per-cluster best incident edge: ``(best key, winning edge index)``.
+
+    The segmented reduction at the heart of every Boruvka round, factored
+    out so implementations can be swapped (``reduce_fn`` of
+    :func:`boruvka_forest`): ``repro.kernels.ph_phase_c`` supplies a
+    blocked Pallas twin that accumulates the same scatters block-by-block
+    in VMEM.  Both passes are **integer max reductions** — associative,
+    commutative, and tie-free on the index pass — so any blocking of the
+    edge axis is bit-identical by construction.
+
+    ``key``: (E,) saddle keys, pre-masked to the dtype-min pad sentinel on
+    dead lanes (the sentinel is strictly below every live key, so
+    ``key > pad`` recovers liveness).  ``ra``/``rb``: (E,) resolved
+    endpoint clusters, in ``[0, nv)`` on every lane.  Returns per-vertex
+    ``best`` (pad where no live edge) and ``win`` (max winning edge index
+    among best-key ties, -1 where none).
+    """
+    e_pad = key_pad(key.dtype)
+    alive = key > e_pad
+    # Pass 1: per-cluster best saddle key (scatter-max on both ends).
+    best = jnp.full(nv, e_pad, key.dtype)
+    best = best.at[jnp.where(alive, ra, nv)].max(key, mode="drop")
+    best = best.at[jnp.where(alive, rb, nv)].max(key, mode="drop")
+    # Pass 2: per-cluster winning edge index among key ties.
+    eidx = jnp.arange(key.shape[0], dtype=jnp.int32)
+    hit_a = alive & (key == best[ra])
+    hit_b = alive & (key == best[rb])
+    win = jnp.full(nv, -1, jnp.int32)
+    win = win.at[jnp.where(hit_a, ra, nv)].max(
+        jnp.where(hit_a, eidx, -1), mode="drop")
+    win = win.at[jnp.where(hit_b, rb, nv)].max(
+        jnp.where(hit_b, eidx, -1), mode="drop")
+    return best, win
+
+
+def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b, *,
+                   n_live=None, reduce_fn=None):
     """Elder-rule Boruvka forest over an abstract vertex/edge instance.
 
     ``v_rank``: (V,) birth key per vertex — any order-isomorphic
@@ -103,45 +142,49 @@ def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
     ``e_val``/``e_pos``: (E,) death value / position recorded when an edge
     kills a vertex.  ``e_a``/``e_b``: (E,) endpoint vertex ids.
 
-    Returns ``(dval, dpos)``: per-vertex death value (init -inf of
-    ``e_val.dtype``) and death position (init -1).  Vertices that never meet
-    an older cluster keep the init values.
+    ``n_live``: optional (traced) upper bound on the number of clusters
+    that can ever merge.  A spanning forest performs at most
+    ``n_live - 1`` merges, so once that many clusters have died no
+    inter-cluster edge can remain and the loop exits **without** paying
+    the final verification round the plain any-alive test needs (for a
+    fully merged forest — e.g. a single-component image — that round is
+    pure overhead).  An over-estimate is always safe; callers pass their
+    root/seam-vertex count.
+
+    ``reduce_fn``: drop-in replacement for :func:`best_edge_reduce`
+    (same signature) — the fused phase-C kernel's hook.
+
+    Returns ``(dval, dpos, rounds)``: per-vertex death value (init -inf
+    of ``e_val.dtype``), death position (init -1), and the number of
+    Boruvka rounds executed (int32; BENCH telemetry).  Vertices that
+    never meet an older cluster keep the init values.
     """
     nv = v_rank.shape[0]
-    n_edges = e_rank.shape[0]
     e_pad = key_pad(e_rank.dtype)
     neg_inf = (-jnp.inf if jnp.issubdtype(e_val.dtype, jnp.floating)
                else jnp.iinfo(e_val.dtype).min)
+    reduce_ = best_edge_reduce if reduce_fn is None else reduce_fn
 
     parent0 = jnp.arange(nv, dtype=jnp.int32)
     dval0 = jnp.full(nv, neg_inf, e_val.dtype)
     dpos0 = jnp.full(nv, -1, jnp.int32)
+    merge_cap = (jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+                 if n_live is None
+                 else jnp.asarray(n_live, jnp.int32) - 1)
 
     def resolve(p):
         q, _ = fixed_point_iterate(lambda r: r[r], p)
         return q
 
     def round_body(state):
-        parent, dval, dpos, _ = state
+        parent, dval, dpos, _, merges, rounds = state
         roots = resolve(parent)
         ra = roots[e_a]
         rb = roots[e_b]
         alive = (e_rank > e_pad) & (ra != rb)
         key = jnp.where(alive, e_rank, e_pad)
 
-        # Pass 1: per-cluster best saddle key (scatter-max on both ends).
-        best = jnp.full(nv, e_pad, e_rank.dtype)
-        best = best.at[jnp.where(alive, ra, nv)].max(key, mode="drop")
-        best = best.at[jnp.where(alive, rb, nv)].max(key, mode="drop")
-        # Pass 2: per-cluster winning edge index among rank ties.
-        eidx = jnp.arange(n_edges, dtype=jnp.int32)
-        hit_a = alive & (key == best[ra])
-        hit_b = alive & (key == best[rb])
-        win = jnp.full(nv, -1, jnp.int32)
-        win = win.at[jnp.where(hit_a, ra, nv)].max(
-            jnp.where(hit_a, eidx, -1), mode="drop")
-        win = win.at[jnp.where(hit_b, rb, nv)].max(
-            jnp.where(hit_b, eidx, -1), mode="drop")
+        best, win = reduce_(key, ra, rb, nv)
 
         # For each cluster with a best edge: other endpoint + die rule.
         has = win >= 0
@@ -155,35 +198,38 @@ def boruvka_forest(v_rank, e_rank, e_val, e_pos, e_a, e_b):
         parent = jnp.where(die, other, parent)
         dval = jnp.where(die, e_val[wi], dval)
         dpos = jnp.where(die, e_pos[wi], dpos)
-        any_alive = jnp.any(alive)
-        return parent, dval, dpos, any_alive
+        merges = merges + jnp.sum(die, dtype=jnp.int32)
+        return parent, dval, dpos, jnp.any(alive), merges, rounds + 1
 
     def cond(state):
-        return state[3]
+        return state[3] & (state[4] < merge_cap)
 
-    def body(state):
-        return round_body(state)
-
-    state = (parent0, dval0, dpos0, jnp.asarray(True))
-    # Seed round + loop until no alive inter-cluster edges remain.
-    state = jax.lax.while_loop(cond, body, state)
-    _, dval, dpos, _ = state
-    return dval, dpos
+    state = (parent0, dval0, dpos0, jnp.asarray(True), jnp.int32(0),
+             jnp.int32(0))
+    # Seed round + loop until no alive inter-cluster edges remain (or the
+    # merge budget proves none can).
+    state = jax.lax.while_loop(cond, round_body, state)
+    _, dval, dpos, _, _, rounds = state
+    return dval, dpos, rounds
 
 
 def boruvka_merge(image_flat, key_flat, labels_flat, cand_flat, shape,
-                  max_candidates: int, max_rounds: int = 40):
+                  max_candidates: int, *, n_live=None,
+                  tournament_width: int = 2, reduce_fn=None):
     """Parallel replacement for ``pixhomology.merge_components``.
 
     Whole-image instantiation of :func:`boruvka_forest`: vertices are the n
     pixels keyed by the global total order (only basin roots carry live
     edges).  Packed keys carry their pixel index in the low bits, so the
     key -> pixel map is a mask; dense ranks need the inverse permutation
-    (one more argsort — the fallback's price).
+    (one more argsort — the fallback's price).  ``n_live``/``reduce_fn``
+    forward to :func:`boruvka_forest`; returns
+    ``(dval, dpos, overflow, rounds)``.
     """
     n = image_flat.shape[0]
     e_key, e_a, e_b = candidate_edges(key_flat, labels_flat, cand_flat,
-                                      shape, max_candidates)
+                                      shape, max_candidates,
+                                      tournament_width)
     # Map the saddle key back to its pixel id for death values/positions.
     if key_flat.dtype == jnp.int64:
         e_pos = jnp.clip(packed_index(e_key), 0)     # pad keys -> pixel 0
@@ -192,8 +238,10 @@ def boruvka_merge(image_flat, key_flat, labels_flat, cand_flat, shape,
         e_pos = perm[jnp.clip(e_key, 0)]
     e_val = image_flat[e_pos]
 
-    dval, dpos = boruvka_forest(key_flat, e_key, e_val, e_pos, e_a, e_b)
+    dval, dpos, rounds = boruvka_forest(key_flat, e_key, e_val, e_pos,
+                                        e_a, e_b, n_live=n_live,
+                                        reduce_fn=reduce_fn)
 
     n_cand = jnp.sum(cand_flat, dtype=jnp.int32)
     overflow = n_cand > min(max_candidates, n)
-    return dval, dpos, overflow
+    return dval, dpos, overflow, rounds

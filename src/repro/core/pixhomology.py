@@ -440,20 +440,74 @@ def phase_c(image_flat: jnp.ndarray, key_flat: jnp.ndarray,
             labels_flat: jnp.ndarray, cand_flat: jnp.ndarray,
             shape: tuple[int, int], truncate_value=None, *,
             max_features: int, max_candidates: int,
-            merge_impl: str = "scan") -> Diagram:
+            merge_impl: str = "scan", phase_c_impl: str = "fused",
+            phase_c_block: int = 1024, tournament_width: int = 2,
+            use_pallas: bool | None = None,
+            interpret: bool = False) -> Diagram:
     """Stage C: elder-rule merge + essential class + diagram (steps 5-6).
 
     ``merge_impl="scan"`` is the paper-faithful sequential sweep;
     ``"boruvka"`` the parallel merge forest (O(log C) rounds,
     bit-identical — see ``parallel_merge.py``).  ``key_flat`` carries the
     total order in either encoding (ranks / packed); on packed keys the
-    diagram's root top-k also runs as a blockwise tournament, so phase C
-    contains no full-image-length sort at all.
+    diagram's root top-k also runs as a blockwise tournament (extent
+    ``tournament_width * k``), so phase C contains no full-image-length
+    sort at all.
+
+    ``phase_c_impl`` selects the Boruvka implementation (ignored by the
+    scan sweep): ``"xla"`` runs the rounds over all n pixel-vertices;
+    ``"fused"`` (the default) compacts to the top-``max_features`` root
+    instance first and reduces with the ``repro.kernels.ph_phase_c``
+    blocked kernel (``phase_c_block`` edges per VMEM block) — bit-
+    identical whenever the roots fit ``max_features`` (under root
+    overflow both impls raise the same flag and the engine regrows; see
+    ``kernels/ph_phase_c/ops.py``).
     """
     h, w = shape
     n = h * w
     vals = image_flat
     is_root = labels_flat == jnp.arange(n, dtype=jnp.int32)
+    f = min(max_features, n)
+    neg_inf = (-jnp.inf if jnp.issubdtype(vals.dtype, jnp.floating)
+               else jnp.iinfo(vals.dtype).min)
+    gmax = jnp.argmax(key_flat).astype(jnp.int32)
+    gmin = jnp.argmin(key_flat).astype(jnp.int32)
+    root_mask = is_root if truncate_value is None else \
+        is_root & (vals >= truncate_value)
+
+    if merge_impl == "boruvka" and phase_c_impl == "fused":
+        # Compact fused path: merge + diagram read the same top-f root
+        # table, so deaths never materialize in the pixel domain at all.
+        from repro.kernels.ph_phase_c import ops as phase_c_ops
+        cand_b = cand_flat if truncate_value is None else \
+            cand_flat & (vals >= truncate_value)
+        (_, root_pix, rvalid, dval_c, dpos_c, overflow_k,
+         _rounds) = phase_c_ops.fused_merge(
+            vals, key_flat, labels_flat, cand_b, root_mask, (h, w),
+            max_candidates=max_candidates, max_features=max_features,
+            phase_c_block=phase_c_block, tournament_width=tournament_width,
+            use_pallas=use_pallas, interpret=interpret)
+        if truncate_value is not None:
+            undied_c = rvalid & (dpos_c < 0)
+            dval_c = jnp.where(undied_c,
+                               jnp.asarray(truncate_value, dval_c.dtype),
+                               dval_c)
+        # Essential class on the compact table: slot 0 is the global
+        # maximum's root whenever any root exists (paper fig 3).
+        dval_c = dval_c.at[0].set(
+            jnp.where(rvalid[0], vals[gmin], dval_c[0]))
+        dpos_c = dpos_c.at[0].set(jnp.where(rvalid[0], gmin, dpos_c[0]))
+
+        c = jnp.sum(root_mask, dtype=jnp.int32)
+        row_valid = jnp.arange(f) < c
+        birth = jnp.where(row_valid, vals[root_pix], neg_inf)
+        death = jnp.where(row_valid, dval_c, neg_inf)
+        p_birth = jnp.where(row_valid, root_pix, -1).astype(jnp.int32)
+        p_death = jnp.where(row_valid, dpos_c, -1).astype(jnp.int32)
+        n_unmerged = jnp.sum(rvalid & (dpos_c < 0), dtype=jnp.int32)
+        overflow = overflow_k | (c > f)
+        return Diagram(birth, death, p_birth, p_death,
+                       jnp.minimum(c, f), n_unmerged, overflow)
 
     if merge_impl == "scan":
         dval, dpos, overflow_k = merge_components(
@@ -463,31 +517,28 @@ def phase_c(image_flat: jnp.ndarray, key_flat: jnp.ndarray,
         from repro.core import parallel_merge
         cand_b = cand_flat if truncate_value is None else \
             cand_flat & (vals >= truncate_value)
-        dval, dpos, overflow_k = parallel_merge.boruvka_merge(
-            vals, key_flat, labels_flat, cand_b, (h, w), max_candidates)
+        dval, dpos, overflow_k, _rounds = parallel_merge.boruvka_merge(
+            vals, key_flat, labels_flat, cand_b, (h, w), max_candidates,
+            n_live=jnp.sum(root_mask, dtype=jnp.int32),
+            tournament_width=tournament_width)
     else:
         raise ValueError(f"unknown merge_impl {merge_impl!r}")
 
     if truncate_value is not None:
         # Sub-threshold components are background; survivors die at t.
-        is_root = is_root & (vals >= truncate_value)
+        is_root = root_mask
         undied = is_root & (dpos < 0)
         dval = jnp.where(undied, jnp.asarray(truncate_value, dval.dtype),
                          dval)
 
     # Essential class: global maximum dies at the global minimum (paper fig 3).
-    gmax = jnp.argmax(key_flat).astype(jnp.int32)
-    gmin = jnp.argmin(key_flat).astype(jnp.int32)
     dval = dval.at[gmax].set(vals[gmin])
     dpos = dpos.at[gmax].set(gmin)
 
     # Step 6: persistence diagram, descending by birth.
-    f = min(max_features, n)
-    _, root_pix = masked_top_k(key_flat, is_root, f)
+    _, root_pix = masked_top_k(key_flat, is_root, f, tournament_width)
     row_valid = jnp.arange(f) < jnp.sum(is_root, dtype=jnp.int32)
 
-    neg_inf = (-jnp.inf if jnp.issubdtype(vals.dtype, jnp.floating)
-               else jnp.iinfo(vals.dtype).min)
     birth = jnp.where(row_valid, vals[root_pix], neg_inf)
     death = jnp.where(row_valid, dval[root_pix], neg_inf)
     p_birth = jnp.where(row_valid, root_pix, -1).astype(jnp.int32)
@@ -508,7 +559,8 @@ def phase_c(image_flat: jnp.ndarray, key_flat: jnp.ndarray,
     jax.jit,
     static_argnames=("max_features", "max_candidates", "candidate_mode",
                      "use_pallas", "interpret", "merge_impl", "phase_a_impl",
-                     "strip_rows", "merge_keys"))
+                     "strip_rows", "merge_keys", "phase_c_impl",
+                     "phase_c_block", "tournament_width"))
 def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
                  max_features: int = 256,
                  max_candidates: int = 4096,
@@ -518,7 +570,10 @@ def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
                  merge_impl: str = "scan",
                  phase_a_impl: str = "fused",
                  strip_rows: int = 8,
-                 merge_keys: str = "rank") -> Diagram:
+                 merge_keys: str = "rank",
+                 phase_c_impl: str = "fused",
+                 phase_c_block: int = 1024,
+                 tournament_width: int = 2) -> Diagram:
     """Jitted Algorithm-1 core; ``merge_keys`` must arrive fully resolved
     (the public :func:`pixhomology` wrapper resolves it and opens the x64
     scope the packed encoding needs)."""
@@ -554,7 +609,10 @@ def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
     # Stage C: merge + essential class + diagram.
     return phase_c(vals, key, labels, cand, (h, w), truncate_value,
                    max_features=max_features, max_candidates=max_candidates,
-                   merge_impl=merge_impl)
+                   merge_impl=merge_impl, phase_c_impl=phase_c_impl,
+                   phase_c_block=phase_c_block,
+                   tournament_width=tournament_width,
+                   use_pallas=use_pallas, interpret=interpret)
 
 
 def pixhomology(image: jnp.ndarray, truncate_value=None, *,

@@ -417,7 +417,8 @@ def seam_merge(root_val, root_gidx, root_valid,
                e_val, e_pos, e_a, e_b, e_valid,
                rmax_val, rmax_gidx, gmin_val, gmin_gidx,
                tv, *, truncated: bool, max_features: int, dtype,
-               merge_keys: str = "rank"):
+               merge_keys: str = "rank", phase_c_impl: str = "fused",
+               phase_c_block: int = 1024):
     """Elder-rule reduction of the concatenated per-tile instances.
 
     Compact vertex set = listed basin roots; edges reference roots by
@@ -427,8 +428,13 @@ def seam_merge(root_val, root_gidx, root_valid,
     ``(value, global index)`` int64 directly — edges sharing a saddle
     pixel are equal-keyed *by construction*, so the two dense-rank
     argsorts of the ``"rank"`` path (vertex lexsort + edge group ranking)
-    disappear.  Returns ``(birth, death, p_birth, p_death, count,
-    n_unmerged, merge_overflow)``.
+    disappear.  The seam instance is already compact (listed roots, never
+    full-image), so ``phase_c_impl="fused"`` here selects only the round
+    reduction backend: the blocked phase-C kernel dispatch
+    (``repro.kernels.ph_phase_c.ops.best_edge_reduce`` with
+    ``phase_c_block`` edges per step) instead of the plain XLA scatter —
+    bit-identical either way.  Returns ``(birth, death, p_birth, p_death,
+    count, n_unmerged, merge_overflow)``.
     """
     rv = root_val.reshape(-1)
     rg = root_gidx.reshape(-1)
@@ -476,8 +482,17 @@ def seam_merge(root_val, root_gidx, root_valid,
         erank_raw = jnp.zeros(ne, jnp.int32).at[eorder].set(grp)
         e_rank = jnp.where(alive, erank_raw, key_pad(jnp.int32))
 
-    dval, dpos = boruvka_forest(v_rank, e_rank, ev.astype(dtype), ep,
-                                jnp.clip(sa, 0), jnp.clip(sb, 0))
+    if phase_c_impl == "fused":
+        from repro.kernels.ph_phase_c import ops as phase_c_ops
+        reduce_fn = functools.partial(phase_c_ops.best_edge_reduce,
+                                      block_edges=phase_c_block)
+    else:
+        reduce_fn = None
+    n_live = jnp.sum(ok_r, dtype=jnp.int32)
+    dval, dpos, _rounds = boruvka_forest(
+        v_rank, e_rank, ev.astype(dtype), ep,
+        jnp.clip(sa, 0), jnp.clip(sb, 0),
+        n_live=n_live, reduce_fn=reduce_fn)
 
     if truncated:
         # Survivors that never merged above the threshold die at it
@@ -526,14 +541,17 @@ def seam_merge(root_val, root_gidx, root_valid,
 @functools.partial(
     jax.jit,
     static_argnames=("grid", "max_features", "tile_max_features",
-                     "tile_max_candidates", "shard_ctx", "merge_keys"))
+                     "tile_max_candidates", "shard_ctx", "merge_keys",
+                     "phase_c_impl", "phase_c_block"))
 def _tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
                        grid: tuple[int, int],
                        max_features: int = 8192,
                        tile_max_features: int = 2048,
                        tile_max_candidates: int = 8192,
                        shard_ctx=None,
-                       merge_keys: str = "rank") -> TiledDiagram:
+                       merge_keys: str = "rank",
+                       phase_c_impl: str = "fused",
+                       phase_c_block: int = 1024) -> TiledDiagram:
     """Jitted host-resident-image core of :func:`tiled_pixhomology`."""
     if image.ndim != 2:
         raise ValueError(f"expected 2D image, got shape {image.shape}")
@@ -546,7 +564,8 @@ def _tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
         pvals, pgidx, truncate_value, shape=(h, w), grid=grid,
         max_features=max_features, tile_max_features=tile_max_features,
         tile_max_candidates=tile_max_candidates, shard_ctx=shard_ctx,
-        merge_keys=merge_keys)
+        merge_keys=merge_keys, phase_c_impl=phase_c_impl,
+        phase_c_block=phase_c_block)
 
 
 def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
@@ -579,7 +598,8 @@ def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
 @functools.partial(
     jax.jit,
     static_argnames=("shape", "grid", "max_features", "tile_max_features",
-                     "tile_max_candidates", "shard_ctx", "merge_keys"))
+                     "tile_max_candidates", "shard_ctx", "merge_keys",
+                     "phase_c_impl", "phase_c_block"))
 def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
                               truncate_value=None, *,
                               shape: tuple[int, int],
@@ -588,7 +608,9 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
                               tile_max_features: int = 2048,
                               tile_max_candidates: int = 8192,
                               shard_ctx=None,
-                              merge_keys: str = "rank") -> TiledDiagram:
+                              merge_keys: str = "rank",
+                              phase_c_impl: str = "fused",
+                              phase_c_block: int = 1024) -> TiledDiagram:
     """Jitted tile-stack core of :func:`tiled_pixhomology_stacks`."""
     h, w = shape
     validate_grid((h, w), grid)
@@ -657,7 +679,8 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
         root_val, root_gidx, root_valid, e_val, e_pos, e_a, e_b, e_valid,
         rmax_val, rmax_gidx, gmin_val, gmin_gidx, tv,
         truncated=truncated, max_features=f_global, dtype=pvals.dtype,
-        merge_keys=merge_keys)
+        merge_keys=merge_keys, phase_c_impl=phase_c_impl,
+        phase_c_block=phase_c_block)
 
     tile_overflow = (jnp.any(n_cand > min(tile_max_candidates, tr * tc))
                      | jnp.any(n_roots > min(tile_max_features, tr * tc)))

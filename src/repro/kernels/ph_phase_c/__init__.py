@@ -1,0 +1,13 @@
+"""Fused PixHomology phase-C kernel (segmented per-basin edge reduction).
+
+``ops.best_edge_reduce`` dispatches the Boruvka round's per-cluster
+best-edge reduction between the Pallas kernel (``kernel.py``) and the
+pure-XLA oracle (``ref.py``); ``ops.fused_merge`` is the whole-image
+fused phase-C driver that runs the Boruvka forest over a compact root
+instance instead of the full pixel array.  See ``src/repro/ph/DESIGN.md``
+§9 for the stage-graph contract this kernel implements.
+"""
+from repro.kernels.ph_phase_c.ops import (  # noqa: F401
+    best_edge_reduce,
+    fused_merge,
+)

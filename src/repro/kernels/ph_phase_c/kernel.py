@@ -1,0 +1,125 @@
+"""Pallas kernel for the phase-C per-basin best-edge reduction.
+
+One Boruvka round's segmented reduction — every cluster finds its best
+incident saddle edge — executed block-by-block over the edge axis with
+the per-cluster accumulator resident in VMEM:
+
+* the grid iterates ``ceil(E / block_edges)`` edge blocks; the
+  accumulator output uses a constant ``index_map`` so the same
+  ``(1, nv)`` block stays in VMEM across the whole grid (initialized at
+  ``program_id == 0``), while each step streams one
+  ``(1, block_edges)`` slice of the edge arrays through the pipeline —
+  this is what removes the full-edge-array HBM round trips the plain XLA
+  scatter pays per pass;
+* pass 1 scatter-maxes each block's saddle keys into the accumulator
+  (both endpoints); pass 2 re-streams the blocks against the finished
+  ``best`` table to scatter-max the winning edge index among key ties.
+
+Bit-identity with ``ref.best_edge_reduce`` needs no tolerance argument:
+integer max is associative/commutative with the pad sentinel as
+identity, so the blocked accumulation order cannot change any output bit
+(``tests/test_kernels_phase_c.py`` checks it anyway, across dtypes, tie
+storms, and non-divisible block sizes).
+
+VMEM working set per step: the ``nv``-entry accumulator (int64 keys:
+8·nv bytes — 64 KiB at the default ``max_features = 8192``) plus four
+``block_edges`` lanes.  Mosaic's scatter support on real TPUs is the
+same caveat the phase-A kernel documents: CI pins ``interpret=True``
+(the dispatcher does this automatically off-TPU), and the XLA reference
+remains the production CPU backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packed_keys import key_pad
+
+
+def _best_kernel(key_ref, ra_ref, rb_ref, best_ref, *, nv: int):
+    pad = key_pad(key_ref.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        best_ref[...] = jnp.full(best_ref.shape, pad, best_ref.dtype)
+
+    key = key_ref[0, :]
+    alive = key > pad
+    ra = jnp.where(alive, ra_ref[0, :], nv)      # nv == drop lane
+    rb = jnp.where(alive, rb_ref[0, :], nv)
+    acc = best_ref[0, :]
+    acc = acc.at[ra].max(key, mode="drop")
+    acc = acc.at[rb].max(key, mode="drop")
+    best_ref[0, :] = acc
+
+
+def _win_kernel(key_ref, ra_ref, rb_ref, eidx_ref, best_ref, win_ref, *,
+                nv: int):
+    pad = key_pad(key_ref.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        win_ref[...] = jnp.full(win_ref.shape, -1, jnp.int32)
+
+    key = key_ref[0, :]
+    alive = key > pad
+    ra = ra_ref[0, :]
+    rb = rb_ref[0, :]
+    eidx = eidx_ref[0, :]
+    best = best_ref[0, :]
+    hit_a = alive & (key == best[ra])
+    hit_b = alive & (key == best[rb])
+    acc = win_ref[0, :]
+    acc = acc.at[jnp.where(hit_a, ra, nv)].max(
+        jnp.where(hit_a, eidx, -1), mode="drop")
+    acc = acc.at[jnp.where(hit_b, rb, nv)].max(
+        jnp.where(hit_b, eidx, -1), mode="drop")
+    win_ref[0, :] = acc
+
+
+def best_edge_reduce(key, ra, rb, nv: int, *, block_edges: int = 1024,
+                     interpret: bool = False):
+    """Blocked Pallas twin of ``ref.best_edge_reduce`` (same signature
+    plus the block size).  ``key`` is pre-masked (pad sentinel on dead
+    lanes); ``ra``/``rb`` must be in ``[0, nv)`` on every lane."""
+    e = key.shape[0]
+    block = max(1, min(block_edges, e))
+    nb = -(-e // block)
+    extra = nb * block - e
+    pad = key_pad(key.dtype)
+    eidx = jnp.arange(e, dtype=jnp.int32)
+    if extra:
+        key = jnp.concatenate([key, jnp.full(extra, pad, key.dtype)])
+        ra = jnp.concatenate([ra, jnp.zeros(extra, ra.dtype)])
+        rb = jnp.concatenate([rb, jnp.zeros(extra, rb.dtype)])
+        eidx = jnp.concatenate([eidx, jnp.full(extra, -1, jnp.int32)])
+    key2 = key.reshape(nb, block)
+    ra2 = ra.reshape(nb, block)
+    rb2 = rb.reshape(nb, block)
+    eidx2 = eidx.reshape(nb, block)
+
+    edge_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    acc_spec = pl.BlockSpec((1, nv), lambda i: (0, 0))
+
+    best = pl.pallas_call(
+        functools.partial(_best_kernel, nv=nv),
+        grid=(nb,),
+        in_specs=[edge_spec] * 3,
+        out_specs=acc_spec,
+        out_shape=jax.ShapeDtypeStruct((1, nv), key.dtype),
+        interpret=interpret,
+    )(key2, ra2, rb2)
+
+    win = pl.pallas_call(
+        functools.partial(_win_kernel, nv=nv),
+        grid=(nb,),
+        in_specs=[edge_spec] * 4 + [acc_spec],
+        out_specs=acc_spec,
+        out_shape=jax.ShapeDtypeStruct((1, nv), jnp.int32),
+        interpret=interpret,
+    )(key2, ra2, rb2, eidx2, best)
+
+    return best[0], win[0]

@@ -1,0 +1,22 @@
+"""Pure-XLA reference for the fused phase-C reduction (the Pallas oracle).
+
+The reduction itself — two scatter-max passes turning an edge list into
+per-cluster (best saddle key, winning edge index) — lives in
+``repro.core.parallel_merge.best_edge_reduce``: it *is* the factored
+round body of :func:`~repro.core.parallel_merge.boruvka_forest`, so the
+whole-image Boruvka path, the tiled seam merge, and this kernel package
+all reduce through literally the same code.  This module re-exports it
+under the kernel-package layout (``ref`` = the bit-identical XLA twin the
+Pallas kernel is verified against, and the backend the CPU path runs),
+mirroring ``repro.kernels.ph_phase_a``.
+
+Why blocking cannot change the result: both passes are integer ``max``
+scatter reductions — associative and commutative, with the dtype-min pad
+sentinel as the identity element — so accumulating the edge axis in any
+block order (the Pallas kernel's grid) produces bit-identical outputs.
+The index pass breaks best-key ties by maximum edge index, which is
+itself another max reduction, so ties are deterministic too.
+"""
+from __future__ import annotations
+
+from repro.core.parallel_merge import best_edge_reduce  # noqa: F401

@@ -46,7 +46,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_path: Path,
 
     try:
         if arch == "pixhomology":
-            rec.update(_run_pixhomology(ctx, shape_name))
+            if overrides:
+                rec["overrides"] = overrides
+            rec.update(_run_pixhomology(ctx, shape_name, overrides))
         else:
             cfg = get_config(arch)
             if overrides:
@@ -125,8 +127,14 @@ def _n_devices_of(compiled) -> int:
     return len(jax.devices())
 
 
-def _run_pixhomology(ctx, shape_name: str) -> dict:
-    """The paper's own workload as a dry-run cell: a sharded image batch."""
+def _run_pixhomology(ctx, shape_name: str,
+                     overrides: dict | None = None) -> dict:
+    """The paper's own workload as a dry-run cell: a sharded image batch.
+
+    ``overrides`` are :class:`PHConfig` field overrides (the hillclimb
+    knobs — e.g. ``--override phase_c_impl=xla`` or
+    ``--override phase_c_block=4096`` to compile-compare stage-C
+    variants without touching code)."""
     import jax
     import jax.numpy as jnp
     from repro.ph import PHConfig, PHEngine
@@ -139,8 +147,11 @@ def _run_pixhomology(ctx, shape_name: str) -> dict:
     presets = {"ph_batch_1k": (512, 1024, 1024, 16384, 8192),
                "ph_batch_4k": (512, 4096, 4096, 65536, 32768)}
     b, h, w, k, f = presets[shape_name]
-    engine = PHEngine(PHConfig(max_features=f, max_candidates=k,
-                               use_pallas=False, auto_regrow=False))
+    config = PHConfig(max_features=f, max_candidates=k,
+                      use_pallas=False, auto_regrow=False)
+    if overrides:
+        config = config.replace(**overrides)
+    engine = PHEngine(config)
     plan = engine.sharded_plan(ctx, (b, h, w), jnp.dtype(jnp.float32), f, k)
     sds = jax.ShapeDtypeStruct((b, h, w), jnp.float32)
     tsds = jax.ShapeDtypeStruct((b,), jnp.float32)

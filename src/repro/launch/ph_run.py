@@ -60,6 +60,25 @@ def main():
                          "pooled baseline")
     ap.add_argument("--strip-rows", dest="strip_rows", type=int,
                     help="fused phase-A strip height (Pallas block rows)")
+    ap.add_argument("--phase-c-impl", dest="phase_c_impl",
+                    choices=["fused", "xla"],
+                    help="stage-C merge under merge_impl=boruvka: fused "
+                         "compact-instance kernel or the plain full-image "
+                         "Boruvka (bit-identical either way)")
+    ap.add_argument("--phase-c-block", dest="phase_c_block", type=int,
+                    help="fused phase-C edge-block size (edges per Pallas "
+                         "grid step)")
+    ap.add_argument("--tournament-width", dest="tournament_width", type=int,
+                    help="blockwise top-k tournament width (>= 2; any "
+                         "width is bit-identical)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="fold cached autotuned (strip_rows, phase_c_block, "
+                         "tournament_width) into plans per image shape "
+                         "(repro.roofline.autotune disk cache; missing "
+                         "entries fall back to the flags above)")
+    ap.add_argument("--autotune-cache", dest="autotune_cache",
+                    help="autotune cache path (default: "
+                         "artifacts/autotune_cache.json)")
     ap.add_argument("--no-regrow", action="store_true",
                     help="surface overflow instead of auto-regrowing")
     ap.add_argument("--tile-grid", dest="tile_grid", metavar="RxC",

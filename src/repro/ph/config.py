@@ -18,6 +18,7 @@ from repro.core.packed_keys import MERGE_KEYS  # noqa: F401  (single source)
 CANDIDATE_MODES = ("exact", "paper")
 MERGE_IMPLS = ("scan", "boruvka")
 PHASE_A_IMPLS = ("fused", "pooled")
+PHASE_C_IMPLS = ("fused", "xla")
 DTYPES = (None, "float32", "float64", "int32", "bfloat16")
 BUCKET_ROUNDINGS = ("exact", "pow2")
 ADMISSION_POLICIES = ("reject", "block")
@@ -189,6 +190,26 @@ class PHConfig:
     # Strip height of the fused phase-A kernel (= its Pallas block rows and
     # the frontier compaction factor: the frontier is ~2/strip_rows of n).
     strip_rows: int = 8
+    # phase_c_impl "fused": the repro.kernels.ph_phase_c compact merge —
+    # Boruvka over the top-max_features root instance with the blocked
+    # per-basin reduction (Pallas on TPU per use_pallas, its XLA reference
+    # elsewhere).  "xla": the plain full-image Boruvka / scan merge.  Only
+    # consulted when merge_impl="boruvka" (the scan merge has no phase-C
+    # kernel); bit-identical either way.
+    phase_c_impl: str = "fused"            # "fused" | "xla"
+    # Edge-block size of the fused phase-C reduction (edges streamed per
+    # Pallas grid step; the per-basin accumulator stays in VMEM).
+    phase_c_block: int = 1024
+    # Blockwise tournament width of the phase-C top-k selections (each
+    # round keeps top-k of width*k candidates; any width >= 2 is
+    # bit-identical — the autotuner picks it per shape).
+    tournament_width: int = 2
+    # Autotuning: look up (strip_rows, phase_c_block, tournament_width)
+    # per (shape, dtype, backend) from the roofline autotuner's disk cache
+    # (repro.roofline.autotune); missing entries fall back to the fields
+    # above.  autotune_cache=None uses the default cache path.
+    autotune: bool = False
+    autotune_cache: str | None = None
     filter_level: FilterLevel = FilterLevel.VANILLA
     # Dtype policy: cast inputs before compute (None = keep input dtype).
     dtype: str | None = None
@@ -250,6 +271,16 @@ class PHConfig:
         if not isinstance(self.strip_rows, int) or self.strip_rows < 1:
             raise ValueError(f"strip_rows must be a positive int, "
                              f"got {self.strip_rows!r}")
+        if self.phase_c_impl not in PHASE_C_IMPLS:
+            raise ValueError(f"phase_c_impl must be one of {PHASE_C_IMPLS}, "
+                             f"got {self.phase_c_impl!r}")
+        if not isinstance(self.phase_c_block, int) or self.phase_c_block < 1:
+            raise ValueError(f"phase_c_block must be a positive int, "
+                             f"got {self.phase_c_block!r}")
+        if not isinstance(self.tournament_width, int) or \
+                self.tournament_width < 2:
+            raise ValueError(f"tournament_width must be an int >= 2, "
+                             f"got {self.tournament_width!r}")
         if self.dtype not in DTYPES:
             raise ValueError(f"dtype must be one of {DTYPES}, "
                              f"got {self.dtype!r}")
@@ -294,7 +325,8 @@ class PHConfig:
                  self.interpret),
                 ("b", "frontier" if self.phase_a_impl == "fused"
                  else "dense", self.candidate_mode),
-                ("c", self.merge_impl, self.merge_keys))
+                ("c", self.merge_impl, self.merge_keys, self.phase_c_impl,
+                 self.phase_c_block, self.tournament_width))
 
     def plan_key(self) -> tuple:
         """The config fields that affect *compiled executables*.
@@ -332,7 +364,9 @@ class PHConfig:
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
                      "merge_impl", "merge_keys", "phase_a_impl",
-                     "strip_rows", "dtype", "use_pallas", "interpret",
+                     "strip_rows", "phase_c_impl", "phase_c_block",
+                     "tournament_width", "autotune", "autotune_cache",
+                     "dtype", "use_pallas", "interpret",
                      "max_regrows", "auto_regrow", "regrow_factor",
                      "regrow_features_ceiling", "regrow_candidates_ceiling",
                      "bucket_rounding", "prefetch_rounds"):

@@ -138,6 +138,9 @@ class PHEngine:
         # Largest regrown capacities seen per (kind, shape, dtype): later
         # calls start there instead of re-walking the doubling chain.
         self._grown: dict[tuple, tuple[int, int]] = {}
+        # Autotune memo: effective (tuned) config per (shape, dtype), so
+        # the disk-cache lookup happens once per shape family.
+        self._tuned: dict[tuple, PHConfig] = {}
         self._hits = 0
         self._misses = 0
         self.regrow_log: list[dict] = []
@@ -190,18 +193,55 @@ class PHEngine:
         int64 scope is unavailable — bit-identical either way)."""
         return resolve_merge_keys(self.config.merge_keys, dtype)
 
-    def _ph_kwargs(self, mf: int, mc: int, merge_keys: str) -> dict:
+    def _effective_config(self, shape2d, dtype) -> PHConfig:
+        """The config with autotuned ``(strip_rows, phase_c_block,
+        tournament_width)`` folded in for this image shape family,
+        memoized per (shape, dtype).
+
+        With ``config.autotune`` on this is a pure **disk-cache lookup**
+        (:func:`repro.roofline.autotune.lookup`) — the engine never
+        measures; a missing cache entry keeps the config's own fields.
+        The effective config's :meth:`PHConfig.plan_key` keys the plan
+        cache, so tuned parameters deterministically select compiled
+        programs.
+        """
+        cfg = self.config
+        if not cfg.autotune:
+            return cfg
+        key = (tuple(shape2d), str(dtype))
+        with self._lock:
+            got = self._tuned.get(key)
+        if got is not None:
+            return got
+        from repro.roofline import autotune
+        tp = autotune.lookup(tuple(shape2d), str(dtype),
+                             path=cfg.autotune_cache)
+        eff = cfg if tp.source == "default" else cfg.replace(
+            strip_rows=tp.strip_rows,
+            phase_c_block=tp.phase_c_block,
+            tournament_width=tp.tournament_width)
+        with self._lock:
+            self._tuned[key] = eff
+        return eff
+
+    def _ph_kwargs(self, mf: int, mc: int, merge_keys: str,
+                   cfg: PHConfig | None = None) -> dict:
         """Static kwargs of one compiled stage-graph program: capacities
         plus the config's stage signature knobs (phase A impl/strip rows,
-        candidate mode, merge impl/keys, backend toggles).  ``merge_keys``
-        arrives resolved — the plan's key scope matches it."""
-        cfg = self.config
+        candidate mode, merge impl/keys, phase C impl/block/width, backend
+        toggles).  ``merge_keys`` arrives resolved — the plan's key scope
+        matches it.  ``cfg`` (default: the engine config) lets autotuned
+        effective configs supply the tuned fields."""
+        cfg = self.config if cfg is None else cfg
         return dict(max_features=mf, max_candidates=mc,
                     candidate_mode=cfg.candidate_mode,
                     merge_impl=cfg.merge_impl,
                     merge_keys=merge_keys,
                     phase_a_impl=cfg.phase_a_impl,
                     strip_rows=cfg.strip_rows,
+                    phase_c_impl=cfg.phase_c_impl,
+                    phase_c_block=cfg.phase_c_block,
+                    tournament_width=cfg.tournament_width,
                     use_pallas=cfg.use_pallas, interpret=cfg.interpret)
 
     def _local_plan(self, kind: str, shape, dtype, mf: int, mc: int,
@@ -210,11 +250,12 @@ class PHEngine:
         callee ("single" -> pixhomology, "batched" -> its vmap)."""
         callee = pixhomology if kind == "single" else batched_pixhomology
         mk = self._merge_keys_for(dtype)
+        eff = self._effective_config(tuple(shape)[-2:], dtype)
         key = (kind, shape, str(dtype), mf, mc, truncated,
-               self.config.plan_key())
+               eff.plan_key())
 
         def build(plan: Plan):
-            kw = self._ph_kwargs(mf, mc, mk)
+            kw = self._ph_kwargs(mf, mc, mk, eff)
 
             def compute(x, tv=None):
                 plan.traces += 1   # python side effect: runs per (re)trace
@@ -236,12 +277,13 @@ class PHEngine:
         (src/repro/ph/DESIGN.md §Perf PH-1: collective 1407 s -> ~0).
         """
         mk = self._merge_keys_for(dtype)
+        eff = self._effective_config(tuple(shape)[-2:], dtype)
         key = ("sharded", ctx, shape, str(dtype), mf, mc,
-               self.config.plan_key())
+               eff.plan_key())
 
         def build(plan: Plan):
             from jax.sharding import PartitionSpec as P
-            kw = self._ph_kwargs(mf, mc, mk)
+            kw = self._ph_kwargs(mf, mc, mk, eff)
             dp = ctx.dp_axes
             out_specs = Diagram(P(dp, None), P(dp, None), P(dp, None),
                                 P(dp, None), P(dp), P(dp), P(dp))
@@ -277,13 +319,17 @@ class PHEngine:
         key = ("tiled", ctx, shape, str(dtype), grid, mf, tf, tk, truncated,
                self.config.plan_key())
 
+        cfg = self.config
+
         def build(plan: Plan):
             def compute(x, tv=None):
                 plan.traces += 1
                 return tiled_pixhomology(
                     x, tv, grid=grid, max_features=mf,
                     tile_max_features=tf, tile_max_candidates=tk,
-                    shard_ctx=ctx, merge_keys=mk)
+                    shard_ctx=ctx, merge_keys=mk,
+                    phase_c_impl=cfg.phase_c_impl,
+                    phase_c_block=cfg.phase_c_block)
 
             if truncated:
                 return jax.jit(lambda im, tv: compute(im, tv))
@@ -301,13 +347,17 @@ class PHEngine:
         key = ("tiled_stacks", ctx, shape, str(dtype), grid, mf, tf, tk,
                truncated, self.config.plan_key())
 
+        cfg = self.config
+
         def build(plan: Plan):
             def compute(pv, pg, tv=None):
                 plan.traces += 1
                 return tiled_pixhomology_stacks(
                     pv, pg, tv, shape=shape, grid=grid, max_features=mf,
                     tile_max_features=tf, tile_max_candidates=tk,
-                    shard_ctx=ctx, merge_keys=mk)
+                    shard_ctx=ctx, merge_keys=mk,
+                    phase_c_impl=cfg.phase_c_impl,
+                    phase_c_block=cfg.phase_c_block)
 
             if truncated:
                 return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))

@@ -1,0 +1,223 @@
+"""Roofline-driven autotuner for the PH stage-graph knobs.
+
+Searches ``(strip_rows, phase_c_block, tournament_width)`` per
+``(shape, dtype, backend)`` in two stages:
+
+1. **Model ranking** — every candidate's whole-image PH program is
+   lowered and compiled once; the optimized HLO is walked by
+   :mod:`repro.roofline.analysis` and the candidate scored by its
+   dominant roofline term (max of compute/memory/collective seconds).
+   Compilation is cheap relative to trials, so the model prunes the
+   search space before any device time is spent.
+2. **Measured trials** — only the model's top ``measure_top`` candidates
+   pay short wall-clock trials (best of ``trials`` steady-state calls);
+   the fastest wins.
+
+The winner persists in a JSON disk cache keyed by :func:`cache_key`.
+``PHEngine`` consumes the cache through :func:`lookup` when
+``PHConfig.autotune`` is set: ``lookup`` NEVER compiles or measures — a
+cache miss returns :data:`DEFAULTS` (``source="default"``) and the
+config's own fields stand — and the tuned fields are folded into the
+engine's effective config, whose ``plan_key`` then selects compiled
+programs deterministically.  :func:`autotune` is the offline entry point
+(``benchmarks/core_bench.py --autotune``, the CI smoke).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# Repo-root artifacts/ — next to the committed BENCH snapshots.
+DEFAULT_CACHE_PATH = (Path(__file__).resolve().parents[3]
+                      / "artifacts" / "autotune_cache.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedParams:
+    """One tuned knob assignment.  ``source`` records provenance:
+    ``"default"`` (no cache entry — the config's own fields stand),
+    ``"cache"`` (disk hit), ``"model"`` (roofline rank, measurement
+    failed or was skipped), ``"measured"`` (trial winner)."""
+
+    strip_rows: int = 8
+    phase_c_block: int = 1024
+    tournament_width: int = 2
+    source: str = "default"
+
+
+DEFAULTS = TunedParams()
+
+
+def cache_key(shape, dtype, backend: str | None = None) -> str:
+    """``"HxW|dtype|backend"`` — the disk-cache key for one shape
+    family (``backend=None`` resolves to the current JAX backend)."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    h, w = (int(shape[0]), int(shape[1]))
+    return f"{h}x{w}|{dtype}|{backend}"
+
+
+def load_cache(path=None) -> dict:
+    p = Path(path) if path is not None else DEFAULT_CACHE_PATH
+    try:
+        with open(p) as f:
+            cache = json.load(f)
+        return cache if isinstance(cache, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def save_cache(cache: dict, path=None) -> Path:
+    p = Path(path) if path is not None else DEFAULT_CACHE_PATH
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_name(p.name + ".tmp")
+    tmp.write_text(json.dumps(cache, indent=2, sort_keys=True) + "\n")
+    tmp.replace(p)
+    return p
+
+
+def lookup(shape, dtype, *, path=None, backend: str | None = None
+           ) -> TunedParams:
+    """Tuned params for ``(shape, dtype, backend)`` — pure cache lookup.
+
+    This is the engine-facing call: it never compiles, measures, or
+    writes; a missing/corrupt entry returns :data:`DEFAULTS` so the
+    caller's own config fields apply (graceful fallback).
+    """
+    entry = load_cache(path).get(cache_key(shape, str(dtype), backend))
+    if not isinstance(entry, dict):
+        return DEFAULTS
+    try:
+        return TunedParams(int(entry["strip_rows"]),
+                           int(entry["phase_c_block"]),
+                           int(entry["tournament_width"]), "cache")
+    except (KeyError, TypeError, ValueError):
+        return DEFAULTS
+
+
+def candidate_space(shape) -> list[TunedParams]:
+    """The search grid: strip heights bounded by the image, phase-C edge
+    blocks spanning ~VMEM-step sizes, tournament widths 2/4.  Every
+    candidate computes bit-identical diagrams (the knobs only re-block
+    compiled programs), so the search needs no correctness filter."""
+    h = int(shape[0])
+    rows = [r for r in (4, 8, 16, 32) if r <= h] or [h]
+    return [TunedParams(r, b, t, "candidate")
+            for r in rows
+            for b in (256, 1024, 4096)
+            for t in (2, 4)]
+
+
+def _build(shape, dtype, params: TunedParams):
+    """jit-wrapped whole-image PH program pinned to ``params`` (fused
+    stage graph, packed keys where the dtype allows), plus a worst-case
+    input: the stride-2 peak grid from the engine's warmup — the maximal
+    feature/candidate load this bucket can produce, so scores and trials
+    upper-bound real images."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.packed_keys import resolve_merge_keys
+    from repro.core.pixhomology import pixhomology
+
+    h, w = (int(shape[0]), int(shape[1]))
+    n = h * w
+    mk = resolve_merge_keys("packed", jnp.dtype(dtype))
+    kw = dict(max_features=min(8192, n), max_candidates=min(32768, n),
+              merge_impl="boruvka", merge_keys=mk,
+              phase_a_impl="fused", strip_rows=params.strip_rows,
+              phase_c_impl="fused", phase_c_block=params.phase_c_block,
+              tournament_width=params.tournament_width)
+    fn = jax.jit(lambda im: pixhomology(im, None, **kw))
+    img = np.zeros((h, w), np.dtype(dtype))
+    peaks = img[::2, ::2]
+    peaks[...] = 1 + np.arange(peaks.size).reshape(peaks.shape)
+    return fn, jnp.asarray(img), mk
+
+
+def model_score(shape, dtype, params: TunedParams) -> float:
+    """Roofline seconds of the compiled program under ``params`` — the
+    dominant term of :func:`repro.roofline.analysis.roofline_terms` on
+    the optimized HLO.  Used for *relative* candidate ranking only (the
+    constants are TPU-v5e; ordering, not magnitude, is what matters)."""
+    from repro.core.packed_keys import key_scope
+    from repro.roofline.analysis import analyze_hlo, roofline_terms
+
+    fn, x, mk = _build(shape, dtype, params)
+    with key_scope(mk):
+        text = fn.lower(x).compile().as_text()
+    s = analyze_hlo(text)
+    terms = roofline_terms(s.flops, s.bytes, s.coll_bytes)
+    return max(terms["compute_s"], terms["memory_s"],
+               terms["collective_s"])
+
+
+def measure(shape, dtype, params: TunedParams, *, trials: int = 3) -> float:
+    """Best-of-``trials`` steady-state seconds of the program under
+    ``params`` (first call compiles and is excluded)."""
+    import jax
+
+    from repro.core.packed_keys import key_scope
+    fn, x, mk = _build(shape, dtype, params)
+    with key_scope(mk):
+        jax.block_until_ready(fn(x))        # compile + warm
+        best = float("inf")
+        for _ in range(max(1, trials)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(shape, dtype, *, path=None, backend: str | None = None,
+             measure_top: int = 3, trials: int = 3,
+             space: list[TunedParams] | None = None) -> TunedParams:
+    """Search, persist, and return tuned params for one shape family.
+
+    A pre-existing cache entry short-circuits to :func:`lookup` (re-tune
+    by deleting the entry/file).  ``measure_top=0`` or ``trials=0`` is a
+    zero measurement budget: the roofline model alone ranks (or, if every
+    compile fails, :data:`DEFAULTS` comes back and nothing is persisted —
+    the graceful-fallback contract ``tests/test_autotune.py`` pins).
+    """
+    shape = (int(shape[0]), int(shape[1]))
+    dtype = str(dtype)
+    key = cache_key(shape, dtype, backend)
+    cache = load_cache(path)
+    if key in cache:
+        return lookup(shape, dtype, path=path, backend=backend)
+
+    cands = list(space) if space is not None else candidate_space(shape)
+    scored = []
+    for p in cands:
+        try:
+            scored.append((model_score(shape, dtype, p), p))
+        except Exception:   # candidate failed to compile: skip it
+            continue
+    if not scored:
+        return DEFAULTS
+    scored.sort(key=lambda sp: sp[0])
+
+    timed = []
+    for _, p in scored[:max(0, measure_top)]:
+        try:
+            timed.append((measure(shape, dtype, p, trials=trials), p))
+        except Exception:
+            continue
+    if timed and trials > 0:
+        timed.sort(key=lambda sp: sp[0])
+        best = dataclasses.replace(timed[0][1], source="measured")
+    else:
+        best = dataclasses.replace(scored[0][1], source="model")
+
+    cache[key] = {"strip_rows": best.strip_rows,
+                  "phase_c_block": best.phase_c_block,
+                  "tournament_width": best.tournament_width,
+                  "source": best.source}
+    save_cache(cache, path)
+    return best

@@ -1,0 +1,281 @@
+"""Autotuner cache/engine contracts and the trajectory perf gate.
+
+Pins the three contracts the engine relies on:
+
+* the disk cache round-trips and ``lookup`` is a *pure* read — it never
+  compiles or measures (a cache miss is DEFAULTS, not a search);
+* tuned params fold into the engine's effective config deterministically
+  — same cache, same ``plan_key``; different tuned entry, different
+  ``plan_key`` — and never change the computed diagram;
+* ``benchmarks/perf_gate.py`` trajectory rules fail on an injected
+  regression against a committed baseline and pass on the baseline
+  itself (the gate has teeth before CI depends on it).
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ph import PHConfig, PHEngine
+from repro.roofline import autotune as at
+
+_REPO = Path(__file__).resolve().parents[1]
+
+
+def _load_perf_gate():
+    # benchmarks/ is not a package (no __init__.py): load by file path.
+    spec = importlib.util.spec_from_file_location(
+        "perf_gate", _REPO / "benchmarks" / "perf_gate.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip + graceful fallback
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    path = tmp_path / "cache.json"
+    key = at.cache_key((64, 64), "float32", "cpu")
+    at.save_cache({key: {"strip_rows": 16, "phase_c_block": 256,
+                         "tournament_width": 4, "source": "measured"}},
+                  path)
+    got = at.lookup((64, 64), "float32", path=path, backend="cpu")
+    assert got == at.TunedParams(16, 256, 4, "cache")
+    # Unknown shape in the same file: DEFAULTS, source "default".
+    assert at.lookup((128, 128), "float32", path=path,
+                     backend="cpu") == at.DEFAULTS
+
+
+def test_lookup_never_measures(tmp_path, monkeypatch):
+    # The engine-facing call must stay a pure cache read even on a miss.
+    def boom(*a, **k):
+        raise AssertionError("lookup must not compile or measure")
+    monkeypatch.setattr(at, "model_score", boom)
+    monkeypatch.setattr(at, "measure", boom)
+    monkeypatch.setattr(at, "_build", boom)
+    assert at.lookup((32, 32), "float32",
+                     path=tmp_path / "missing.json") == at.DEFAULTS
+
+
+@pytest.mark.parametrize("content", [
+    "not json {", json.dumps(["a", "list"]),
+    json.dumps({"32x32|float32|cpu": "not-a-dict"}),
+    json.dumps({"32x32|float32|cpu": {"strip_rows": "NaN?"}}),
+])
+def test_lookup_corrupt_cache_falls_back(tmp_path, content):
+    path = tmp_path / "cache.json"
+    path.write_text(content)
+    assert at.lookup((32, 32), "float32", path=path,
+                     backend="cpu") == at.DEFAULTS
+
+
+def test_autotune_all_candidates_fail_returns_defaults(tmp_path,
+                                                       monkeypatch):
+    path = tmp_path / "cache.json"
+    monkeypatch.setattr(at, "model_score",
+                        lambda *a, **k: (_ for _ in ()).throw(RuntimeError))
+    got = at.autotune((16, 16), "float32", path=path, backend="cpu")
+    assert got == at.DEFAULTS
+    assert not path.exists()    # nothing persisted on total failure
+
+
+def test_autotune_persists_and_short_circuits(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    space = [at.TunedParams(4, 256, 2, "candidate"),
+             at.TunedParams(8, 1024, 2, "candidate")]
+    scores = {4: 1.0, 8: 2.0}
+    monkeypatch.setattr(at, "model_score",
+                        lambda s, d, p: scores[p.strip_rows])
+    monkeypatch.setattr(at, "measure", lambda s, d, p, trials: 0.01)
+    got = at.autotune((16, 16), "float32", path=path, backend="cpu",
+                      measure_top=1, trials=1, space=space)
+    assert (got.strip_rows, got.phase_c_block, got.source) == (4, 256,
+                                                               "measured")
+    entry = json.loads(path.read_text())["16x16|float32|cpu"]
+    assert entry["strip_rows"] == 4 and entry["source"] == "measured"
+    # Existing entry short-circuits: a re-tune may not compile anything.
+    def boom(*a, **k):
+        raise AssertionError("existing entry must short-circuit")
+    monkeypatch.setattr(at, "model_score", boom)
+    monkeypatch.setattr(at, "measure", boom)
+    again = at.autotune((16, 16), "float32", path=path, backend="cpu")
+    assert (again.strip_rows, again.source) == (4, "cache")
+
+
+def test_autotune_model_only_budget(tmp_path, monkeypatch):
+    # measure_top=0: zero measurement budget, the roofline rank decides.
+    path = tmp_path / "cache.json"
+    space = [at.TunedParams(4, 256, 2, "candidate"),
+             at.TunedParams(8, 1024, 2, "candidate")]
+    monkeypatch.setattr(at, "model_score",
+                        lambda s, d, p: 1.0 if p.strip_rows == 8 else 2.0)
+    monkeypatch.setattr(
+        at, "measure",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError("no trials")))
+    got = at.autotune((16, 16), "float32", path=path, backend="cpu",
+                      measure_top=0, space=space)
+    assert (got.strip_rows, got.source) == (8, "model")
+
+
+def test_autotune_real_search_smoke(tmp_path):
+    # End-to-end on a tiny image: real compile, real trial, real cache.
+    path = tmp_path / "cache.json"
+    got = at.autotune((8, 8), "float32", path=path,
+                      measure_top=1, trials=1,
+                      space=[at.TunedParams(4, 256, 2, "candidate")])
+    assert got.source == "measured"
+    assert at.lookup((8, 8), "float32", path=path).source == "cache"
+
+
+# ---------------------------------------------------------------------------
+# engine folding: deterministic plan keys, unchanged diagrams
+# ---------------------------------------------------------------------------
+
+def _engine(tmp_cache, **kw):
+    return PHEngine(PHConfig(max_features=256, max_candidates=256,
+                             merge_impl="boruvka", autotune=True,
+                             autotune_cache=str(tmp_cache), **kw))
+
+
+def test_effective_config_folds_cache_deterministically(tmp_path):
+    path = tmp_path / "cache.json"
+    key = at.cache_key((12, 11), "float32", None)   # live backend
+    at.save_cache({key: {"strip_rows": 4, "phase_c_block": 256,
+                         "tournament_width": 4, "source": "measured"}},
+                  path)
+    eng = _engine(path)
+    eff = eng._effective_config((12, 11), jnp.dtype(jnp.float32))
+    assert (eff.strip_rows, eff.phase_c_block,
+            eff.tournament_width) == (4, 256, 4)
+    # Deterministic: a second resolve (memoized) and a fresh engine over
+    # the same cache produce the same plan key.
+    eff2 = eng._effective_config((12, 11), jnp.dtype(jnp.float32))
+    assert eff2.plan_key() == eff.plan_key()
+    assert _engine(path)._effective_config(
+        (12, 11), jnp.dtype(jnp.float32)).plan_key() == eff.plan_key()
+    # The tuned knobs are plan-key-bearing: defaults select a different
+    # compiled program.
+    base = PHConfig(max_features=256, max_candidates=256,
+                    merge_impl="boruvka")
+    assert eff.plan_key() != base.plan_key()
+    # Unknown shape: the config's own fields stand, plan key unchanged
+    # relative to autotune-off (autotune itself is not in the plan key).
+    miss = eng._effective_config((7, 7), jnp.dtype(jnp.float32))
+    assert miss.strip_rows == base.strip_rows
+    assert miss.plan_key() == base.plan_key()
+
+
+def test_autotuned_engine_diagram_unchanged(tmp_path):
+    # Tuned knobs only re-block programs: the diagram is bit-identical
+    # to the default engine's.
+    rng = np.random.default_rng(0)
+    img = (rng.standard_normal((12, 11)) * 50).astype(np.float32)
+    path = tmp_path / "cache.json"
+    at.save_cache({at.cache_key((12, 11), "float32", None): {
+        "strip_rows": 4, "phase_c_block": 256, "tournament_width": 4,
+        "source": "measured"}}, path)
+    got = _engine(path).run(img).diagram
+    want = PHEngine(PHConfig(max_features=256, max_candidates=256,
+                             merge_impl="boruvka")).run(img).diagram
+    for f in ("birth", "death", "p_birth", "p_death", "count"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)), f)
+
+
+def test_missing_cache_file_engine_falls_back(tmp_path):
+    eng = _engine(tmp_path / "never_written.json")
+    eff = eng._effective_config((12, 11), jnp.dtype(jnp.float32))
+    assert eff.strip_rows == eng.config.strip_rows
+    assert eff.phase_c_block == eng.config.phase_c_block
+
+
+# ---------------------------------------------------------------------------
+# trajectory perf gate: must fail on an injected regression
+# ---------------------------------------------------------------------------
+
+_BASE_ROW = {
+    "name": "core_256", "phase_c_packed_s": 0.01, "phase_c_rank_s": 0.02,
+    "phase_c_packed_speedup": 2.0, "hlo_sorts_packed": 3,
+    "full_image_sorts_packed": 0, "full_image_sorts_rank": 1,
+    "full_image_sorts_fused": 0,
+    "phase_c_fused_s": 0.005, "phase_c_xla_s": 0.01,
+    "phase_c_fused_speedup": 2.0, "boruvka_rounds_xla": 6,
+    "boruvka_rounds_fused": 4,
+}
+
+
+def _gate_core(tmp_path, current, baseline):
+    pg = _load_perf_gate()
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps(current))
+    base.write_text(json.dumps(baseline))
+    return pg.run_gate("core", str(cur), str(base))
+
+
+def test_gate_passes_on_baseline_itself(tmp_path):
+    assert _gate_core(tmp_path, [_BASE_ROW], [_BASE_ROW]) == []
+
+
+def test_gate_fails_on_speedup_regression(tmp_path):
+    bad = dict(_BASE_ROW, phase_c_fused_speedup=0.8)   # < 0.5 x 2.0
+    fails = _gate_core(tmp_path, [bad], [_BASE_ROW])
+    assert any("phase_c_fused_speedup" in f for f in fails)
+
+
+def test_gate_fails_on_round_count_regression(tmp_path):
+    bad = dict(_BASE_ROW, boruvka_rounds_fused=9)      # > baseline 4
+    fails = _gate_core(tmp_path, [bad], [_BASE_ROW])
+    assert any("boruvka_rounds_fused" in f for f in fails)
+
+
+def test_gate_fails_on_full_sort_reappearing(tmp_path):
+    bad = dict(_BASE_ROW, full_image_sorts_fused=2)
+    fails = _gate_core(tmp_path, [bad], [_BASE_ROW])
+    # Both the structural rule and the trajectory rule should fire.
+    assert sum("full_image_sorts_fused" in f for f in fails) >= 2
+
+
+def test_gate_skips_unmatched_rows_and_fields(tmp_path):
+    # Extra current row + a baseline row missing a field: both skipped;
+    # zero name overlap is itself a failure (a renamed bench must not
+    # silently disable the gate).
+    extra = dict(_BASE_ROW, name="core_512")
+    thin = {k: v for k, v in _BASE_ROW.items()
+            if k != "phase_c_fused_speedup"}
+    cur_ok = dict(_BASE_ROW, phase_c_fused_speedup=0.1)
+    assert _gate_core(tmp_path, [cur_ok, extra], [thin]) == []
+    fails = _gate_core(tmp_path, [dict(_BASE_ROW, name="renamed")],
+                       [_BASE_ROW])
+    assert any("no rows matched" in f for f in fails)
+
+
+def test_gate_serve_trajectory(tmp_path):
+    pg = _load_perf_gate()
+    doc = {"steady": {"steady_state_traces": 0, "failed": 0, "rejected": 0,
+                      "completed": 4, "submitted": 4,
+                      "buckets": {"256": {"occupancy": 0.5,
+                                          "queue_wait_s": {"p50": 1, "p95": 2,
+                                                           "p99": 3},
+                                          "e2e_s": {"p50": 1, "p95": 2,
+                                                    "p99": 3}}}},
+           "saturation": None}
+    doc["saturation"] = {"rejected": 2, "retry_after_s_mean": 0.1,
+                         "failed": 0}
+    cur = tmp_path / "serve.json"
+    base = tmp_path / "serve_base.json"
+    cur.write_text(json.dumps(doc))
+    base.write_text(json.dumps(doc))
+    assert pg.run_gate("serve", str(cur), str(base)) == []
+    bad = json.loads(json.dumps(doc))
+    bad["steady"]["steady_state_traces"] = 3
+    bad["steady"]["completed"] = 4      # keep other rules focused
+    cur.write_text(json.dumps(bad))
+    fails = pg.run_gate("serve", str(cur), str(base))
+    assert any("steady_state_traces" in f and "baseline" in f
+               for f in fails)
