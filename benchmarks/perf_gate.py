@@ -20,6 +20,14 @@ Gated invariants:
   bucket reports ordered p50<=p95<=p99 latency summaries and nonzero
   occupancy, nothing failed or was rejected in steady state, and the
   saturation burst actually engaged backpressure (rejections > 0).
+  When the artifact carries a ``cache`` section (delta-enabled serve
+  bench), the steady-state repeat pass must have produced exact-hash
+  tier hits (``steady_state_hits > 0``).
+* ``BENCH_pipeline.json`` — every delta frame-sequence row is
+  **bit-identical** to its cold ``run_tiled`` counterpart and the
+  identical-frame resubmission full-hits; rows at >= 256 px must show a
+  real speedup, and a full-scale row (>= 1024 px, <= 10% dirty tiles)
+  must hold the paper-motivated >= 5x incremental speedup.
 
 **Trajectory gating**: with ``--baseline-core``/``--baseline-serve`` the
 gate additionally compares the current artifact against a *committed
@@ -89,6 +97,13 @@ SERVE_TRAJECTORY = {
     "steady.steady_state_traces": ("exact", None),
     "steady.failed": ("exact", None),
     "steady.rejected": ("exact", None),
+}
+
+PIPELINE_TRAJECTORY = {
+    "delta_bit_identical": ("exact", None),
+    "delta_full_hit_ok": ("exact", None),
+    "delta_speedup_10pct": ("min_ratio", 0.5),
+    "speedup_vs_serial": ("min_ratio", 0.5),
 }
 
 
@@ -190,6 +205,85 @@ def _serve_latency_summaries(doc):
     return None
 
 
+def _serve_cache_tier(doc):
+    sec = doc.get("cache")
+    if sec is None:
+        return None     # pre-delta artifact / cache section disabled
+    if sec.get("steady_state_hits", 0) <= 0:
+        return "repeat pass produced no exact-hash cache hits"
+    if sec.get("misses", 0) <= 0:
+        return "cache section reports no misses (first pass not counted?)"
+    return None
+
+
+def _pipeline_rows(doc):
+    rows = doc.get("rows", []) if isinstance(doc, dict) else doc
+    return rows, [r for r in rows if isinstance(r, dict)
+                  and str(r.get("name", "")).startswith(
+                      "pipeline/delta_frame_seq")]
+
+
+def _pipeline_delta_identity(doc):
+    _, delta = _pipeline_rows(doc)
+    if not delta:
+        return "no delta frame-sequence rows in the artifact"
+    for r in delta:
+        if r.get("delta_bit_identical") is not True:
+            return f"{r['name']}: delta diagrams diverged from cold runs"
+        if r.get("delta_full_hit_ok") is not True:
+            return f"{r['name']}: identical frame did not full-hit"
+        if r.get("cache", {}).get("partial_hits", 0) <= 0:
+            return f"{r['name']}: no partial hits (delta path never ran)"
+    return None
+
+
+def _pipeline_delta_speedup(doc):
+    """Incremental recompute must actually pay: a real speedup at bench
+    scale, and the paper-motivated >= 5x at full scale (>= 1k^2 frames,
+    <= 10% dirty tiles).  Tiny smoke frames (< 256 px) are exempt — the
+    host-side hash+dispatch floor dominates sub-millisecond tiles."""
+    _, delta = _pipeline_rows(doc)
+    errs = []
+    for r in delta:
+        size, ratio = r.get("size", 0), r.get("delta_speedup_10pct", 0)
+        if size >= 1024:
+            if ratio < 5.0:
+                errs.append(f"{r['name']}: {ratio} < 5x at full scale")
+            if r.get("mean_dirty_frac", 1.0) > 0.101:
+                errs.append(f"{r['name']}: dirty frac "
+                            f"{r.get('mean_dirty_frac')} > 10%")
+        elif size >= 256 and ratio < 1.0:
+            errs.append(f"{r['name']}: {ratio} < 1x (delta slower than "
+                        f"cold)")
+    return "; ".join(errs) or None
+
+
+def _pipeline_trajectory(baseline):
+    base_rows = {r.get("name"): r
+                 for r in _pipeline_rows(baseline)[0]
+                 if isinstance(r, dict)}
+
+    def check(doc):
+        errs, matched = [], 0
+        for row in _pipeline_rows(doc)[0]:
+            b = base_rows.get(row.get("name"))
+            if b is None:
+                continue
+            matched += 1
+            for field, (mode, arg) in PIPELINE_TRAJECTORY.items():
+                if field not in row or field not in b:
+                    continue
+                err = _check_value(f"{row['name']}.{field}", mode, arg,
+                                   row[field], b[field])
+                if err:
+                    errs.append(err)
+        if not matched:
+            errs.append("no rows matched the baseline by name")
+        return "; ".join(errs) or None
+
+    return check
+
+
 def _serve_backpressure(doc):
     sat = doc.get("saturation")
     if sat is None:
@@ -210,7 +304,12 @@ RULES = {
     "serve": [("zero steady-state traces", _serve_zero_traces),
               ("steady stream clean", _serve_clean_steady),
               ("per-bucket SLO summaries", _serve_latency_summaries),
-              ("saturation engages backpressure", _serve_backpressure)],
+              ("saturation engages backpressure", _serve_backpressure),
+              ("cache tier hits in steady state", _serve_cache_tier)],
+    "pipeline": [("delta rows bit-identical + full-hit",
+                  _pipeline_delta_identity),
+                 ("delta recompute pays its way",
+                  _pipeline_delta_speedup)],
 }
 
 
@@ -226,7 +325,8 @@ def run_gate(kind: str, path: str,
             baseline = json.load(open(baseline_path))
         except (OSError, json.JSONDecodeError) as e:
             return [f"[{kind}] baseline {baseline_path}: unreadable ({e})"]
-        make = _core_trajectory if kind == "core" else _serve_trajectory
+        make = {"core": _core_trajectory, "serve": _serve_trajectory,
+                "pipeline": _pipeline_trajectory}[kind]
         rules.append((f"trajectory vs {baseline_path}", make(baseline)))
     failures = []
     for name, check in rules:
@@ -242,17 +342,22 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--core", help="BENCH_core.json path")
     ap.add_argument("--serve", help="BENCH_serve.json path")
+    ap.add_argument("--pipeline", help="BENCH_pipeline.json path")
     ap.add_argument("--baseline-core",
                     help="committed core baseline to gate the trajectory "
                          "against (benchmarks/baselines/BENCH_core.json)")
     ap.add_argument("--baseline-serve",
                     help="committed serve baseline to gate the trajectory "
                          "against (benchmarks/baselines/BENCH_serve.json)")
+    ap.add_argument("--baseline-pipeline",
+                    help="committed pipeline baseline to gate the "
+                         "trajectory against "
+                         "(benchmarks/baselines/BENCH_pipeline.json)")
     args = ap.parse_args()
-    if not (args.core or args.serve):
-        ap.error("nothing to gate: pass --core and/or --serve")
+    if not (args.core or args.serve or args.pipeline):
+        ap.error("nothing to gate: pass --core, --serve and/or --pipeline")
     failures = []
-    for kind in ("core", "serve"):
+    for kind in ("core", "serve", "pipeline"):
         path = getattr(args, kind)
         if path:
             failures += run_gate(kind, path,

@@ -10,6 +10,17 @@ rounds, no overlap — the pre-streaming pipeline's behavior):
 * tiled_mix — heterogeneous plus ``--oversize`` images above
   ``max_tile_pixels``, streamed through the halo-tiled tile-provider path.
 
+Plus the **delta frame-sequence** scenario (``--frames > 0``): a
+:class:`repro.data.astro.FrameSequence` survey stream — one base star
+field, each frame re-imaging it with transients confined to
+``--dirty-frac`` of the tiles — run cold (``PHEngine.run_tiled`` per
+frame) and incrementally (``PHEngine.run_delta`` against the
+content-hashed frame store).  The row records the warm-path speedup
+(``delta_speedup_10pct``), whether every delta diagram was bit-identical
+to its cold counterpart (``delta_bit_identical``), the full-hit
+short-circuit, and the frame-store counters — all gated by
+``benchmarks.perf_gate --pipeline``.
+
 Each scenario runs twice; the cold pass pays compiles, the warm pass is
 the steady-state number the speedup fields compare (CI trend artifact).
 
@@ -54,8 +65,95 @@ def _pipeline(engine, images) -> float:
     return time.perf_counter() - t0
 
 
+def _frame_stamp(size: int, grid: int) -> int:
+    """Largest odd transient stamp that keeps its halo margin inside one
+    tile (FrameSequence's placement invariant)."""
+    tile = size // grid
+    return min(15, max(3, (tile - 5) // 2 * 2 - 1))
+
+
+def delta_row(frames: int, size: int, grid: int, dirty_frac: float,
+              reps: int) -> dict:
+    """The delta frame-sequence scenario: cold ``run_tiled`` per frame vs
+    ``run_delta`` against the frame store, bit-identity asserted on every
+    timed frame."""
+    import jax
+    import numpy as np
+
+    from repro.data import astro
+    from repro.data.astro import FrameSequence
+    from repro.ph import DeltaSpec, PHConfig, PHEngine, TileSpec
+
+    g = (grid, grid)
+    stamp = _frame_stamp(size, grid)
+    # Survey-style detection threshold + right-sized per-tile capacities:
+    # the compiled programs are shape-static, so oversized capacity pads
+    # dominate the seam merge long before live features do.  auto_regrow
+    # still covers an unexpectedly busy frame.
+    engine = PHEngine(PHConfig(
+        max_features=2048, max_candidates=32768,
+        delta=DeltaSpec(cache_entries=8),
+        tile=TileSpec(grid=g, max_tile_pixels=(size // grid) ** 2,
+                      max_features_per_tile=256,
+                      max_candidates_per_tile=512)))
+
+    def block(res):
+        jax.block_until_ready(res.diagram)
+        return res
+
+    # Warm every compiled program off the clock: the tiled plan, the
+    # miss-path scatter (bucket == n_tiles), and the partial-hit bucket.
+    fs0 = FrameSequence(999, size, grid=g, dirty_frac=dirty_frac,
+                        stamp=stamp)
+    tv0, _ = astro.filter_threshold(fs0.base(), "filter_heavy")
+    block(engine.run_tiled(fs0.frame(0), tv0))
+    block(engine.run_delta(fs0.frame(0), tv0))
+    block(engine.run_delta(fs0.frame(1), tv0))
+
+    cold_s, delta_s, dirty, identical, full_ok = [], [], [], True, True
+    for rep in range(reps):
+        fs = FrameSequence(rep, size, grid=g, dirty_frac=dirty_frac,
+                           stamp=stamp)
+        # One fixed survey detection threshold per sequence (a per-frame
+        # threshold would re-key the frame store by design).
+        tv, _ = astro.filter_threshold(fs.base(), "filter_heavy")
+        seq = [fs.frame(i) for i in range(frames + 1)]
+        t0 = time.perf_counter()
+        cold = [block(engine.run_tiled(f, tv)) for f in seq[1:]]
+        cold_s.append(time.perf_counter() - t0)
+        block(engine.run_delta(seq[0], tv))     # prime the store
+        t0 = time.perf_counter()
+        warm = [block(engine.run_delta(f, tv)) for f in seq[1:]]
+        delta_s.append(time.perf_counter() - t0)
+        for c, d in zip(cold, warm):
+            for f in c.diagram._fields:
+                if not np.array_equal(np.asarray(getattr(c.diagram, f)),
+                                      np.asarray(getattr(d.diagram, f))):
+                    identical = False
+            dirty.append(d.delta.dirty_frac)
+        # an identical resubmission short-circuits without the device
+        full_ok &= engine.run_delta(seq[-1], tv).delta.hit == "full"
+
+    cold_w, delta_w = min(cold_s), min(delta_s)
+    return {
+        "name": f"pipeline/delta_frame_seq_{size}",
+        "value": round(delta_w, 4),
+        "frames": frames, "size": size, "grid": [grid, grid],
+        "dirty_frac": dirty_frac,
+        "mean_dirty_frac": round(sum(dirty) / max(len(dirty), 1), 4),
+        "cold_tiled_s": round(cold_w, 4),
+        "delta_s": round(delta_w, 4),
+        "delta_speedup_10pct": round(cold_w / max(delta_w, 1e-9), 3),
+        "delta_bit_identical": bool(identical),
+        "delta_full_hit_ok": bool(full_ok),
+        "cache": engine.delta_cache_stats(),
+    }
+
+
 def run(images: int, size: int, sizes: list[int], oversize: int,
-        out_path: str | None):
+        out_path: str | None, *, frames: int = 0, frame_size: int = 256,
+        frame_grid: int = 4, dirty_frac: float = 0.05,
+        delta_reps: int = 2, only_delta: bool = False):
     from benchmarks.paper_tables import ARTIFACTS, print_rows
     from repro.ph import PHConfig, TileSpec
 
@@ -67,7 +165,9 @@ def run(images: int, size: int, sizes: list[int], oversize: int,
 
     from repro.ph import PHEngine
     rows = []
-    for name, dataset in _scenarios(images, size, sizes, oversize).items():
+    scenarios = {} if only_delta else _scenarios(images, size, sizes,
+                                                 oversize)
+    for name, dataset in scenarios.items():
         # One engine per cell, reused across the cold and warm pass: the
         # cold number pays the compiles, the warm number is steady state.
         engines = {
@@ -101,11 +201,16 @@ def run(images: int, size: int, sizes: list[int], oversize: int,
             "cold_prefetch1_s": cell["prefetch1"]["cold_s"],
         })
 
+    if frames > 0:
+        rows.append(delta_row(frames, frame_size, frame_grid, dirty_frac,
+                              delta_reps))
+
     out = Path(out_path) if out_path else ARTIFACTS / "BENCH_pipeline.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps({
         "images": images, "size": size, "sizes": sizes,
-        "oversize": oversize, "rows": rows}, indent=1))
+        "oversize": oversize, "frames": frames, "frame_size": frame_size,
+        "dirty_frac": dirty_frac, "rows": rows}, indent=1))
     print_rows(rows)
     return rows
 
@@ -122,10 +227,29 @@ def main() -> None:
     ap.add_argument("--oversize", type=int, default=192,
                     help="size of the oversized image in tiled_mix (must "
                          "exceed every --sizes entry)")
+    ap.add_argument("--frames", type=int, default=6,
+                    help="frames in the delta survey-stream scenario "
+                         "(0 disables it)")
+    ap.add_argument("--frame-size", type=int, default=256,
+                    help="frame side length for the delta scenario")
+    ap.add_argument("--frame-grid", type=int, default=4,
+                    help="tile grid (NxN) for the delta scenario")
+    ap.add_argument("--dirty-frac", type=float, default=0.05,
+                    help="fraction of tiles each frame's transients "
+                         "touch (>= 1 tile)")
+    ap.add_argument("--delta-reps", type=int, default=2,
+                    help="timed repetitions of the delta scenario "
+                         "(best-of)")
+    ap.add_argument("--only-delta", action="store_true",
+                    help="skip the streaming scenarios, run only the "
+                         "delta frame-sequence row")
     ap.add_argument("--out", default=None,
                     help="output path (default artifacts/BENCH_pipeline.json)")
     args = ap.parse_args()
-    run(args.images, args.size, args.sizes, args.oversize, args.out)
+    run(args.images, args.size, args.sizes, args.oversize, args.out,
+        frames=args.frames, frame_size=args.frame_size,
+        frame_grid=args.frame_grid, dirty_frac=args.dirty_frac,
+        delta_reps=args.delta_reps, only_delta=args.only_delta)
 
 
 if __name__ == "__main__":

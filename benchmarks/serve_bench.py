@@ -19,6 +19,15 @@ Two measured sections over :mod:`repro.serving`:
     counted, every rejection carrying a ``retry_after_s`` hint) and the
     accepted requests still all resolve.
 
+``cache``
+    A delta-enabled server (exact-hash cache tier + per-request
+    ``run_delta`` dispatch) driven with a survey-style request mix: a
+    miss pass of distinct frames, a steady-state **repeat** pass of
+    exact duplicates (must short-circuit on the submit thread —
+    ``steady_state_hits``), and a near-duplicate pass that rides the
+    delta frame store (partial hits).  Gated by ``perf_gate``:
+    ``steady_state_hits > 0``.
+
   PYTHONPATH=src python -m benchmarks.serve_bench --buckets 64 128 \
       --clients 4 --requests 32 --out BENCH_serve.json
 
@@ -134,6 +143,54 @@ def saturation_section(config, args) -> dict:
             **stats}
 
 
+def cache_section(config, args) -> dict:
+    """Survey mix against the delta-enabled cache tier: distinct frames
+    miss, exact repeats hit on the submit thread, near-duplicates ride
+    the frame store."""
+    from repro.ph import DeltaSpec, TileSpec
+
+    hb, wb = config.serve.buckets[0]
+    engine = PHEngine(config.replace(
+        delta=DeltaSpec(cache_entries=max(8, args.cache_uniques)),
+        tile=TileSpec(grid=(2, 2))))
+    server = PHServer(engine)
+    rng = np.random.default_rng(args.seed + 7)
+    frames = [rng.normal(size=(hb, wb)).astype(np.float32)
+              for _ in range(args.cache_uniques)]
+
+    for f in [server.submit(im) for im in frames]:        # miss pass
+        f.result(timeout=600)
+    t0 = time.perf_counter()
+    repeats = frames * args.cache_repeats                 # repeat pass
+    for f in [server.submit(im) for im in repeats]:
+        f.result(timeout=600)
+    repeat_s = time.perf_counter() - t0
+    near = []                                             # near-dup pass
+    for im in frames:
+        im2 = im.copy()
+        im2[hb // 4, wb // 4] += 3.0    # interior of tile (0, 0)
+        near.append(im2)
+    for f in [server.submit(im) for im in near]:
+        f.result(timeout=600)
+    assert server.drain(60), "cache stream failed to drain"
+    stats = server.cache_stats()
+    server.shutdown()
+
+    hits = stats["hits"]
+    assert hits >= len(repeats), \
+        f"exact repeats only hit {hits}/{len(repeats)} times"
+    assert stats["delta_store"]["partial_hits"] >= len(near), \
+        f"near-duplicates did not ride the delta store: {stats}"
+    return {"uniques": args.cache_uniques,
+            "repeats": len(repeats),
+            "near_dups": len(near),
+            "steady_state_hits": hits,
+            "misses": stats["misses"],
+            "repeat_pass_s": round(repeat_s, 4),
+            "hit_rps": round(len(repeats) / max(repeat_s, 1e-9), 1),
+            **{k: v for k, v in stats.items() if k != "hits"}}
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--buckets", type=int, nargs="+", default=[64, 128])
@@ -150,6 +207,12 @@ def main():
                     choices=["vanilla", "filter_std", "filter_database"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-saturation", action="store_true")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="skip the delta cache-tier section")
+    ap.add_argument("--cache-uniques", type=int, default=4,
+                    help="distinct frames in the cache section")
+    ap.add_argument("--cache-repeats", type=int, default=3,
+                    help="exact-duplicate passes over the frames")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -166,6 +229,8 @@ def main():
            "steady": steady_section(config, args)}
     if not args.no_saturation:
         out["saturation"] = saturation_section(config, args)
+    if not args.no_cache:
+        out["cache"] = cache_section(config, args)
     Path(args.out).write_text(json.dumps(out, indent=1))
     brief = {"steady_state_traces": out["steady"]["steady_state_traces"],
              "throughput_rps": out["steady"]["throughput_rps"],
@@ -174,7 +239,9 @@ def main():
              "p95_e2e_s": {k: v["e2e_s"].get("p95") for k, v in
                            out["steady"]["buckets"].items()},
              "saturation_rejected":
-                 out.get("saturation", {}).get("rejected")}
+                 out.get("saturation", {}).get("rejected"),
+             "cache_steady_state_hits":
+                 out.get("cache", {}).get("steady_state_hits")}
     print(json.dumps(brief, indent=1))
     print(f"wrote {args.out}")
 

@@ -1,0 +1,267 @@
+"""Delta recompute on the tiled stage graph: O(changed area) per frame.
+
+The paper's motivating workload is telescopes re-imaging the same sky —
+consecutive frames differ only where transients appear.  PR 2's halo-tiled
+decomposition makes the dependency structure explicit: every per-tile
+artifact (:class:`repro.core.tiling.TileBoundaryState`) is a pure function
+of that tile's **halo-padded bytes**, and only the O(boundary) seam merge
+(:func:`repro.core.tiling.merge_tile_state`) mixes tiles.  So a frame that
+changed in ``D`` of ``T`` tiles needs:
+
+1. a host hash pass over the tile bytes (O(n), but at memory bandwidth —
+   orders of magnitude cheaper than PH compute) classifying tiles
+   clean/dirty against a cached frame's hash grid;
+2. phases A+B for the ``D`` dirty tiles only, batched through the same
+   vmapped :func:`tile_phase_ab` program the cold path uses (dirty counts
+   are padded to power-of-two buckets so recompiles are logarithmic);
+3. a scatter of the fresh rows into the cached state and one seam-merge
+   replay — **bit-identical** to a cold ``run_tiled`` because clean rows
+   store pre-labels, not stale resolved labels: the ring-table fixed
+   point re-resolves every cross-tile chain against the new frame.
+
+Hashing covers the halo-*padded* window of each tile, so a change in a
+neighbor's border row dirties this tile automatically — there is no
+separate halo-dependency bookkeeping to get wrong.
+
+The engine surface is :meth:`repro.ph.PHEngine.run_delta` /
+``run_sequence``; the frame store is
+:class:`repro.cache.DiagramCache`.  This module owns the pure pieces:
+content hashing, the batched phase-AB program, and the scatter+merge
+program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packed_keys
+from repro.core.grid import neg_inf as _neg_inf
+from repro.core.tiling import (
+    StagedTiles,
+    TileBoundaryState,
+    TiledDiagram,
+    _ring_coords,
+    halo_gidx_tile,
+    merge_tile_state,
+    tile_phase_ab,
+    validate_grid,
+)
+
+HASH_ALGOS = ("blake2b", "sha1", "md5")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaStats:
+    """What one ``run_delta`` call actually did."""
+
+    n_tiles: int
+    n_dirty: int               # tiles recomputed (0 on a full hit)
+    hit: str                   # "full" | "partial" | "miss" | "cold"
+
+    @property
+    def dirty_frac(self) -> float:
+        return self.n_dirty / max(self.n_tiles, 1)
+
+
+# ---------------------------------------------------------------------------
+# Content hashing (host side)
+# ---------------------------------------------------------------------------
+
+def hasher(algo: str):
+    """Digest function for ``algo`` (128-bit blake2b by default; xxhash
+    would do — blake2b is in hashlib everywhere and runs at memory
+    bandwidth for tile-sized buffers)."""
+    if algo == "blake2b":
+        return lambda b: hashlib.blake2b(b, digest_size=16).digest()
+    if algo in HASH_ALGOS:
+        return lambda b: hashlib.new(algo, b).digest()
+    raise ValueError(f"hash_algo must be one of {HASH_ALGOS}, got {algo!r}")
+
+
+def frame_digests(source, grid: tuple[int, int], *, algo: str = "blake2b",
+                  with_bytes: bool = False
+                  ) -> tuple[tuple[bytes, ...], tuple[bytes, ...] | None]:
+    """Per-tile content digests of one frame's **halo-padded** tile bytes.
+
+    ``source`` is a host 2D array or a :class:`StagedTiles` (one readback).
+    Both hash exactly the bytes of ``split_tiles(image, grid, fill)`` rows,
+    so entries created from either input form match each other.  Returns
+    ``(digests, tile_bytes)`` — the raw bytes only when ``with_bytes``
+    (verify mode); digests include the halo, so a neighbor-border change
+    dirties this tile with no extra bookkeeping.
+    """
+    h = hasher(algo)
+    if isinstance(source, StagedTiles):
+        stack = np.asarray(source.pvals)
+        rows = [np.ascontiguousarray(stack[t]).tobytes()
+                for t in range(stack.shape[0])]
+    else:
+        arr = np.asarray(source)
+        if arr.ndim != 2:
+            raise ValueError(f"expected a 2D frame, got shape {arr.shape}")
+        gr, gc = grid
+        validate_grid(arr.shape, (gr, gc))
+        tr, tc = arr.shape[0] // gr, arr.shape[1] // gc
+        fill = np.asarray(_neg_inf(arr.dtype))
+        padded = np.pad(arr, 1, constant_values=fill)
+        rows = [np.ascontiguousarray(
+            padded[(t // gc) * tr:(t // gc) * tr + tr + 2,
+                   (t % gc) * tc:(t % gc) * tc + tc + 2]).tobytes()
+            for t in range(gr * gc)]
+    digests = tuple(h(b) for b in rows)
+    return digests, (tuple(rows) if with_bytes else None)
+
+
+def dirty_bucket(n_dirty: int, n_tiles: int) -> int:
+    """Dirty-stack batch size: next power of two, clamped to the tile
+    count — so the number of distinct compiled phase-AB batch shapes is
+    logarithmic in ``T`` regardless of how dirty counts vary."""
+    if n_dirty < 1:
+        raise ValueError("dirty_bucket needs n_dirty >= 1")
+    return min(n_tiles, 1 << (n_dirty - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# State plumbing
+# ---------------------------------------------------------------------------
+
+def empty_state(shape: tuple[int, int], grid: tuple[int, int], dtype,
+                tile_max_features: int, tile_max_candidates: int
+                ) -> TileBoundaryState:
+    """An all-zeros :class:`TileBoundaryState` with the exact array shapes
+    :func:`tile_phase_ab` produces under these capacities — the scatter
+    base for a cold delta run (every row is overwritten)."""
+    h, w = shape
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+    n_tiles = gr * gc
+    ring = len(_ring_coords(tr, tc)[0])
+    k = min(tile_max_candidates, tr * tc)
+    f = min(tile_max_features, tr * tc)
+    zi = functools.partial(jnp.zeros, dtype=jnp.int32)
+    zv = functools.partial(jnp.zeros, dtype=dtype)
+    zb = functools.partial(jnp.zeros, dtype=bool)
+    return TileBoundaryState(
+        ring_gidx=zi((n_tiles, ring)), ring_ptr=zi((n_tiles, ring)),
+        min_val=zv((n_tiles,)), min_gidx=zi((n_tiles,)),
+        e_val=zv((n_tiles, k, 8)), e_pos=zi((n_tiles, k, 8)),
+        e_a=zi((n_tiles, k, 8)), e_b=zi((n_tiles, k, 8)),
+        e_ok=zb((n_tiles, k, 8)),
+        root_val=zv((n_tiles, f)), root_gidx=zi((n_tiles, f)),
+        root_valid=zb((n_tiles, f)),
+        rmax_val=zv((n_tiles,)), rmax_gidx=zi((n_tiles,)),
+        n_roots=zi((n_tiles,)), n_cand=zi((n_tiles,)))
+
+
+def dirty_stacks(source, grid: tuple[int, int], dirty: np.ndarray,
+                 bucket: int) -> tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+    """Halo-padded (bucket, tr+2, tc+2) value/gidx stacks of the dirty
+    tiles plus their padded slot vector.
+
+    Host->device traffic is O(dirty area): only dirty windows are staged.
+    Padding repeats the *last* dirty tile (stack row and slot alike), so
+    the scatter writes pad rows as exact duplicates of a real row —
+    idempotent by construction, no masking needed in the jitted program.
+    """
+    dirty = np.asarray(dirty, np.int64)
+    if isinstance(source, StagedTiles):
+        stack = np.asarray(source.pvals)
+        shape = source.shape
+        win = [stack[t] for t in dirty]
+    else:
+        arr = np.asarray(source)
+        shape = arr.shape
+        gr, gc = grid
+        tr, tc = arr.shape[0] // gr, arr.shape[1] // gc
+        fill = np.asarray(_neg_inf(arr.dtype))
+        padded = np.pad(arr, 1, constant_values=fill)
+        win = [padded[(t // gc) * tr:(t // gc) * tr + tr + 2,
+                      (t % gc) * tc:(t % gc) * tc + tc + 2] for t in dirty]
+    gwin = [halo_gidx_tile(shape, grid, int(t)) for t in dirty]
+    pad = bucket - len(win)
+    if pad:
+        win += [win[-1]] * pad
+        gwin += [gwin[-1]] * pad
+        dirty = np.concatenate([dirty, np.full(pad, dirty[-1])])
+    return jnp.asarray(np.stack(win)), jnp.asarray(np.stack(gwin)), dirty
+
+
+# ---------------------------------------------------------------------------
+# Jitted programs: batched phase AB + scatter/seam-merge replay
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_max_features", "tile_max_candidates",
+                     "truncated", "merge_keys"))
+def _phase_ab_stack(pvals, pgidx, tv, *, tile_max_features: int,
+                    tile_max_candidates: int, truncated: bool,
+                    merge_keys: str) -> TileBoundaryState:
+    packed_keys.assert_key_context(merge_keys)
+    fn = functools.partial(tile_phase_ab,
+                           tile_max_candidates=tile_max_candidates,
+                           tile_max_features=tile_max_features,
+                           truncated=truncated, merge_keys=merge_keys)
+    return jax.vmap(fn, in_axes=(0, 0, None))(pvals, pgidx, tv)
+
+
+def phase_ab_stack(pvals, pgidx, tv=None, *, merge_keys: str = "packed",
+                   **kwargs) -> TileBoundaryState:
+    """Per-tile phases A+B over a (D, tr+2, tc+2) stack — the *same*
+    vmapped program the cold tiled path runs over all T tiles, applied to
+    the dirty subset.  Row independence of ``vmap`` is what makes the
+    delta state bit-identical to a cold one, row for row."""
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys, pvals.dtype)
+    truncated = tv is not None
+    tvj = tv if truncated else _neg_inf(jnp.float32)
+    with packed_keys.key_scope(merge_keys):
+        return _phase_ab_stack(pvals, pgidx, tvj, truncated=truncated,
+                               merge_keys=merge_keys, **kwargs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shape", "grid", "max_features", "tile_max_features",
+                     "tile_max_candidates", "truncated", "merge_keys",
+                     "phase_c_impl", "phase_c_block"))
+def _scatter_merge(state: TileBoundaryState, fresh: TileBoundaryState,
+                   slots, tv, *, shape, grid, max_features: int,
+                   tile_max_features: int, tile_max_candidates: int,
+                   truncated: bool, merge_keys: str,
+                   phase_c_impl: str, phase_c_block: int
+                   ) -> tuple[TileBoundaryState, TiledDiagram]:
+    packed_keys.assert_key_context(merge_keys)
+    new_state = jax.tree.map(lambda c, f: c.at[slots].set(f), state, fresh)
+    td = merge_tile_state(
+        new_state, tv, shape=shape, grid=grid, max_features=max_features,
+        tile_max_features=tile_max_features,
+        tile_max_candidates=tile_max_candidates, truncated=truncated,
+        merge_keys=merge_keys, phase_c_impl=phase_c_impl,
+        phase_c_block=phase_c_block)
+    return new_state, td
+
+
+def scatter_merge(state: TileBoundaryState, fresh: TileBoundaryState,
+                  slots, tv=None, *, merge_keys: str = "packed",
+                  **kwargs) -> tuple[TileBoundaryState, TiledDiagram]:
+    """Scatter fresh dirty-tile rows into the cached state and replay the
+    O(boundary) seam merge.  Returns the updated full state (the next
+    frame's cache entry) and the :class:`TiledDiagram`.
+
+    ``slots`` may contain duplicates (bucket padding repeats a real dirty
+    slot with an identical fresh row), so the scatter is idempotent
+    whatever order XLA applies it in.
+    """
+    merge_keys = packed_keys.resolve_merge_keys(merge_keys,
+                                                state.root_val.dtype)
+    truncated = tv is not None
+    tvj = tv if truncated else _neg_inf(jnp.float32)
+    with packed_keys.key_scope(merge_keys):
+        return _scatter_merge(state, fresh, jnp.asarray(slots, jnp.int32),
+                              tvj, truncated=truncated,
+                              merge_keys=merge_keys, **kwargs)

@@ -92,6 +92,49 @@ class TiledDiagram(NamedTuple):
     n_tile_cands: jnp.ndarray     # (T,) int32 candidates per tile
 
 
+class TileBoundaryState(NamedTuple):
+    """Everything the seam merge needs, per tile — the cacheable artifact.
+
+    Every field is **tile-local**: computed from one halo-padded tile alone
+    (:func:`tile_phase_ab`), never from another tile's state or from the
+    resolved cross-tile labels.  That locality is the delta-recompute
+    contract (``repro.core.delta``): a tile whose halo-padded bytes are
+    unchanged has bit-identical state, so a cached row can stand in for a
+    recompute.  Consequently saddle-edge endpoints ``e_a``/``e_b`` carry
+    *pre-labels* (an in-tile basin root or the halo pixel the ascent chain
+    exits through), not final global basin labels — the final resolution
+    through the ring table happens once, in :func:`merge_tile_state`.
+
+    All arrays have a leading tile axis ``T`` when stacked; invariants:
+
+    * ``ring_gidx``/``ring_ptr`` (T, R): the tile's 1-px boundary ring and
+      its exit pointers — the condensation-table rows.
+    * ``e_*`` (T, k, 8): clique-chained saddle candidate edges keyed by the
+      saddle pixel (``e_val``/``e_pos``); endpoints are pre-labels.
+    * ``root_*`` (T, f): top-``f`` owned basin roots (a root's final label
+      is itself, so these are global already); ``rmax_*`` the unfiltered
+      per-tile maximum root for the essential class.
+    * ``n_roots``/``n_cand`` (T,): exact counts for overflow detection.
+    """
+
+    ring_gidx: jnp.ndarray        # (T, R) int32
+    ring_ptr: jnp.ndarray         # (T, R) int32
+    min_val: jnp.ndarray          # (T,) image dtype
+    min_gidx: jnp.ndarray         # (T,) int32
+    e_val: jnp.ndarray            # (T, k, 8) image dtype
+    e_pos: jnp.ndarray            # (T, k, 8) int32
+    e_a: jnp.ndarray              # (T, k, 8) int32 pre-label endpoint
+    e_b: jnp.ndarray              # (T, k, 8) int32 pre-label endpoint
+    e_ok: jnp.ndarray             # (T, k, 8) bool
+    root_val: jnp.ndarray         # (T, f) image dtype
+    root_gidx: jnp.ndarray        # (T, f) int32
+    root_valid: jnp.ndarray       # (T, f) bool
+    rmax_val: jnp.ndarray         # (T,) image dtype
+    rmax_gidx: jnp.ndarray        # (T,) int32
+    n_roots: jnp.ndarray          # (T,) int32
+    n_cand: jnp.ndarray           # (T,) int32
+
+
 # ---------------------------------------------------------------------------
 # Grid selection / validation
 # ---------------------------------------------------------------------------
@@ -306,19 +349,31 @@ def resolve_ring_table(ring_gidx: jnp.ndarray, ring_ptr: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
-# Phase B (per tile): global labels, exact candidates, seam/interior edges
+# Phase B (per tile): pre-labels, exact candidates, seam/interior edges
 # ---------------------------------------------------------------------------
 
-def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
+def tile_phase_b(pvals, pgidx, ptr_owned, tv, *,
                  tile_max_candidates: int, tile_max_features: int,
                  truncated: bool, merge_keys: str = "rank"):
-    """Steps 3-4 on one tile with final global labels.
+    """Steps 3-4 on one tile, **label-independent** (tile-local only).
 
     Returns per-tile compact pieces of the global merge instance:
-    clique-chained saddle edges (endpoints are global basin-root ids),
-    the top-``tile_max_features`` basin roots, the tile's unfiltered
-    maximum root (for the essential class), and candidate/root counts for
+    clique-chained saddle edges (endpoints are *pre-labels* — an in-tile
+    basin root or the halo pixel the chain exits through, resolved to
+    final global labels later by :func:`merge_tile_state`), the
+    top-``tile_max_features`` basin roots, the tile's unfiltered maximum
+    root (for the essential class), and candidate/root counts for
     overflow detection.
+
+    Pre-labels keep the diagram bit-identical: equal pre-labels imply
+    equal final labels, so every whole-image candidate/edge survives;
+    distinct pre-labels that resolve to the *same* final label add only
+    edges that become self-loops in the seam merge, which
+    :func:`repro.core.parallel_merge.boruvka_forest` skips (``ra != rb``)
+    — and duplicate real edges share the saddle pixel, hence the exact
+    merge key, so the elder-rule outcome is unchanged.  In exchange the
+    stage depends on nothing but this tile's halo-padded bytes, which is
+    what makes its output cacheable for delta recompute.
 
     ``merge_keys="packed"`` keys every comparison on the packed
     ``(value, global index)`` int64 bit-key — per-tile packed keys are
@@ -336,12 +391,11 @@ def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
     own_vals = pvals[1:-1, 1:-1]
     own_gidx = pgidx[1:-1, 1:-1]
 
-    # Final global labels: owned pixels through their exit pointers, halo
-    # pixels straight from the table (they are ring pixels of a neighbor).
-    lbl_owned = _table_follow(sg, sl, ptr_owned)
-    frame_lbl = jnp.where(pgidx >= 0, _table_follow(sg, sl, pgidx), -1)
-    plbl = jnp.where(interior, jnp.pad(lbl_owned, 1, constant_values=-1),
-                     frame_lbl)
+    # Pre-labels: owned pixels carry their in-tile resolution (basin root
+    # or exit halo pixel); halo pixels stand for themselves (they are ring
+    # pixels of a neighbor, resolved at seam time); out-of-frame fill -1.
+    plbl = jnp.where(interior, jnp.pad(ptr_owned, 1, constant_values=-1),
+                     jnp.where(pgidx >= 0, pgidx, -1))
 
     if merge_keys == "packed":
         # Packed (value, global index) keys are order-isomorphic to the
@@ -377,8 +431,11 @@ def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
     e_a = jnp.where(edge_ok, lbl, 0)
     e_b = jnp.where(edge_ok, prev_lbl, 0)
 
-    # Basin roots owned by this tile.
-    root_mask = lbl_owned == own_gidx
+    # Basin roots owned by this tile.  Root-ness is tile-local: ascent
+    # chains are strictly increasing in (value, index), so a pixel whose
+    # chain leaves the tile can never resolve back to itself —
+    # ``ptr_owned == own_gidx`` iff the final global label is the pixel.
+    root_mask = ptr_owned == own_gidx
     # Unfiltered per-tile maximum root: the global maximum pixel is always a
     # root, so the reduce over tiles finds the essential class even when a
     # Variant-2 threshold filters the listed roots.
@@ -399,6 +456,32 @@ def tile_phase_b(pvals, pgidx, ptr_owned, sg, sl, tv, *,
     return (e_val, e_pos, e_a, e_b, edge_ok,
             root_val, root_gidx.astype(jnp.int32), rvalid,
             rmax_val, rmax_gidx, n_roots, n_cand)
+
+
+def tile_phase_ab(pvals, pgidx, tv, *,
+                  tile_max_candidates: int, tile_max_features: int,
+                  truncated: bool, merge_keys: str = "rank"
+                  ) -> TileBoundaryState:
+    """Phases A+B on one halo-padded tile -> its :class:`TileBoundaryState`.
+
+    This is the complete tile-local computation — a pure function of one
+    tile's halo-padded bytes (plus the static capacities/threshold), which
+    is exactly the unit the delta layer caches and replays.  The cold
+    tiled path vmaps it over all ``T`` tiles; a delta run vmaps the same
+    function over only the dirty subset.
+    """
+    (ptr_owned, ring_gidx, ring_ptr, min_val, min_gidx) = tile_phase_a(
+        pvals, pgidx)
+    (e_val, e_pos, e_a, e_b, e_ok, root_val, root_gidx, root_valid,
+     rmax_val, rmax_gidx, n_roots, n_cand) = tile_phase_b(
+        pvals, pgidx, ptr_owned, tv,
+        tile_max_candidates=tile_max_candidates,
+        tile_max_features=tile_max_features,
+        truncated=truncated, merge_keys=merge_keys)
+    return TileBoundaryState(ring_gidx, ring_ptr, min_val, min_gidx,
+                             e_val, e_pos, e_a, e_b, e_ok,
+                             root_val, root_gidx, root_valid,
+                             rmax_val, rmax_gidx, n_roots, n_cand)
 
 
 # ---------------------------------------------------------------------------
@@ -534,6 +617,57 @@ def seam_merge(root_val, root_gidx, root_valid,
             merge_overflow)
 
 
+def merge_tile_state(state: TileBoundaryState, tv, *,
+                     shape: tuple[int, int], grid: tuple[int, int],
+                     max_features: int, tile_max_features: int,
+                     tile_max_candidates: int, truncated: bool,
+                     merge_keys: str = "rank", phase_c_impl: str = "fused",
+                     phase_c_block: int = 1024) -> TiledDiagram:
+    """O(boundary) global replay: ring condensation + pre-label resolution
+    + elder-rule seam merge over stacked :class:`TileBoundaryState`.
+
+    This is the only stage that mixes tiles, and it never touches pixels —
+    its cost scales with rings/roots/edges.  A delta run re-executes *this*
+    against a state whose clean rows come from cache: pointer doubling on
+    the full ring table re-resolves every cross-tile chain (a dirty tile
+    re-routes chains through clean tiles correctly, because clean rows
+    store pre-labels, not stale final labels), then ``e_a``/``e_b`` are
+    mapped through the table.  A pre-label absent from the table is an
+    in-tile *root* (interior roots never appear on a ring), and a root's
+    final label is itself — exactly ``_table_follow``'s miss semantics.
+    """
+    h, w = shape
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+
+    sg, sl = resolve_ring_table(state.ring_gidx, state.ring_ptr)
+
+    gmin_val = jnp.min(state.min_val)
+    gmin_gidx = jnp.min(jnp.where(state.min_val == gmin_val,
+                                  state.min_gidx, jnp.int32(_I32_MAX)))
+
+    e_a = _table_follow(sg, sl, state.e_a)
+    e_b = _table_follow(sg, sl, state.e_b)
+
+    f_global = min(max_features, h * w)
+    (birth, death, p_birth, p_death, count, n_unmerged,
+     merge_overflow) = seam_merge(
+        state.root_val, state.root_gidx, state.root_valid,
+        state.e_val, state.e_pos, e_a, e_b, state.e_ok,
+        state.rmax_val, state.rmax_gidx, gmin_val, gmin_gidx, tv,
+        truncated=truncated, max_features=f_global,
+        dtype=state.root_val.dtype, merge_keys=merge_keys,
+        phase_c_impl=phase_c_impl, phase_c_block=phase_c_block)
+
+    tile_overflow = (
+        jnp.any(state.n_cand > min(tile_max_candidates, tr * tc))
+        | jnp.any(state.n_roots > min(tile_max_features, tr * tc)))
+    diagram = Diagram(birth, death, p_birth, p_death, count, n_unmerged,
+                      tile_overflow | merge_overflow)
+    return TiledDiagram(diagram, tile_overflow, merge_overflow,
+                        state.n_roots, state.n_cand)
+
+
 # ---------------------------------------------------------------------------
 # Full tiled algorithm
 # ---------------------------------------------------------------------------
@@ -625,13 +759,12 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
     tv = (jnp.asarray(truncate_value) if truncated
           else _neg_inf(jnp.float32))
 
-    phase_a = jax.vmap(tile_phase_a)
-    phase_b = jax.vmap(
-        functools.partial(tile_phase_b,
+    phase_ab = jax.vmap(
+        functools.partial(tile_phase_ab,
                           tile_max_candidates=tile_max_candidates,
                           tile_max_features=tile_max_features,
                           truncated=truncated, merge_keys=merge_keys),
-        in_axes=(0, 0, 0, None, None, None))
+        in_axes=(0, 0, None))
 
     if shard_ctx is not None:
         from jax.sharding import PartitionSpec as P
@@ -651,43 +784,21 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
             def sp(extra):
                 return P(*((tile_p[0],) + (None,) * extra))
 
-            phase_a = shard_map_compat(
-                phase_a, mesh=shard_ctx.mesh,
-                in_specs=(sp(2), sp(2)),
-                out_specs=(sp(2), sp(1), sp(1), sp(0), sp(0)))
-            phase_b = shard_map_compat(
-                phase_b, mesh=shard_ctx.mesh,
-                in_specs=(sp(2), sp(2), sp(2), P(None), P(None), P()),
-                out_specs=(sp(2), sp(2), sp(2), sp(2), sp(2),
-                           sp(1), sp(1), sp(1), sp(0), sp(0), sp(0), sp(0)))
+            phase_ab = shard_map_compat(
+                phase_ab, mesh=shard_ctx.mesh,
+                in_specs=(sp(2), sp(2), P()),
+                out_specs=TileBoundaryState(
+                    sp(1), sp(1), sp(0), sp(0),
+                    sp(2), sp(2), sp(2), sp(2), sp(2),
+                    sp(1), sp(1), sp(1), sp(0), sp(0), sp(0), sp(0)))
 
-    ptr_owned, ring_gidx, ring_ptr, min_val, min_gidx = phase_a(pvals, pgidx)
-    sg, sl = resolve_ring_table(ring_gidx, ring_ptr)
-
-    gmin_val = jnp.min(min_val)
-    gmin_gidx = jnp.min(jnp.where(min_val == gmin_val, min_gidx,
-                                  jnp.int32(_I32_MAX)))
-
-    (e_val, e_pos, e_a, e_b, e_valid,
-     root_val, root_gidx, root_valid,
-     rmax_val, rmax_gidx, n_roots, n_cand) = phase_b(
-        pvals, pgidx, ptr_owned, sg, sl, tv)
-
-    f_global = min(max_features, h * w)
-    (birth, death, p_birth, p_death, count, n_unmerged,
-     merge_overflow) = seam_merge(
-        root_val, root_gidx, root_valid, e_val, e_pos, e_a, e_b, e_valid,
-        rmax_val, rmax_gidx, gmin_val, gmin_gidx, tv,
-        truncated=truncated, max_features=f_global, dtype=pvals.dtype,
+    state = phase_ab(pvals, pgidx, tv)
+    return merge_tile_state(
+        state, tv, shape=(h, w), grid=grid, max_features=max_features,
+        tile_max_features=tile_max_features,
+        tile_max_candidates=tile_max_candidates, truncated=truncated,
         merge_keys=merge_keys, phase_c_impl=phase_c_impl,
         phase_c_block=phase_c_block)
-
-    tile_overflow = (jnp.any(n_cand > min(tile_max_candidates, tr * tc))
-                     | jnp.any(n_roots > min(tile_max_features, tr * tc)))
-    diagram = Diagram(birth, death, p_birth, p_death, count, n_unmerged,
-                      tile_overflow | merge_overflow)
-    return TiledDiagram(diagram, tile_overflow, merge_overflow,
-                        n_roots, n_cand)
 
 
 def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
@@ -735,6 +846,7 @@ def per_tile_cost(tile_shape: tuple[int, int], dtype, n_tiles: int,
 
     out: dict = {"tile_shape": [tr, tc], "ring_pixels": ring,
                  "table_entries": n_tiles * ring, "merge_keys": merge_keys}
+    del table   # phase B is label-independent now: no condensation input
     for name, fn, args in (
             ("phase_a", jax.jit(tile_phase_a), (pv, pg)),
             ("phase_b",
@@ -742,7 +854,7 @@ def per_tile_cost(tile_shape: tuple[int, int], dtype, n_tiles: int,
                  tile_phase_b, tile_max_candidates=tile_max_candidates,
                  tile_max_features=tile_max_features, truncated=True,
                  merge_keys=merge_keys)),
-             (pv, pg, ptr, table, table, tv))):
+             (pv, pg, ptr, tv))):
         with packed_keys.key_scope(merge_keys):
             compiled = fn.lower(*args).compile()
         ma = compiled.memory_analysis()

@@ -162,6 +162,98 @@ def estimate_cost_from_id(image_id: int, size: int) -> float:
                         * np.log(np.maximum(a[visible] / 25.0, 1.0 + 1e-6))))
 
 
+class FrameSequence:
+    """Deterministic survey stream over one base star field: frame 0 is
+    the base frame, each later frame adds localized Gaussian transients
+    confined to a chosen subset of tiles — the workload
+    :meth:`repro.ph.PHEngine.run_delta` exists for.
+
+    ``dirty_frac`` controls how many of the ``grid`` tiles each frame
+    touches (at least one).  Transient stamps are placed at least
+    ``stamp // 2 + 2`` pixels inside their tile, so with halo-padded tile
+    hashing *exactly* the chosen tiles change (the stamp never reaches a
+    neighbor's halo window); :meth:`dirty_tiles` returns the intended set
+    for a frame so tests and benchmarks can assert the delta layer's
+    classification against ground truth.  Everything is deterministic in
+    ``(image_id, frame index)``.
+    """
+
+    def __init__(self, image_id: int, size: int = 1024, *,
+                 grid: tuple[int, int] = (4, 4), dirty_frac: float = 0.1,
+                 amp: float = 2000.0, stamp: int = 15, **gen_kwargs):
+        gr, gc = int(grid[0]), int(grid[1])
+        if size % gr or size % gc:
+            raise ValueError(f"grid {grid} does not divide size {size}")
+        margin = stamp // 2 + 2
+        if size // gr <= 2 * margin or size // gc <= 2 * margin:
+            raise ValueError(f"tiles {size // gr}x{size // gc} too small "
+                             f"for stamp {stamp} with a 2px halo margin")
+        if not 0.0 <= dirty_frac <= 1.0:
+            raise ValueError(f"dirty_frac must be in [0, 1], "
+                             f"got {dirty_frac}")
+        self.image_id = int(image_id)
+        self.size = int(size)
+        self.grid = (gr, gc)
+        self.dirty_frac = float(dirty_frac)
+        self.amp = float(amp)
+        self.stamp = int(stamp)
+        self.gen_kwargs = gen_kwargs
+        self._base: np.ndarray | None = None
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.size, self.size)
+
+    def base(self) -> np.ndarray:
+        """The shared frame-0 star field (rendered once, then reused)."""
+        if self._base is None:
+            self._base = generate_image(self.image_id, self.size,
+                                        **self.gen_kwargs)
+        return self._base
+
+    def dirty_tiles(self, i: int) -> np.ndarray:
+        """Row-major tile indices frame ``i`` perturbs (empty for frame
+        0); ``ceil(dirty_frac * n_tiles)`` of them, at least one."""
+        if i == 0:
+            return np.empty(0, np.int64)
+        gr, gc = self.grid
+        n_tiles = gr * gc
+        n_dirty = max(1, int(np.ceil(self.dirty_frac * n_tiles)))
+        rng = np.random.default_rng(
+            np.random.SeedSequence([77, self.image_id, 5, i]))
+        return np.sort(rng.choice(n_tiles, size=min(n_dirty, n_tiles),
+                                  replace=False))
+
+    def frame(self, i: int) -> np.ndarray:
+        """Frame ``i``: the base field plus one transient per dirty tile,
+        each strictly interior to its tile (see class docstring)."""
+        img = self.base().copy()
+        if i == 0:
+            return img
+        gr, gc = self.grid
+        tr, tc = self.size // gr, self.size // gc
+        half = self.stamp // 2
+        margin = half + 2
+        yy, xx = np.mgrid[-half:half + 1, -half:half + 1].astype(np.float32)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([77, self.image_id, 6, i]))
+        for t in self.dirty_tiles(i):
+            r0, c0 = (int(t) // gc) * tr, (int(t) % gc) * tc
+            cy = r0 + rng.integers(margin, tr - margin)
+            cx = c0 + rng.integers(margin, tc - margin)
+            sig = rng.uniform(1.0, 2.5)
+            a = self.amp * rng.uniform(0.5, 1.5)
+            g = a * np.exp(-((yy ** 2 + xx ** 2) / (2.0 * sig ** 2)))
+            img[cy - half:cy + half + 1, cx - half:cx + half + 1] += g
+        return img
+
+    def frames(self, n: int):
+        """Generator of the first ``n`` frames (feeds
+        ``PHEngine.run_sequence``)."""
+        for i in range(n):
+            yield self.frame(i)
+
+
 class AstroImage:
     """Windowed Variant-1 loader for one synthetic frame (a tile provider).
 

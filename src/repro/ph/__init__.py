@@ -16,7 +16,9 @@ from repro.ph.config import (  # noqa: F401
     ADMISSION_POLICIES,
     CANDIDATE_MODES,
     DTYPES,
+    HASH_ALGOS,
     MERGE_IMPLS,
+    DeltaSpec,
     FilterLevel,
     PHConfig,
     ServeSpec,

@@ -16,6 +16,7 @@ from typing import Any
 from repro.core.packed_keys import MERGE_KEYS  # noqa: F401  (single source)
 
 CANDIDATE_MODES = ("exact", "paper")
+HASH_ALGOS = ("blake2b", "sha1", "md5")
 MERGE_IMPLS = ("scan", "boruvka")
 PHASE_A_IMPLS = ("fused", "pooled")
 PHASE_C_IMPLS = ("fused", "xla")
@@ -147,6 +148,50 @@ class ServeSpec:
         return (self.buckets, self.batch_cap)
 
 
+@dataclasses.dataclass(frozen=True)
+class DeltaSpec:
+    """Delta-recompute / frame-cache policy (:meth:`PHEngine.run_delta`).
+
+    Consecutive survey frames differ in a few regions; with a delta spec
+    the engine keeps a bounded LRU of per-frame tiled state
+    (:class:`repro.cache.DiagramCache`), classifies tiles clean/dirty by a
+    per-tile content hash over the halo-padded tile bytes (``hash_algo``),
+    and recomputes phase A/B only for dirty tiles before replaying the
+    O(boundary) seam merge — bit-identical to a cold
+    :meth:`PHEngine.run_tiled`.  An identical frame short-circuits to the
+    cached diagram without touching the device.
+
+    ``cache_entries`` bounds the number of retained frame entries (each
+    holds device-resident :class:`repro.core.tiling.TileBoundaryState`,
+    so the budget is real memory).  ``verify`` is the paranoid mode:
+    entries additionally keep the raw tile bytes and every clean
+    classification is byte-compared, so a hash collision is *detected*
+    (the tile is reclassified dirty and counted) instead of trusted.
+    """
+
+    enabled: bool = True
+    cache_entries: int = 4
+    hash_algo: str = "blake2b"
+    verify: bool = False
+
+    def __post_init__(self):
+        if not isinstance(self.cache_entries, int) or self.cache_entries < 1:
+            raise ValueError(f"cache_entries must be a positive int, "
+                             f"got {self.cache_entries!r}")
+        if self.hash_algo not in HASH_ALGOS:
+            raise ValueError(f"hash_algo must be one of {HASH_ALGOS}, "
+                             f"got {self.hash_algo!r}")
+
+    def replace(self, **changes) -> "DeltaSpec":
+        return dataclasses.replace(self, **changes)
+
+    def plan_fields(self) -> tuple:
+        """Only ``enabled`` selects compiled programs (the split
+        phase-AB / scatter-merge pair vs the fused cold plan); cache
+        depth, hash algorithm, and verify are host-side policy."""
+        return (self.enabled,)
+
+
 class FilterLevel(str, enum.Enum):
     """Variant-2 background filtering level (paper Table 1)."""
 
@@ -240,6 +285,11 @@ class PHConfig:
     # (and which plans PHEngine.warmup pre-traces); queue depth / tick /
     # admission are host-side.
     serve: ServeSpec | None = None
+    # Delta-recompute policy for frame sequences (None = every run cold).
+    # With a spec, run_delta/run_sequence hash tiles against a bounded LRU
+    # frame cache and recompute only dirty tiles; the serving daemon adds
+    # its exact-hash / near-duplicate cache tier on top.
+    delta: DeltaSpec | None = None
 
     def __post_init__(self):
         if isinstance(self.filter_level, str) and \
@@ -256,6 +306,11 @@ class PHConfig:
         if self.serve is not None and not isinstance(self.serve, ServeSpec):
             raise ValueError(f"serve must be a ServeSpec or None, "
                              f"got {type(self.serve).__name__}")
+        if isinstance(self.delta, dict):
+            object.__setattr__(self, "delta", DeltaSpec(**self.delta))
+        if self.delta is not None and not isinstance(self.delta, DeltaSpec):
+            raise ValueError(f"delta must be a DeltaSpec or None, "
+                             f"got {type(self.delta).__name__}")
         if self.candidate_mode not in CANDIDATE_MODES:
             raise ValueError(f"candidate_mode must be one of "
                              f"{CANDIDATE_MODES}, got {self.candidate_mode!r}")
@@ -342,7 +397,8 @@ class PHConfig:
         """
         return (self.stage_signature(), self.dtype, self.bucket_rounding,
                 self.tile.plan_fields() if self.tile is not None else None,
-                self.serve.plan_fields() if self.serve is not None else None)
+                self.serve.plan_fields() if self.serve is not None else None,
+                self.delta.plan_fields() if self.delta is not None else None)
 
     # -- construction / serialization -------------------------------------
 
@@ -411,6 +467,15 @@ class PHConfig:
                 else int(b) for b in serve_kw["buckets"])
         if serve_kw or getattr(args, "serve", False):
             kw["serve"] = ServeSpec(**serve_kw)
+        delta_kw: dict[str, Any] = {}
+        for attr, field in (("delta_cache_entries", "cache_entries"),
+                            ("delta_hash", "hash_algo"),
+                            ("delta_verify", "verify")):
+            v = getattr(args, attr, None)
+            if v is not None:
+                delta_kw[field] = v
+        if delta_kw or getattr(args, "delta", False):
+            kw["delta"] = DeltaSpec(**delta_kw)
         kw.update(overrides)
         return cls(**kw)
 

@@ -116,6 +116,9 @@ class PHResult:
     # Variant-2 threshold(s) actually applied: a scalar for run(), a (B,)
     # array for run_batch(), None when no filtering was in effect.
     threshold: Any = None
+    # Delta-recompute accounting (repro.core.delta.DeltaStats) when the
+    # result came through run_delta / run_sequence; None otherwise.
+    delta: Any = None
 
     def to_array(self) -> np.ndarray:
         return diagram_to_array(self.diagram)
@@ -141,6 +144,12 @@ class PHEngine:
         # Autotune memo: effective (tuned) config per (shape, dtype), so
         # the disk-cache lookup happens once per shape family.
         self._tuned: dict[tuple, PHConfig] = {}
+        # Delta frame store (repro.cache.DiagramCache), built lazily from
+        # config.delta.cache_entries on the first run_delta call.
+        self._delta_cache = None
+        # Autotuned tile-grid memo per (shape, dtype) — like _tuned, one
+        # disk-cache lookup per shape family.
+        self._tuned_grids: dict[tuple, tuple[int, int] | None] = {}
         self._hits = 0
         self._misses = 0
         self.regrow_log: list[dict] = []
@@ -223,6 +232,44 @@ class PHEngine:
         with self._lock:
             self._tuned[key] = eff
         return eff
+
+    def _tuned_grid(self, shape2d, dtype) -> tuple[int, int] | None:
+        """Autotuned tile grid for this shape family — a pure disk-cache
+        lookup (:func:`repro.roofline.autotune.lookup`), memoized per
+        (shape, dtype); ``None`` when autotune is off or the cache has no
+        ``tile_grid`` for the family."""
+        cfg = self.config
+        if not cfg.autotune:
+            return None
+        key = (tuple(shape2d), str(dtype))
+        with self._lock:
+            if key in self._tuned_grids:
+                return self._tuned_grids[key]
+        from repro.roofline import autotune
+        tg = autotune.lookup(tuple(shape2d), str(dtype),
+                             path=cfg.autotune_cache).tile_grid
+        with self._lock:
+            self._tuned_grids[key] = tg
+        return tg
+
+    def _resolve_grid(self, shape2d, dtype, spec: TileSpec
+                      ) -> tuple[int, int]:
+        """Tile grid for one image: the spec's explicit grid, else the
+        autotuned grid (validated — a stale cache entry that no longer
+        divides the shape is ignored), else ``choose_grid`` from the
+        tile-pixel budget.  The winner lands in every tiled/delta plan
+        key, so tuning deterministically selects compiled programs."""
+        from repro.core import tiling
+        if spec.grid is not None:
+            return tuple(spec.grid)
+        tg = self._tuned_grid(shape2d, dtype)
+        if tg is not None:
+            try:
+                tiling.validate_grid(tuple(shape2d), tg)
+                return tg
+            except ValueError:
+                pass
+        return tiling.choose_grid(tuple(shape2d), spec.max_tile_pixels)
 
     def _ph_kwargs(self, mf: int, mc: int, merge_keys: str,
                    cfg: PHConfig | None = None) -> dict:
@@ -362,6 +409,56 @@ class PHEngine:
             if truncated:
                 return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))
             return jax.jit(lambda pv, pg: compute(pv, pg))
+
+        return self.get_plan(key, build, mk)
+
+    def delta_ab_plan(self, tile_shape, dtype, n_stack: int, tf: int,
+                      tk: int, truncated: bool) -> Plan:
+        """Batched per-tile phases A+B over a dirty-tile stack
+        (:func:`repro.core.delta.phase_ab_stack`).  ``n_stack`` is the
+        power-of-two dirty bucket, so the set of compiled batch shapes is
+        logarithmic in the tile count."""
+        from repro.core.delta import phase_ab_stack
+        mk = self._merge_keys_for(dtype)
+        key = ("delta_ab", tuple(tile_shape), str(dtype), n_stack, tf, tk,
+               truncated, self.config.plan_key())
+
+        def build(plan: Plan):
+            def compute(pv, pg, tv=None):
+                plan.traces += 1
+                return phase_ab_stack(pv, pg, tv, tile_max_features=tf,
+                                      tile_max_candidates=tk, merge_keys=mk)
+
+            if truncated:
+                return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))
+            return jax.jit(lambda pv, pg: compute(pv, pg))
+
+        return self.get_plan(key, build, mk)
+
+    def delta_merge_plan(self, shape, dtype, grid, n_stack: int, mf: int,
+                         tf: int, tk: int, truncated: bool) -> Plan:
+        """Scatter fresh dirty rows into the cached tile state and replay
+        the seam merge (:func:`repro.core.delta.scatter_merge`); returns
+        ``(new_state, TiledDiagram)``."""
+        from repro.core.delta import scatter_merge
+        mk = self._merge_keys_for(dtype)
+        cfg = self.config
+        key = ("delta_merge", tuple(shape), str(dtype), grid, n_stack, mf,
+               tf, tk, truncated, cfg.plan_key())
+
+        def build(plan: Plan):
+            def compute(state, fresh, slots, tv=None):
+                plan.traces += 1
+                return scatter_merge(
+                    state, fresh, slots, tv, shape=tuple(shape), grid=grid,
+                    max_features=mf, tile_max_features=tf,
+                    tile_max_candidates=tk, merge_keys=mk,
+                    phase_c_impl=cfg.phase_c_impl,
+                    phase_c_block=cfg.phase_c_block)
+
+            if truncated:
+                return jax.jit(lambda s, f, sl, tv: compute(s, f, sl, tv))
+            return jax.jit(lambda s, f, sl: compute(s, f, sl))
 
         return self.get_plan(key, build, mk)
 
@@ -566,8 +663,58 @@ class PHEngine:
             max_candidates=stats.final_max_candidates), stats,
             truncate_value)
 
+    def _dedupe_batch(self, images, truncate_values):
+        """Content-hash duplicate detection for :meth:`run_batch`.
+
+        Returns ``None`` when dedupe cannot help (fewer than two images,
+        non-2D rows, or no duplicates); otherwise ``(reps, inverse,
+        rep_images, rep_tvs)`` where ``reps`` indexes the first occurrence
+        of each distinct ``(bytes, shape, dtype, threshold)`` and
+        ``inverse[i]`` maps row ``i`` to its representative's rank.
+        """
+        import hashlib
+        arr = images if hasattr(images, "ndim") else None
+        if arr is not None:
+            if getattr(arr, "ndim", 0) != 3 or arr.shape[0] < 2:
+                return None
+            host = np.asarray(arr)
+            seq = [host[i] for i in range(host.shape[0])]
+        else:
+            seq = [np.asarray(im) for im in images]
+            if len(seq) < 2 or any(im.ndim != 2 for im in seq):
+                return None
+        if truncate_values is None:
+            tvs = [None] * len(seq)
+        elif np.isscalar(truncate_values):
+            tvs = [float(truncate_values)] * len(seq)
+        else:
+            tvs = list(np.asarray(truncate_values, object))
+            if len(tvs) != len(seq):
+                return None   # let the dispatch path raise its own error
+        keys = []
+        for im, t in zip(seq, tvs):
+            digest = hashlib.blake2b(
+                np.ascontiguousarray(im).tobytes(), digest_size=16).digest()
+            keys.append((im.shape, str(im.dtype), digest,
+                         None if t is None else float(t)))
+        first: dict = {}
+        reps: list[int] = []
+        inverse = np.empty(len(seq), np.int64)
+        for i, k in enumerate(keys):
+            got = first.get(k)
+            if got is None:
+                first[k] = got = len(reps)
+                reps.append(i)
+            inverse[i] = got
+        if len(reps) == len(seq):
+            return None
+        rep_tvs = None if truncate_values is None \
+            else [tvs[i] for i in reps]
+        return reps, inverse, [seq[i] for i in reps], rep_tvs
+
     def run_batch(self, images, truncate_values=None, *,
-                  bucket: tuple[int, int] | None = None) -> PHResult:
+                  bucket: tuple[int, int] | None = None,
+                  dedupe: bool = True) -> PHResult:
         """vmap'd PH over an image batch, regrowing on *any* overflow.
 
         ``images``: a ``(B, H, W)`` array (one compiled batch — the fast
@@ -587,7 +734,26 @@ class PHEngine:
         Padded rows always run thresholded; when neither an explicit nor
         a filter-level threshold exists, the image minimum stands in
         (exact — it keeps every real pixel and excludes every pad pixel).
+
+        ``dedupe`` (default on): exact content duplicates — same bytes,
+        shape, dtype, and threshold — compute once and fan out to every
+        requesting row host-side.  The dispatch batch shrinks to the
+        distinct images, so callers that need a *fixed* dispatch shape
+        (the serving daemon's warmed plans) must pass ``dedupe=False``.
         """
+        if dedupe:
+            plan = self._dedupe_batch(images, truncate_values)
+            if plan is not None:
+                reps, inverse, rep_images, rep_tvs = plan
+                res = self.run_batch(rep_images, rep_tvs, bucket=bucket,
+                                     dedupe=False)
+                host = jax.tree.map(np.asarray, res.diagram)
+                diag = jax.tree.map(lambda a: a[inverse], host)
+                thr = res.threshold
+                if thr is not None and not np.isscalar(thr):
+                    thr = np.asarray(thr)[inverse]
+                return dataclasses.replace(res, diagram=diag,
+                                           threshold=thr)
         arr = images if hasattr(images, "ndim") else None
         if arr is not None and arr.ndim == 3 and (
                 bucket is None or tuple(bucket) == tuple(arr.shape[1:])):
@@ -752,9 +918,10 @@ class PHEngine:
         spec = self.config.tile if self.config.tile is not None \
             else TileSpec()
         if grid is None:
-            grid = spec.grid if spec.grid is not None else \
-                tiling.choose_grid(tuple(provider.shape),
-                                   spec.max_tile_pixels)
+            dt = self.config.dtype if self.config.dtype is not None \
+                else getattr(provider, "dtype", np.float32)
+            grid = self._resolve_grid(tuple(provider.shape),
+                                      np.dtype(dt), spec)
         return tiling.load_tile_stacks(provider, tuple(grid), ctx=ctx)
 
     def run_tiled(self, image, truncate_value=None, *, grid=None,
@@ -813,8 +980,7 @@ class PHEngine:
             if truncate_value is None:
                 truncate_value = self._auto_threshold(image)
             if grid is None:
-                grid = spec.grid if spec.grid is not None else \
-                    tiling.choose_grid(x.shape, spec.max_tile_pixels)
+                grid = self._resolve_grid(x.shape, x.dtype, spec)
             shape, dtype = x.shape, x.dtype
         grid = tuple(grid)
         tiling.validate_grid(shape, grid)
@@ -884,6 +1050,210 @@ class PHEngine:
             tile=spec.replace(grid=grid, max_features_per_tile=tf,
                               max_candidates_per_tile=tk))
         return PHResult(out.diagram, eff, stats, truncate_value)
+
+    def run_delta(self, image, truncate_value=None, *, grid=None
+                  ) -> PHResult:
+        """Delta-recompute tiled PH of one frame against the engine's
+        frame store — **bit-identical** to :meth:`run_tiled` on the same
+        frame, at O(changed area) compute for near-duplicate frames.
+
+        ``image`` accepts the same forms as :meth:`run_tiled` (host 2D
+        array, tile provider, or ``StagedTiles``).  The frame's per-tile
+        content-hash grid (:func:`repro.core.delta.frame_digests`) is
+        classified against the :class:`repro.cache.DiagramCache`:
+
+        * **full hit** — the cached :class:`PHResult` is returned without
+          touching the device;
+        * **partial hit** — phases A+B re-run for the dirty tiles only
+          (padded to a power-of-two bucket), the fresh rows are scattered
+          into the cached :class:`TileBoundaryState`, and the O(boundary)
+          seam merge replays;
+        * **miss** (or ``config.delta`` disabled/absent) — every tile is
+          dirty; the same scatter program runs against an all-zeros base,
+          so cold and warm paths share compiled programs bit for bit.
+
+        ``PHResult.delta`` carries a :class:`repro.core.delta.DeltaStats`
+        (tiles recomputed, hit kind).  Regrow mirrors :meth:`run_tiled`
+        and shares its sticky capacity memo; a tile-capacity regrow
+        invalidates the cached state (its arrays are shape-static), a
+        merge-only regrow keeps the fresh phase-AB rows and re-runs just
+        the merge program.
+        """
+        from repro.cache import DiagramCache, FrameCacheEntry
+        from repro.core import delta as delta_mod, tiling
+        cfg = self.config
+        dspec = cfg.delta
+        if dspec is None or not dspec.enabled:
+            res = self.run_tiled(image, truncate_value, grid=grid)
+            n_t = np.prod(res.config.tile.grid)
+            return dataclasses.replace(res, delta=delta_mod.DeltaStats(
+                int(n_t), int(n_t), "cold"))
+        if cfg.candidate_mode != "exact":
+            raise ValueError("run_delta supports candidate_mode='exact' "
+                             "only (it rides the tiled path)")
+        staged = image if isinstance(image, tiling.StagedTiles) else None
+        if staged is None and hasattr(image, "halo_tile"):
+            provider = image
+            if truncate_value is None:
+                truncate_value = self.provider_threshold(provider)
+            staged = self.stage_tiles(provider, grid=grid)
+        spec = cfg.tile if cfg.tile is not None else TileSpec()
+        if staged is not None:
+            if cfg.dtype is not None:
+                staged = dataclasses.replace(
+                    staged, pvals=jnp.asarray(staged.pvals).astype(cfg.dtype))
+            if grid is not None and tuple(grid) != tuple(staged.grid):
+                raise ValueError(f"grid={tuple(grid)} does not match the "
+                                 f"staged tiles' grid {staged.grid}")
+            shape, grid = staged.shape, staged.grid
+            dtype = jnp.asarray(staged.pvals).dtype
+            source = staged
+        else:
+            x = np.asarray(self.cast_input(image))
+            if x.ndim != 2:
+                raise ValueError(f"expected 2D image, got shape {x.shape}")
+            if truncate_value is None:
+                truncate_value = self._auto_threshold(image)
+            if grid is None:
+                grid = self._resolve_grid(x.shape, x.dtype, spec)
+            shape, dtype = x.shape, x.dtype
+            source = x
+        grid = tuple(grid)
+        tiling.validate_grid(shape, grid)
+        h, w = shape
+        n = h * w
+        n_tiles = grid[0] * grid[1]
+        tile_n = (h // grid[0]) * (w // grid[1])
+        tile_shape = (h // grid[0] + 2, w // grid[1] + 2)
+        truncated = truncate_value is not None
+        tvj = jnp.asarray(truncate_value, threshold_dtype(dtype)) \
+            if truncated else None
+        tv_key = float(truncate_value) if truncated else None
+
+        digests, raw = delta_mod.frame_digests(
+            source, grid, algo=dspec.hash_algo, with_bytes=dspec.verify)
+        # Everything that must match for a cached state row to be
+        # bit-reusable (threshold included: it filters inside phase B).
+        context = (tuple(shape), grid, str(dtype), dspec.hash_algo, tv_key,
+                   cfg.plan_key())
+        with self._lock:
+            if self._delta_cache is None:
+                self._delta_cache = DiagramCache(dspec.cache_entries)
+            cache = self._delta_cache
+
+        mf = min(cfg.max_features, n)
+        tf = min(spec.max_features_per_tile, tile_n)
+        tk = min(spec.max_candidates_per_tile, tile_n)
+        ceil_mf, _ = self._ceilings(n)
+        ceil_tf, ceil_tk = self._ceilings(tile_n)
+        # Shared with run_tiled so cold and delta runs of one frame family
+        # agree on regrown capacities (equal capacities => equal plans).
+        memo_key = ("tiled", tuple(shape), grid, str(dtype), None)
+        if cfg.auto_regrow:
+            with self._lock:
+                got = self._grown.get(memo_key)
+            if got:
+                mf = max(mf, min(got[0], n))
+                tf = max(tf, min(got[1], tile_n))
+                tk = max(tk, min(got[2], tile_n))
+
+        kind, entry, dirty_mask = cache.lookup(
+            context, digests, capacities=(mf, tf, tk), tile_bytes=raw)
+        if kind == "hit":
+            return dataclasses.replace(
+                entry.result,
+                delta=delta_mod.DeltaStats(n_tiles, 0, "full"))
+        if kind == "partial":
+            dirty = np.flatnonzero(dirty_mask)
+            base = entry.state
+        else:
+            dirty = np.arange(n_tiles)
+            base = None
+
+        attempts = 0
+        while True:
+            if base is None:
+                base = delta_mod.empty_state(shape, grid, dtype, tf, tk)
+            bucket = delta_mod.dirty_bucket(len(dirty), n_tiles)
+            pv, pg, slots = delta_mod.dirty_stacks(source, grid, dirty,
+                                                   bucket)
+            ab = self.delta_ab_plan(tile_shape, dtype, bucket, tf, tk,
+                                    truncated)
+            fresh = ab(pv, pg, tvj) if truncated else ab(pv, pg)
+            mg = self.delta_merge_plan(shape, dtype, grid, bucket, mf, tf,
+                                       tk, truncated)
+            new_state, out = mg(base, fresh, slots, tvj) if truncated \
+                else mg(base, fresh, slots)
+            tile_of = bool(out.tile_overflow)
+            merge_of = bool(out.merge_overflow)
+            if not (tile_of or merge_of) or not cfg.auto_regrow \
+                    or attempts >= cfg.max_regrows:
+                break
+            nmf = min(mf * cfg.regrow_factor, ceil_mf) if merge_of else mf
+            ntf, ntk = tf, tk
+            if tile_of:
+                ntf = min(tf * cfg.regrow_factor, ceil_tf)
+                ntk = min(tk * cfg.regrow_factor, ceil_tk)
+            if (nmf, ntf, ntk) == (mf, tf, tk):
+                break   # at the ceilings: residual overflow is reported
+            with self._lock:
+                self.regrow_log.append({"kind": "delta",
+                                        "from": (mf, tf, tk),
+                                        "to": (nmf, ntf, ntk)})
+            if (ntf, ntk) != (tf, tk):
+                # Tile capacities grew: the cached/base state arrays are
+                # the wrong shape — recompute every tile from scratch.
+                dirty = np.arange(n_tiles)
+                base = None
+                kind = "miss"
+            mf, tf, tk = nmf, ntf, ntk
+            attempts += 1
+        if attempts:
+            with self._lock:
+                got = self._grown.get(memo_key)
+                if got is None or got < (mf, tf, tk):
+                    self._grown[memo_key] = (mf, tf, tk)
+
+        stats = RegrowStats(attempts, mf, tk, bool(tile_of or merge_of))
+        eff = cfg.replace(
+            max_features=mf,
+            tile=spec.replace(grid=grid, max_features_per_tile=tf,
+                              max_candidates_per_tile=tk))
+        hit = "partial" if kind == "partial" else "miss"
+        dstats = delta_mod.DeltaStats(n_tiles, int(len(np.unique(dirty))),
+                                      hit)
+        result = PHResult(out.diagram, eff, stats, truncate_value, dstats)
+        # put() on an existing (context, digests) key replaces in place, so
+        # pipeline retries / resumed rounds never double-insert.
+        cache.put(context, FrameCacheEntry(
+            digests=digests, state=new_state, result=result,
+            capacities=(mf, tf, tk), tile_bytes=raw))
+        return result
+
+    def run_sequence(self, frames, truncate_values=None, *, grid=None):
+        """Generator: :meth:`run_delta` over an iterable of frames (the
+        survey-stream entry point).  ``truncate_values`` is a scalar
+        applied to every frame or a per-frame sequence; yields one
+        :class:`PHResult` per frame as it completes, so a consumer can
+        stream diagrams while later frames hash."""
+        for i, frame in enumerate(frames):
+            if truncate_values is None:
+                tv = None
+            elif np.isscalar(truncate_values):
+                tv = truncate_values
+            else:
+                tv = truncate_values[i]
+            yield self.run_delta(frame, tv, grid=grid)
+
+    def delta_cache_stats(self) -> dict:
+        """Snapshot of the delta frame store's counters (zeros before the
+        first ``run_delta`` call)."""
+        with self._lock:
+            cache = self._delta_cache
+        if cache is None:
+            from repro.cache import CacheStats
+            return CacheStats().snapshot()
+        return cache.stats.snapshot()
 
     def run_distributed(self, images, *, ctx=None, image_size: int = 512,
                         strategy: str = "part_LPT",

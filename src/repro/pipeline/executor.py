@@ -221,8 +221,7 @@ class ShardedPHExecutor:
         rnd = staged.rnd
         if rnd.kind == "tiled":
             meta = rnd.entries[0][1]
-            res = self.engine.run_tiled(staged.tiles, staged.threshold,
-                                        ctx=self.ctx)
+            res = self._tiled(staged.tiles, staged.threshold)
             return {meta.image_id: jax.tree.map(np.asarray, res.diagram)}
 
         diags = self._dispatch_sharded(staged.batch, staged.tvals)
@@ -233,6 +232,18 @@ class ShardedPHExecutor:
                 d = unpad_diagram(d, staged.fixups[k], rnd.shape)
             out[meta.image_id] = d
         return out
+
+    def _tiled(self, image, threshold):
+        """One tiled-image dispatch: through the engine's delta path when
+        ``config.delta`` is enabled (bit-identical; retried/resumed rounds
+        of the same frame become cache hits instead of recomputes —
+        ``DiagramCache.put`` replaces in place, so a retry never
+        double-inserts), else the sharded ``run_tiled`` path."""
+        eng = self.engine
+        dspec = eng.config.delta
+        if dspec is not None and dspec.enabled:
+            return eng.run_delta(image, threshold)
+        return eng.run_tiled(image, threshold, ctx=self.ctx)
 
     def _dispatch_sharded(self, batch, tvals):
         """One sharded whole-image dispatch with the engine's regrow."""
@@ -289,8 +300,7 @@ class ShardedPHExecutor:
             seen[key] = i
             diags.append(jax.tree.map(
                 np.asarray,
-                self.engine.run_tiled(images[i], float(thresholds[i]),
-                                      ctx=self.ctx).diagram))
+                self._tiled(images[i], float(thresholds[i])).diagram))
         # Per-image regrow can leave different diagram capacities; pad the
         # rows to the round maximum before stacking into the (M, F) layout
         # a batched consumer expects.

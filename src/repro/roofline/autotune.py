@@ -41,12 +41,20 @@ class TunedParams:
     """One tuned knob assignment.  ``source`` records provenance:
     ``"default"`` (no cache entry — the config's own fields stand),
     ``"cache"`` (disk hit), ``"model"`` (roofline rank, measurement
-    failed or was skipped), ``"measured"`` (trial winner)."""
+    failed or was skipped), ``"measured"`` (trial winner).
+
+    ``tile_grid`` is the tuned tile decomposition for the *tiled* path
+    (``None`` = not tuned — the engine falls back to
+    ``repro.core.tiling.choose_grid``); searched separately by
+    :func:`autotune_grid` because its programs (per-tile phases + seam
+    merge) are disjoint from the whole-image stage graph the scalar
+    knobs re-block."""
 
     strip_rows: int = 8
     phase_c_block: int = 1024
     tournament_width: int = 2
     source: str = "default"
+    tile_grid: tuple[int, int] | None = None
 
 
 DEFAULTS = TunedParams()
@@ -92,12 +100,20 @@ def lookup(shape, dtype, *, path=None, backend: str | None = None
     entry = load_cache(path).get(cache_key(shape, str(dtype), backend))
     if not isinstance(entry, dict):
         return DEFAULTS
+    tg = entry.get("tile_grid")
+    try:
+        grid = None if tg is None else (int(tg[0]), int(tg[1]))
+    except (TypeError, ValueError, IndexError):
+        grid = None
     try:
         return TunedParams(int(entry["strip_rows"]),
                            int(entry["phase_c_block"]),
-                           int(entry["tournament_width"]), "cache")
+                           int(entry["tournament_width"]), "cache", grid)
     except (KeyError, TypeError, ValueError):
-        return DEFAULTS
+        # Grid-only entry (autotune_grid ran, the scalar search did not):
+        # keep source="default" so the caller's own scalar fields stand,
+        # but still surface the tuned grid.
+        return dataclasses.replace(DEFAULTS, tile_grid=grid)
 
 
 def candidate_space(shape) -> list[TunedParams]:
@@ -189,7 +205,10 @@ def autotune(shape, dtype, *, path=None, backend: str | None = None,
     dtype = str(dtype)
     key = cache_key(shape, dtype, backend)
     cache = load_cache(path)
-    if key in cache:
+    prior = cache.get(key)
+    if isinstance(prior, dict) and "strip_rows" in prior:
+        # Scalar knobs already tuned (a grid-only entry from
+        # autotune_grid does not short-circuit the scalar search).
         return lookup(shape, dtype, path=path, backend=backend)
 
     cands = list(space) if space is not None else candidate_space(shape)
@@ -215,9 +234,168 @@ def autotune(shape, dtype, *, path=None, backend: str | None = None,
     else:
         best = dataclasses.replace(scored[0][1], source="model")
 
-    cache[key] = {"strip_rows": best.strip_rows,
+    entry = cache.get(key)
+    if not isinstance(entry, dict):
+        entry = {}
+    entry.update({"strip_rows": best.strip_rows,
                   "phase_c_block": best.phase_c_block,
                   "tournament_width": best.tournament_width,
-                  "source": best.source}
+                  "source": best.source})
+    cache[key] = entry
     save_cache(cache, path)
+    if "tile_grid" in entry:
+        try:
+            tg = entry["tile_grid"]
+            best = dataclasses.replace(
+                best, tile_grid=(int(tg[0]), int(tg[1])))
+        except (TypeError, ValueError, IndexError):
+            pass
     return best
+
+
+# ---------------------------------------------------------------------------
+# Tile-grid search (the tiled/delta path's decomposition knob)
+# ---------------------------------------------------------------------------
+
+def grid_candidates(shape, *, max_tile_pixels: int | None = None,
+                    limit: int = 6) -> list[tuple[int, int]]:
+    """Candidate tile grids for one image shape: dividing ``(gr, gc)``
+    pairs with at least 2 and at most 1024 tiles, tiles no thinner than
+    8 pixels, optionally bounded by ``max_tile_pixels``.  Pre-ranked by
+    (square-ish tiles, fewer tiles) and truncated to ``limit`` — the
+    per-tile cost model then ranks the survivors, so the heuristic only
+    bounds compile work, never picks the winner."""
+    h, w = (int(shape[0]), int(shape[1]))
+    cands = []
+    for gr in (d for d in range(1, h + 1) if h % d == 0):
+        tr = h // gr
+        if tr < 8:
+            break
+        for gc in (d for d in range(1, w + 1) if w % d == 0):
+            tc = w // gc
+            if tc < 8:
+                break
+            n_tiles = gr * gc
+            if not 2 <= n_tiles <= 1024:
+                continue
+            if max_tile_pixels is not None and tr * tc > max_tile_pixels:
+                continue
+            cands.append((abs(tr - tc), n_tiles, (gr, gc)))
+    cands.sort()
+    return [g for _, _, g in cands[:max(1, limit)]]
+
+
+def grid_model_score(shape, dtype, grid) -> float:
+    """Byte-traffic model for one tile grid: total peak bytes of the
+    per-tile phase programs across all tiles plus the O(boundary) seam
+    table (:func:`repro.core.tiling.per_tile_cost` supplies the per-tile
+    footprint).  A pure compile-time ranking — relative ordering is all
+    that is used, mirroring :func:`model_score`."""
+    from repro.core.tiling import _ring_coords, per_tile_cost
+
+    h, w = (int(shape[0]), int(shape[1]))
+    gr, gc = grid
+    tr, tc = h // gr, w // gc
+    n_tiles = gr * gc
+    c = per_tile_cost((tr, tc), dtype, n_tiles)
+    per_tile = (c["phase_a"]["peak_bytes_est"]
+                + c["phase_b"]["peak_bytes_est"])
+    table = n_tiles * len(_ring_coords(tr, tc)[0]) * 8
+    return float(n_tiles * per_tile + table)
+
+
+def _build_tiled(shape, dtype, grid):
+    """jit-wrapped tiled PH program pinned to ``grid`` on the same
+    worst-case stride-2 peak input :func:`_build` uses."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.packed_keys import resolve_merge_keys
+    from repro.core.tiling import tiled_pixhomology
+
+    h, w = (int(shape[0]), int(shape[1]))
+    n = h * w
+    gr, gc = grid
+    tile_n = (h // gr) * (w // gc)
+    mk = resolve_merge_keys("packed", jnp.dtype(dtype))
+    kw = dict(grid=(gr, gc), max_features=min(8192, n),
+              tile_max_features=min(2048, tile_n),
+              tile_max_candidates=min(8192, tile_n), merge_keys=mk)
+    fn = jax.jit(lambda im: tiled_pixhomology(im, None, **kw))
+    img = np.zeros((h, w), np.dtype(dtype))
+    peaks = img[::2, ::2]
+    peaks[...] = 1 + np.arange(peaks.size).reshape(peaks.shape)
+    return fn, jnp.asarray(img), mk
+
+
+def measure_grid(shape, dtype, grid, *, trials: int = 3) -> float:
+    """Best-of-``trials`` steady-state seconds of the tiled program under
+    ``grid`` (first call compiles and is excluded)."""
+    import jax
+
+    from repro.core.packed_keys import key_scope
+    fn, x, mk = _build_tiled(shape, dtype, grid)
+    with key_scope(mk):
+        jax.block_until_ready(fn(x))        # compile + warm
+        best = float("inf")
+        for _ in range(max(1, trials)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_grid(shape, dtype, *, path=None, backend: str | None = None,
+                  max_tile_pixels: int | None = None, measure_top: int = 2,
+                  trials: int = 2,
+                  space: list[tuple[int, int]] | None = None
+                  ) -> tuple[int, int] | None:
+    """Search, persist, and return the tile grid for one shape family.
+
+    Rides the same disk cache entry as :func:`autotune` (the
+    ``tile_grid`` field of :func:`cache_key`'s entry), so the engine
+    recovers both through one :func:`lookup` and both fold into plan
+    keys.  A pre-existing ``tile_grid`` short-circuits; if every
+    candidate fails, ``None`` comes back and nothing is persisted (the
+    engine then falls through to ``choose_grid`` — graceful fallback,
+    same contract as :func:`lookup`).
+    """
+    shape = (int(shape[0]), int(shape[1]))
+    dtype = str(dtype)
+    key = cache_key(shape, dtype, backend)
+    cache = load_cache(path)
+    entry = cache.get(key)
+    if isinstance(entry, dict) and entry.get("tile_grid") is not None:
+        return lookup(shape, dtype, path=path, backend=backend).tile_grid
+
+    cands = list(space) if space is not None else \
+        grid_candidates(shape, max_tile_pixels=max_tile_pixels)
+    scored = []
+    for g in cands:
+        try:
+            scored.append((grid_model_score(shape, dtype, g), g))
+        except Exception:   # candidate failed to compile: skip it
+            continue
+    if not scored:
+        return None
+    scored.sort()
+
+    timed = []
+    for _, g in scored[:max(0, measure_top)]:
+        try:
+            timed.append((measure_grid(shape, dtype, g, trials=trials), g))
+        except Exception:
+            continue
+    if timed and trials > 0:
+        timed.sort()
+        best, src = timed[0][1], "measured"
+    else:
+        best, src = scored[0][1], "model"
+
+    if not isinstance(entry, dict):
+        entry = {}
+    entry.update({"tile_grid": [int(best[0]), int(best[1])],
+                  "tile_grid_source": src})
+    cache[key] = entry
+    save_cache(cache, path)
+    return (int(best[0]), int(best[1]))

@@ -27,6 +27,13 @@ Metric definitions (mirrored in ``DESIGN.md`` §8):
     Submissions refused at admission (queue at ``max_queue`` under the
     ``"reject"`` policy).  The saturation section of
     ``benchmarks/serve_bench.py`` exists to drive this above zero.
+``cache_hits`` / ``cache_misses``
+    Serving cache-tier outcomes: a hit is a submit whose exact request
+    hash (image bytes + shape + dtype + threshold) matched a finished
+    result — the future resolves on the submit thread and the request
+    never enters a queue.  Eviction counts live on the
+    :class:`repro.cache.LRUCache` itself and are merged into
+    ``PHServer.stats()``'s ``cache`` section.
 
 Percentiles come from a fixed-capacity ring buffer (:class:`Reservoir`)
 — O(capacity) memory however long the daemon runs, exact percentiles
@@ -152,6 +159,8 @@ class ServeMetrics:
         self.completed = 0
         self.failed = 0
         self.rejected = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def bucket(self, bucket: tuple[int, int]) -> BucketMetrics:
         key = (int(bucket[0]), int(bucket[1]))
@@ -173,6 +182,17 @@ class ServeMetrics:
         with self._lock:
             m.rejected += 1
             self.rejected += 1
+
+    def record_cache(self, *, hit: bool) -> None:
+        """One serving cache-tier lookup outcome (hits also count as a
+        submitted+completed request: the client got a result)."""
+        with self._lock:
+            if hit:
+                self.cache_hits += 1
+                self.submitted += 1
+                self.completed += 1
+            else:
+                self.cache_misses += 1
 
     def record_batch(self, bucket, *, queue_waits, e2e, batch_s) -> None:
         """One successful dispatch: ``queue_waits``/``e2e`` carry one
@@ -209,7 +229,9 @@ class ServeMetrics:
                    "completed": self.completed,
                    "failed": self.failed,
                    "rejected": self.rejected,
-                   "batch_cap": self.batch_cap}
+                   "batch_cap": self.batch_cap,
+                   "cache": {"hits": self.cache_hits,
+                             "misses": self.cache_misses}}
         top["buckets"] = {bucket_label(k): m.snapshot(self.batch_cap)
                           for k, m in sorted(buckets.items())}
         return top

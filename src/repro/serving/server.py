@@ -28,6 +28,19 @@ with the warmup dummy that pre-walks the regrow chain
 nothing; ``steady_state_traces()`` measures exactly that and
 ``benchmarks/serve_bench.py`` gates on it.
 
+**Serving cache tier** (active when the engine's ``config.delta`` is
+enabled): ``submit`` hashes the request — image bytes + shape + dtype +
+threshold — and an exact match against a bounded
+:class:`repro.cache.LRUCache` of finished results resolves the future on
+the *submit thread*; the request never enters a queue, never pads a
+batch, never touches the device.  Misses dispatch normally and insert on
+completion.  Near-duplicate requests (same shape, few changed tiles)
+ride the engine's delta path instead: dispatch routes them through
+:meth:`repro.ph.PHEngine.run_delta`, so a survey stream hitting the
+daemon re-computes only its changed tiles.  Hit/miss counters live in
+:class:`repro.serving.metrics.ServeMetrics`; evictions on the LRU
+itself; both surface in :meth:`PHServer.stats` under ``"cache"``.
+
 **Admission control**: each bucket queue is bounded by ``max_queue``.
 At the bound, the ``"reject"`` policy raises :class:`AdmissionError`
 carrying a ``retry_after_s`` hint (estimated from the queue depth and
@@ -43,6 +56,7 @@ from more threads is also safe — the daemon just never needs to.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from collections import deque
@@ -50,12 +64,18 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.cache import LRUCache
 from repro.ph.config import ServeSpec
 from repro.ph.engine import PHEngine, PHResult
 from repro.pipeline.scheduler import assign_bucket
 from repro.serving.metrics import ServeMetrics
 
 __all__ = ["AdmissionError", "PHServer"]
+
+# Bound on the exact-result tier: entries are host-side diagram rows
+# (KBs), so the tier can afford far more entries than the device-resident
+# delta frame store (DeltaSpec.cache_entries).
+CACHE_TIER_ENTRIES = 256
 
 
 class AdmissionError(RuntimeError):
@@ -70,14 +90,16 @@ class AdmissionError(RuntimeError):
 
 
 class _Request:
-    __slots__ = ("image", "truncate_value", "bucket", "future", "t_submit")
+    __slots__ = ("image", "truncate_value", "bucket", "future", "t_submit",
+                 "cache_key")
 
-    def __init__(self, image, truncate_value, bucket):
+    def __init__(self, image, truncate_value, bucket, cache_key=None):
         self.image = image
         self.truncate_value = truncate_value
         self.bucket = bucket
         self.future: Future = Future()
         self.t_submit = time.perf_counter()
+        self.cache_key = cache_key
 
 
 class PHServer:
@@ -114,6 +136,13 @@ class PHServer:
                 if engine.config.serve is not None else ServeSpec()
         self.spec: ServeSpec = spec
         self.metrics = ServeMetrics(self.spec.batch_cap)
+        # Cache tier: active only when the engine opts into delta compute
+        # (config.delta enabled) — exact request hashes short-circuit at
+        # submit, near-duplicates dispatch through run_delta.
+        dspec = engine.config.delta
+        self._delta_serving = dspec is not None and dspec.enabled
+        self._cache: LRUCache | None = \
+            LRUCache(CACHE_TIER_ENTRIES) if self._delta_serving else None
         self._cond = threading.Condition()
         self._queues: dict[tuple[int, int], deque[_Request]] = {}
         if self.spec.buckets is not None:
@@ -215,7 +244,23 @@ class PHServer:
             raise ValueError(
                 f"image shape {img.shape} exceeds the largest serve "
                 f"bucket {self.spec.buckets[-1]}")
-        req = _Request(img, truncate_value, bucket)
+        cache_key = None
+        if self._cache is not None:
+            cache_key = self._request_key(img, truncate_value)
+            with self._cond:
+                accepting = self._accepting
+            if accepting:
+                got = self._cache.get(cache_key)
+                if got is not None:
+                    # Exact-hash hit: the computation is deterministic, so
+                    # the stored PHResult *is* this request's answer.  No
+                    # queue, no batch, no device work.
+                    self.metrics.record_cache(hit=True)
+                    fut: Future = Future()
+                    fut.set_result(got)
+                    return fut
+                self.metrics.record_cache(hit=False)
+        req = _Request(img, truncate_value, bucket, cache_key)
         with self._cond:
             if not self._accepting:
                 raise RuntimeError("PHServer is not accepting requests")
@@ -241,11 +286,38 @@ class PHServer:
 
     def stats(self) -> dict:
         """Serving metrics snapshot + engine plan stats +
-        ``steady_state_traces``."""
+        ``steady_state_traces`` + cache-tier counters."""
         snap = self.metrics.snapshot()
         snap["engine"] = self.engine.plan_stats()
         snap["steady_state_traces"] = self.steady_state_traces()
+        snap["cache"] = self.cache_stats()
         return snap
+
+    # -- cache tier --------------------------------------------------------
+
+    @staticmethod
+    def _request_key(img: np.ndarray, truncate_value) -> tuple:
+        """Exact request identity: content digest + shape + dtype +
+        threshold.  Equal keys imply bit-identical results (the engine is
+        deterministic), so a cached result can stand in for compute."""
+        digest = hashlib.blake2b(np.ascontiguousarray(img).tobytes(),
+                                 digest_size=16).digest()
+        return (img.shape, str(img.dtype), digest,
+                None if truncate_value is None else float(truncate_value))
+
+    def cache_stats(self) -> dict:
+        """Cache-tier counters: submit-side hit/miss (from
+        :class:`ServeMetrics`), the LRU's own insert/evict counters, and
+        the engine's delta frame-store counters."""
+        out = {"enabled": self._delta_serving,
+               "hits": self.metrics.cache_hits,
+               "misses": self.metrics.cache_misses}
+        if self._cache is not None:
+            lru = self._cache.stats
+            out.update(entries=len(self._cache), inserts=lru.inserts,
+                       evictions=lru.evictions)
+        out["delta_store"] = self.engine.delta_cache_stats()
+        return out
 
     # -- daemon ------------------------------------------------------------
 
@@ -292,6 +364,9 @@ class PHServer:
         """Run one bucket micro-batch and resolve its futures.  A raise
         anywhere in compute fails *this round's* futures only — the loop
         (and every other queued request) carries on."""
+        if self._delta_serving:
+            self._dispatch_delta(bucket, reqs)
+            return
         t0 = time.perf_counter()
         imgs = [r.image for r in reqs]
         tvs = [r.truncate_value for r in reqs]
@@ -302,7 +377,10 @@ class PHServer:
             imgs = imgs + [imgs[0]] * pad
             tvs = tvs + [tvs[0]] * pad
         try:
-            out = self.engine.run_batch(imgs, tvs, bucket=bucket)
+            # dedupe=False: the warmed plans require the fixed dispatch
+            # shape; exact duplicates are the cache tier's job anyway.
+            out = self.engine.run_batch(imgs, tvs, bucket=bucket,
+                                        dedupe=False)
         except Exception as exc:        # noqa: BLE001 — isolate the round
             for r in reqs:
                 r.future.set_exception(exc)
@@ -321,3 +399,31 @@ class PHServer:
             queue_waits=[t0 - r.t_submit for r in reqs],
             e2e=[t1 - r.t_submit for r in reqs],
             batch_s=t1 - t0)
+
+    def _dispatch_delta(self, bucket, reqs) -> None:
+        """Delta-serving round: each request runs through
+        :meth:`PHEngine.run_delta` — near-duplicates of recent frames
+        recompute only their dirty tiles — and the finished result is
+        inserted into the exact-hash tier so an identical future request
+        never reaches dispatch at all.  A per-request raise fails that
+        future only."""
+        t0 = time.perf_counter()
+        done: list[_Request] = []
+        for r in reqs:
+            try:
+                res = self.engine.run_delta(r.image, r.truncate_value)
+            except Exception as exc:    # noqa: BLE001 — isolate the request
+                r.future.set_exception(exc)
+                self.metrics.record_failure(bucket, 1)
+                continue
+            if self._cache is not None and r.cache_key is not None:
+                self._cache.put(r.cache_key, res)
+            r.future.set_result(res)
+            done.append(r)
+        t1 = time.perf_counter()
+        if done:
+            self.metrics.record_batch(
+                bucket,
+                queue_waits=[t0 - r.t_submit for r in done],
+                e2e=[t1 - r.t_submit for r in done],
+                batch_s=t1 - t0)

@@ -279,3 +279,234 @@ def test_gate_serve_trajectory(tmp_path):
     fails = pg.run_gate("serve", str(cur), str(base))
     assert any("steady_state_traces" in f and "baseline" in f
                for f in fails)
+
+
+# ---------------------------------------------------------------------------
+# tile-grid search: candidates, persistence, engine folding
+# ---------------------------------------------------------------------------
+
+def test_grid_candidates_divide_and_rank():
+    got = at.grid_candidates((128, 128))
+    assert got[:4] == [(2, 2), (4, 4), (8, 8), (16, 16)]
+    for gr, gc in at.grid_candidates((96, 64), limit=12):
+        assert 96 % gr == 0 and 64 % gc == 0
+        assert 96 // gr >= 8 and 64 // gc >= 8
+        assert 2 <= gr * gc <= 1024
+    # max_tile_pixels caps the coarse end of the space
+    for gr, gc in at.grid_candidates((128, 128), max_tile_pixels=32 * 32):
+        assert (128 // gr) * (128 // gc) <= 32 * 32
+    assert len(at.grid_candidates((128, 128), limit=2)) == 2
+
+
+def test_grid_model_score_orders_by_traffic():
+    # More tiles -> more halo+table bytes for one image: the model must
+    # rank a finer grid as costlier on a fixed shape.
+    a = at.grid_model_score((128, 128), "float32", (2, 2))
+    b = at.grid_model_score((128, 128), "float32", (8, 8))
+    assert 0 < a < b
+
+
+def test_grid_only_cache_entry_keeps_default_scalars(tmp_path):
+    path = tmp_path / "cache.json"
+    key = at.cache_key((64, 64), "float32", "cpu")
+    at.save_cache({key: {"tile_grid": [4, 4],
+                         "tile_grid_source": "model"}}, path)
+    got = at.lookup((64, 64), "float32", path=path, backend="cpu")
+    assert got.tile_grid == (4, 4)
+    # scalar knobs keep config defaults: source stays "default" so the
+    # engine does not fold DEFAULTS over the user's scalar settings
+    assert got.source == "default"
+    assert got.strip_rows == at.DEFAULTS.strip_rows
+
+
+def test_autotune_grid_persists_and_short_circuits(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    monkeypatch.setattr(at, "grid_model_score",
+                        lambda s, d, g: float(g[0] * g[1]))
+    monkeypatch.setattr(at, "measure_grid",
+                        lambda s, d, g, trials: 0.01 * g[0])
+    got = at.autotune_grid((64, 64), "float32", path=path, backend="cpu",
+                           measure_top=2, trials=1,
+                           space=[(2, 2), (4, 4)])
+    assert got == (2, 2)
+    entry = json.loads(path.read_text())["64x64|float32|cpu"]
+    assert entry["tile_grid"] == [2, 2]
+    assert entry["tile_grid_source"] == "measured"
+
+    def boom(*a, **k):
+        raise AssertionError("existing tile_grid must short-circuit")
+    monkeypatch.setattr(at, "grid_model_score", boom)
+    monkeypatch.setattr(at, "measure_grid", boom)
+    assert at.autotune_grid((64, 64), "float32", path=path,
+                            backend="cpu") == (2, 2)
+
+
+def test_autotune_grid_model_only_and_all_fail(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    monkeypatch.setattr(at, "grid_model_score",
+                        lambda s, d, g: float(g[0]))
+    monkeypatch.setattr(
+        at, "measure_grid",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError("no trials")))
+    got = at.autotune_grid((64, 64), "float32", path=path, backend="cpu",
+                           measure_top=0, space=[(4, 4), (2, 2)])
+    assert got == (2, 2)
+    entry = json.loads(path.read_text())["64x64|float32|cpu"]
+    assert entry["tile_grid_source"] == "model"
+    # every candidate failing -> None, nothing persisted
+    monkeypatch.setattr(
+        at, "grid_model_score",
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom")))
+    assert at.autotune_grid((32, 32), "float32", path=path,
+                            backend="cpu", space=[(2, 2)]) is None
+    assert "32x32|float32|cpu" not in json.loads(path.read_text())
+
+
+def test_autotune_grid_and_scalars_share_one_entry(tmp_path, monkeypatch):
+    # Both searches merge into ONE cache entry per shape family, and one
+    # lookup recovers both (scalars flip source to "cache").
+    path = tmp_path / "cache.json"
+    monkeypatch.setattr(at, "grid_model_score", lambda s, d, g: 1.0)
+    monkeypatch.setattr(at, "measure_grid", lambda s, d, g, trials: 0.01)
+    at.autotune_grid((16, 16), "float32", path=path, backend="cpu",
+                     trials=1, space=[(2, 2)])
+    monkeypatch.setattr(at, "model_score", lambda s, d, p: 1.0)
+    monkeypatch.setattr(at, "measure", lambda s, d, p, trials: 0.01)
+    at.autotune((16, 16), "float32", path=path, backend="cpu",
+                measure_top=1, trials=1,
+                space=[at.TunedParams(4, 256, 2, "candidate")])
+    raw = json.loads(path.read_text())
+    assert list(raw) == ["16x16|float32|cpu"]
+    entry = raw["16x16|float32|cpu"]
+    assert entry["tile_grid"] == [2, 2] and entry["strip_rows"] == 4
+    got = at.lookup((16, 16), "float32", path=path, backend="cpu")
+    assert got.tile_grid == (2, 2) and got.strip_rows == 4
+    assert got.source == "cache"
+
+
+def test_engine_folds_tuned_grid_into_tiled_runs(tmp_path):
+    rng = np.random.default_rng(3)
+    img = rng.standard_normal((32, 32)).astype(np.float32)
+    path = tmp_path / "cache.json"
+    at.save_cache({at.cache_key((32, 32), "float32", None): {
+        "tile_grid": [2, 2], "tile_grid_source": "model"}}, path)
+    eng = _engine(path)
+    res = eng.run_tiled(img)
+    assert tuple(res.config.tile.grid) == (2, 2)
+    # bit-identical to pinning the same grid by hand
+    want = PHEngine(PHConfig(max_features=256, max_candidates=256,
+                             merge_impl="boruvka")).run_tiled(img,
+                                                              grid=(2, 2))
+    for f in res.diagram._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(res.diagram, f)),
+                                      np.asarray(getattr(want.diagram, f)),
+                                      f)
+    # an explicit spec grid always wins over the tuned one
+    from repro.ph import TileSpec
+    pinned = PHEngine(PHConfig(max_features=256, max_candidates=256,
+                               merge_impl="boruvka", autotune=True,
+                               autotune_cache=str(path),
+                               tile=TileSpec(grid=(4, 4))))
+    assert tuple(pinned.run_tiled(img).config.tile.grid) == (4, 4)
+
+
+def test_engine_ignores_stale_tuned_grid(tmp_path):
+    # A cached grid that no longer divides the shape must be skipped,
+    # not crash the run.
+    rng = np.random.default_rng(4)
+    img = rng.standard_normal((32, 32)).astype(np.float32)
+    path = tmp_path / "cache.json"
+    at.save_cache({at.cache_key((32, 32), "float32", None): {
+        "tile_grid": [5, 5], "tile_grid_source": "model"}}, path)
+    res = _engine(path).run_tiled(img)
+    assert 32 % res.config.tile.grid[0] == 0
+
+
+def test_autotune_grid_real_search_smoke(tmp_path):
+    path = tmp_path / "cache.json"
+    got = at.autotune_grid((16, 16), "float32", path=path,
+                           measure_top=1, trials=1, space=[(2, 2)])
+    assert got == (2, 2)
+    assert at.lookup((16, 16), "float32",
+                     path=path).tile_grid == (2, 2)
+
+
+# ---------------------------------------------------------------------------
+# pipeline gate: delta rows + serve cache tier
+# ---------------------------------------------------------------------------
+
+_DELTA_ROW = {
+    "name": "pipeline/delta_frame_seq_256", "size": 256,
+    "mean_dirty_frac": 0.0625, "delta_speedup_10pct": 1.9,
+    "delta_bit_identical": True, "delta_full_hit_ok": True,
+    "cache": {"hits": 2, "partial_hits": 9, "misses": 3,
+              "inserts": 12, "evictions": 4, "collisions": 0},
+}
+
+
+def _gate_pipeline(tmp_path, cur_rows, base_rows=None):
+    pg = _load_perf_gate()
+    cur = tmp_path / "pipe.json"
+    cur.write_text(json.dumps({"rows": cur_rows}))
+    base = None
+    if base_rows is not None:
+        basep = tmp_path / "pipe_base.json"
+        basep.write_text(json.dumps({"rows": base_rows}))
+        base = str(basep)
+    return pg.run_gate("pipeline", str(cur), base)
+
+
+def test_gate_pipeline_passes_and_requires_delta_rows(tmp_path):
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW], [_DELTA_ROW]) == []
+    fails = _gate_pipeline(tmp_path, [])
+    assert any("no delta frame-sequence rows" in f for f in fails)
+
+
+def test_gate_pipeline_fails_on_identity_break(tmp_path):
+    fails = _gate_pipeline(
+        tmp_path, [dict(_DELTA_ROW, delta_bit_identical=False)])
+    assert any("diverged from cold runs" in f for f in fails)
+    fails = _gate_pipeline(
+        tmp_path, [dict(_DELTA_ROW, delta_full_hit_ok=False)])
+    assert any("did not full-hit" in f for f in fails)
+    no_partial = dict(_DELTA_ROW, cache=dict(_DELTA_ROW["cache"],
+                                             partial_hits=0))
+    fails = _gate_pipeline(tmp_path, [no_partial])
+    assert any("no partial hits" in f for f in fails)
+
+
+def test_gate_pipeline_full_scale_floor(tmp_path):
+    big = dict(_DELTA_ROW, name="pipeline/delta_frame_seq_1024",
+               size=1024, delta_speedup_10pct=6.3)
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW, big]) == []
+    slow = dict(big, delta_speedup_10pct=3.0)
+    fails = _gate_pipeline(tmp_path, [slow])
+    assert any("< 5x at full scale" in f for f in fails)
+    too_dirty = dict(big, mean_dirty_frac=0.25)
+    fails = _gate_pipeline(tmp_path, [too_dirty])
+    assert any("> 10%" in f for f in fails)
+    # smoke-scale rows only need to not be slower than cold
+    slower = dict(_DELTA_ROW, delta_speedup_10pct=0.7)
+    fails = _gate_pipeline(tmp_path, [slower])
+    assert any("delta slower than" in f for f in fails)
+
+
+def test_gate_pipeline_trajectory_on_speedup(tmp_path):
+    regressed = dict(_DELTA_ROW, delta_speedup_10pct=0.9)  # < 0.5 x 1.9
+    fails = _gate_pipeline(tmp_path, [regressed], [_DELTA_ROW])
+    assert any("delta_speedup_10pct" in f for f in fails)
+    flipped = dict(_DELTA_ROW, delta_bit_identical=False)
+    fails = _gate_pipeline(tmp_path, [flipped], [_DELTA_ROW])
+    assert any("delta_bit_identical" in f for f in fails)
+
+
+def test_gate_serve_cache_tier_rule(tmp_path):
+    pg = _load_perf_gate()
+    # pre-delta artifact (no cache section): rule skips
+    assert pg._serve_cache_tier({}) is None
+    ok = {"cache": {"steady_state_hits": 12, "misses": 4}}
+    assert pg._serve_cache_tier(ok) is None
+    cold = {"cache": {"steady_state_hits": 0, "misses": 4}}
+    assert "no exact-hash cache hits" in pg._serve_cache_tier(cold)
+    no_miss = {"cache": {"steady_state_hits": 3, "misses": 0}}
+    assert "no misses" in pg._serve_cache_tier(no_miss)

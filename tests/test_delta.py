@@ -1,0 +1,626 @@
+"""Delta recompute: content-hashed tile cache, O(changed-area) re-runs,
+batch dedupe, and the serving cache tier.
+
+The load-bearing property throughout: ``run_delta`` is **bit-identical**
+to a cold ``run_tiled`` of the same frame for *every* dirty mask — 0%
+(full hit), a single tile, everything, a transient straddling a seam, a
+seam-elder flip, and randomized masks.  Plus: adversarial hash-collision
+injection (verify mode detects and recomputes), cache idempotence under
+pipeline retry/resume (no poisoning, no double-insert), ``run_batch``
+content-hash dedupe, and the PHServer exact-hash tier.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.cache import CacheStats, DiagramCache, FrameCacheEntry, LRUCache
+from repro.core import delta as dm
+from repro.core.tiling import load_tile_stacks
+from repro.data.astro import FrameSequence
+from repro.ph import (DeltaSpec, FilterLevel, PHConfig, PHEngine, ServeSpec,
+                      TileSpec)
+
+GRID = (4, 4)
+SIZE = 48          # 12x12 tiles — fast compiles, 16 tiles to classify
+
+
+def _img(seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(SIZE, SIZE)).astype(np.float32)
+
+
+def _engine(**kw):
+    kw.setdefault("filter_level", FilterLevel.VANILLA)
+    kw.setdefault("delta", DeltaSpec(cache_entries=64))
+    kw.setdefault("tile", TileSpec(grid=GRID, max_features_per_tile=64,
+                                   max_candidates_per_tile=64))
+    return PHEngine(PHConfig(**kw))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """Shared engine: one plan cache across the bit-identity matrix."""
+    return _engine()
+
+
+def _assert_same(a, b, msg=""):
+    for field in a.diagram._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.diagram, field)),
+            np.asarray(getattr(b.diagram, field)), err_msg=f"{msg}:{field}")
+
+
+def _perturb(img, tiles, bump=5.0):
+    """+bump at the center of each listed tile — strictly interior, so
+    exactly those tiles' halo windows change."""
+    out = img.copy()
+    tr, tc = SIZE // GRID[0], SIZE // GRID[1]
+    for t in tiles:
+        r0, c0 = (t // GRID[1]) * tr, (t % GRID[1]) * tc
+        out[r0 + tr // 2, c0 + tc // 2] += bump
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache stores (no jax)
+# ---------------------------------------------------------------------------
+
+def test_lru_cache_eviction_and_counters():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refreshes "a"
+    c.put("c", 3)                   # evicts "b" (stalest)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.stats.evictions == 1 and c.stats.misses == 1
+    assert c.stats.hits == 3 and len(c) == 2
+
+
+def test_lru_cache_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        LRUCache(0)
+    with pytest.raises(ValueError):
+        DiagramCache(0)
+
+
+def _entry(digests, caps=(8, 4, 4), tile_bytes=None):
+    return FrameCacheEntry(digests=tuple(digests), state="state",
+                           result="result", capacities=caps,
+                           tile_bytes=tile_bytes)
+
+
+def test_diagram_cache_classifies_hit_partial_miss():
+    c = DiagramCache(4)
+    ctx = ("ctx",)
+    c.put(ctx, _entry([b"a", b"b", b"c"]))
+    kind, entry, mask = c.lookup(ctx, (b"a", b"b", b"c"), (8, 4, 4))
+    assert kind == "hit" and entry.result == "result" and mask is None
+    kind, entry, mask = c.lookup(ctx, (b"a", b"X", b"c"), (8, 4, 4))
+    assert kind == "partial"
+    np.testing.assert_array_equal(mask, [False, True, False])
+    kind, entry, mask = c.lookup(ctx, (b"x", b"y", b"z"), (8, 4, 4))
+    assert kind == "miss" and entry is None and mask is None
+    # different context: never matched
+    kind, _, _ = c.lookup(("other",), (b"a", b"b", b"c"), (8, 4, 4))
+    assert kind == "miss"
+    assert c.stats.hits == 1 and c.stats.partial_hits == 1
+    assert c.stats.misses == 2
+
+
+def test_diagram_cache_partial_requires_equal_capacities():
+    c = DiagramCache(4)
+    ctx = ("ctx",)
+    c.put(ctx, _entry([b"a", b"b"], caps=(8, 4, 4)))
+    kind, _, _ = c.lookup(ctx, (b"a", b"X"), (16, 8, 8))
+    assert kind == "miss"           # state arrays are shape-static
+    # ... but a full hit returns the finished result regardless
+    kind, _, _ = c.lookup(ctx, (b"a", b"b"), (16, 8, 8))
+    assert kind == "hit"
+
+
+def test_diagram_cache_picks_best_candidate_and_evicts_lru():
+    c = DiagramCache(2)
+    ctx = ("ctx",)
+    c.put(ctx, FrameCacheEntry((b"a", b"b", b"c"), "s1", "r1", (8, 4, 4)))
+    c.put(ctx, FrameCacheEntry((b"a", b"X", b"Y"), "s2", "r2", (8, 4, 4)))
+    kind, entry, mask = c.lookup(ctx, (b"a", b"b", b"Z"), (8, 4, 4))
+    assert kind == "partial" and entry.result == "r1"   # 2 clean > 1 clean
+    c.put(ctx, FrameCacheEntry((b"q", b"r", b"s"), "s3", "r3", (8, 4, 4)))
+    assert len(c) == 2 and c.stats.evictions == 1
+    # the partial hit refreshed r1, so the s2 entry was the one evicted
+    kind, entry, _ = c.lookup(ctx, (b"a", b"b", b"c"), (8, 4, 4))
+    assert kind == "hit" and entry.result == "r1"
+
+
+def test_diagram_cache_put_replaces_in_place():
+    c = DiagramCache(4)
+    ctx = ("ctx",)
+    c.put(ctx, _entry([b"a"]))
+    c.put(ctx, FrameCacheEntry((b"a",), "state2", "result2", (8, 4, 4)))
+    assert len(c) == 1 and c.stats.inserts == 2
+    _, entry, _ = c.lookup(ctx, (b"a",), (8, 4, 4))
+    assert entry.result == "result2"
+
+
+def test_cache_stats_snapshot_roundtrips():
+    s = CacheStats(hits=3, misses=1)
+    assert s.snapshot() == {"hits": 3, "partial_hits": 0, "misses": 1,
+                            "inserts": 0, "evictions": 0, "collisions": 0}
+
+
+# ---------------------------------------------------------------------------
+# Hashing / plumbing
+# ---------------------------------------------------------------------------
+
+def test_dirty_bucket_is_pow2_clamped():
+    assert dm.dirty_bucket(1, 16) == 1
+    assert dm.dirty_bucket(3, 16) == 4
+    assert dm.dirty_bucket(9, 16) == 16
+    assert dm.dirty_bucket(5, 6) == 6       # clamped to the tile count
+    with pytest.raises(ValueError):
+        dm.dirty_bucket(0, 16)
+
+
+def test_frame_digests_host_and_staged_agree():
+    img = _img(7)
+
+    class Prov:
+        shape = img.shape
+        dtype = np.float32
+
+        def halo_tile(self, t, grid, fill=-np.inf):
+            gr, gc = grid
+            tr, tc = img.shape[0] // gr, img.shape[1] // gc
+            out = np.full((tr + 2, tc + 2), fill, np.float32)
+            r0, c0 = (t // gc) * tr, (t % gc) * tc
+            y0, y1 = max(0, r0 - 1), min(img.shape[0], r0 + tr + 1)
+            x0, x1 = max(0, c0 - 1), min(img.shape[1], c0 + tc + 1)
+            out[y0 - (r0 - 1):y1 - (r0 - 1),
+                x0 - (c0 - 1):x1 - (c0 - 1)] = img[y0:y1, x0:x1]
+            return out
+
+    host, _ = dm.frame_digests(img, GRID)
+    staged, _ = dm.frame_digests(load_tile_stacks(Prov(), GRID), GRID)
+    assert host == staged
+
+
+def test_halo_hashing_dirties_neighbors_of_border_changes():
+    """A change ON a tile border enters the neighbors' halo windows, so
+    they hash dirty too — no separate halo bookkeeping to get wrong."""
+    img = _img(8)
+    tr = SIZE // GRID[0]
+    img2 = img.copy()
+    img2[tr, tr] += 1.0       # top-left corner pixel of tile (1, 1)
+    a, _ = dm.frame_digests(img, GRID)
+    b, _ = dm.frame_digests(img2, GRID)
+    dirty = sorted(np.flatnonzero([x != y for x, y in zip(a, b)]))
+    # owner tile 5 plus the three tiles whose halos cover pixel (12, 12)
+    assert dirty == [0, 1, 4, 5]
+
+
+def test_hash_algos_all_work_and_unknown_raises():
+    img = _img(9)
+    for algo in dm.HASH_ALGOS:
+        d, _ = dm.frame_digests(img, GRID, algo=algo)
+        assert len(d) == GRID[0] * GRID[1]
+    with pytest.raises(ValueError):
+        dm.hasher("crc32")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity matrix: run_delta == cold run_tiled
+# ---------------------------------------------------------------------------
+
+def _seam_straddle(img):
+    """One transient crossing the tile-row seam at SIZE // GRID[0]."""
+    out = img.copy()
+    s = SIZE // GRID[0]
+    out[s - 2:s + 2, 30:34] += 5.0
+    return out
+
+
+def _seam_elder_flip(img):
+    """Flip which side of a seam holds the elder (larger) maximum by
+    perturbing one tile's interior only: the seam merge orientation must
+    re-resolve from the cached clean state + one fresh tile."""
+    out = img.copy()
+    tr, tc = SIZE // GRID[0], SIZE // GRID[1]
+    out[tr // 2, tc // 2] = float(np.abs(img).max()) + 10.0
+    return out
+
+
+DIRTY_CASES = [
+    ("none", lambda im: im.copy()),
+    ("single_tile", lambda im: _perturb(im, [5])),
+    ("all_tiles", lambda im: _perturb(im, range(16))),
+    ("seam_straddle", _seam_straddle),
+    ("seam_elder_flip", _seam_elder_flip),
+]
+
+
+@pytest.mark.parametrize("name,mutate", DIRTY_CASES,
+                         ids=[c[0] for c in DIRTY_CASES])
+def test_delta_bit_identical_across_dirty_masks(engine, name, mutate):
+    base = _img(1)
+    frame = mutate(base)
+    engine.run_delta(base)                      # prime the store
+    got = engine.run_delta(frame)
+    want = engine.run_tiled(frame)
+    _assert_same(want, got, name)
+    if name == "none":
+        assert got.delta.hit == "full" and got.delta.n_dirty == 0
+    else:
+        assert got.delta.hit in ("partial", "miss")
+        assert got.delta.n_dirty >= 1
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 16 - 1))
+def test_delta_bit_identical_on_random_dirty_masks(bitmask):
+    """Property: any dirty-tile subset reproduces the cold diagram."""
+    eng = test_delta_bit_identical_on_random_dirty_masks._engine
+    base = _img(2)
+    tiles = [t for t in range(16) if bitmask >> t & 1]
+    frame = _perturb(base, tiles, bump=3.0 + bitmask % 7)
+    eng.run_delta(base)
+    got = eng.run_delta(frame)
+    want = eng.run_tiled(frame)
+    _assert_same(want, got, f"mask={bitmask:04x}")
+    if not tiles:
+        assert got.delta.hit == "full"
+
+
+test_delta_bit_identical_on_random_dirty_masks._engine = _engine()
+
+
+def test_delta_threshold_is_part_of_the_context(engine):
+    """Same bytes under a different Variant-2 threshold must not reuse
+    state (the threshold filters inside phase B): full miss, never a
+    wrong answer."""
+    img = _img(3)
+    a = engine.run_delta(img, truncate_value=0.0)
+    b = engine.run_delta(img, truncate_value=0.5)
+    assert a.delta.hit in ("miss", "partial")
+    assert b.delta.hit == "miss"
+    _assert_same(engine.run_tiled(img, 0.5), b, "tv=0.5")
+    # and re-running at the first threshold is a full hit again
+    assert engine.run_delta(img, truncate_value=0.0).delta.hit == "full"
+
+
+def test_delta_accepts_staged_tiles(engine):
+    img = _img(4)
+
+    class Prov:
+        shape = img.shape
+        dtype = np.float32
+
+        def halo_tile(self, t, grid, fill=-np.inf):
+            gr, gc = grid
+            tr, tc = img.shape[0] // gr, img.shape[1] // gc
+            out = np.full((tr + 2, tc + 2), fill, np.float32)
+            r0, c0 = (t // gc) * tr, (t % gc) * tc
+            y0, y1 = max(0, r0 - 1), min(img.shape[0], r0 + tr + 1)
+            x0, x1 = max(0, c0 - 1), min(img.shape[1], c0 + tc + 1)
+            out[y0 - (r0 - 1):y1 - (r0 - 1),
+                x0 - (c0 - 1):x1 - (c0 - 1)] = img[y0:y1, x0:x1]
+            return out
+
+    staged = load_tile_stacks(Prov(), GRID)
+    want = engine.run_tiled(img)
+    got = engine.run_delta(staged)
+    _assert_same(want, got, "staged")
+    # the host-array form of the same frame is a full hit on its entry
+    assert engine.run_delta(img).delta.hit == "full"
+
+
+def test_delta_disabled_falls_back_to_run_tiled():
+    eng = _engine(delta=None)
+    img = _img(5)
+    res = eng.run_delta(img)
+    assert res.delta.hit == "cold"
+    _assert_same(eng.run_tiled(img), res, "disabled")
+    eng2 = _engine(delta=DeltaSpec(enabled=False))
+    assert eng2.run_delta(img).delta.hit == "cold"
+
+
+def test_run_sequence_full_hits_after_first_pass(engine):
+    frames = [_img(6), _perturb(_img(6), [3]), _img(6)]
+    first = [r.delta.hit for r in engine.run_sequence(frames)]
+    again = [r.delta.hit for r in engine.run_sequence(frames)]
+    assert first[0] in ("miss", "partial", "full")
+    assert again == ["full", "full", "full"]
+
+
+# ---------------------------------------------------------------------------
+# Adversarial: hash collisions
+# ---------------------------------------------------------------------------
+
+def test_verify_mode_detects_injected_hash_collision(monkeypatch):
+    """All-frames-collide digests + verify mode: the byte-compare demotes
+    colliding tiles to dirty, the diagram stays correct, and the
+    collision counter records the catch."""
+    eng = _engine(delta=DeltaSpec(cache_entries=8, verify=True))
+    base = _img(10)
+    frame = _perturb(base, [2, 7])
+
+    real = dm.frame_digests
+
+    def colliding(source, grid, *, algo="blake2b", with_bytes=False):
+        digests, raw = real(source, grid, algo=algo, with_bytes=True)
+        fake = tuple(b"\x00" * 16 for _ in digests)
+        return fake, (raw if with_bytes else None)
+
+    monkeypatch.setattr(dm, "frame_digests", colliding)
+    eng.run_delta(base)
+    got = eng.run_delta(frame)              # digests say "identical frame"
+    monkeypatch.setattr(dm, "frame_digests", real)
+    want = eng.run_tiled(frame)
+    _assert_same(want, got, "collision")
+    assert got.delta.hit == "partial" and got.delta.n_dirty >= 2
+    assert eng.delta_cache_stats()["collisions"] >= 2
+
+
+def test_without_verify_identical_digests_are_trusted(monkeypatch):
+    """Control for the collision test: without verify mode the (forged)
+    exact digest match returns the cached result — documenting exactly
+    what ``DeltaSpec.verify`` buys."""
+    eng = _engine(delta=DeltaSpec(cache_entries=8, verify=False))
+    base = _img(11)
+    real = dm.frame_digests
+
+    def colliding(source, grid, *, algo="blake2b", with_bytes=False):
+        digests, raw = real(source, grid, algo=algo, with_bytes=with_bytes)
+        return tuple(b"\x01" * 16 for _ in digests), raw
+
+    monkeypatch.setattr(dm, "frame_digests", colliding)
+    first = eng.run_delta(base)
+    hit = eng.run_delta(_perturb(base, [2]))
+    assert hit.delta.hit == "full"
+    _assert_same(first, hit, "trusted")
+
+
+# ---------------------------------------------------------------------------
+# Resume / retry: the cache is idempotent under re-execution
+# ---------------------------------------------------------------------------
+
+def test_repeated_runs_replace_not_duplicate(engine):
+    img = _img(12)
+    engine.run_delta(img)
+    before = len(engine._delta_cache._entries)
+    engine.run_delta(img)                   # full hit: no insert at all
+    engine.run_delta(_perturb(img, [1]))
+    engine.run_delta(_perturb(img, [1]))    # full hit on the new entry
+    assert len(engine._delta_cache._entries) == before + 1
+
+
+def test_pipeline_retry_with_delta_does_not_poison_cache(tmp_path):
+    """PR 3 failure-injection + work-log resume with delta enabled: the
+    tiled rounds route through run_delta, a retried round re-runs the
+    same frame (cache entry replaced in place, not duplicated), and the
+    resumed results match a delta-free pipeline bit for bit."""
+    from repro.pipeline.driver import FailureInjector
+
+    def mk(delta):
+        return PHEngine(PHConfig(
+            max_features=4096, filter_level="filter_std", delta=delta,
+            tile=TileSpec(grid=(2, 2), max_features_per_tile=1024,
+                          max_candidates_per_tile=2048,
+                          max_tile_pixels=32 * 32)))
+
+    log = tmp_path / "delta.jsonl"
+    eng = mk(DeltaSpec(cache_entries=8))
+    res = eng.run_distributed([(0, 32), (2, 64)], work_log=log,
+                              failure_injector=FailureInjector([0, 1]))
+    assert res.failures == 2 and len(res.diagrams) == 2
+    stats = eng.delta_cache_stats()
+    assert len(eng._delta_cache._entries) <= stats["inserts"]
+    assert len(eng._delta_cache._entries) == 1      # one oversized frame
+    # bit-identical to the same pipeline without delta
+    want = mk(None).run_distributed([(0, 32), (2, 64)])
+    assert res.diagrams[2] == want.diagrams[2]
+    assert res.diagrams[0] == want.diagrams[0]
+    # resume from the log recomputes nothing and leaves the store alone
+    eng2 = mk(DeltaSpec(cache_entries=8))
+    res2 = eng2.run_distributed([(0, 32), (2, 64)], work_log=log)
+    assert res2.diagrams[2] == res.diagrams[2]
+    assert eng2.delta_cache_stats()["inserts"] == 0
+    lines = [json.loads(l) for l in log.read_text().splitlines()]
+    assert sorted(r["image_id"] for r in lines) == [0, 2]
+
+
+def test_frame_sequence_with_injected_fault_keeps_cache_consistent():
+    """A frame loader that dies mid-sequence: the failed frame inserts
+    nothing, the retry computes it correctly, and later near-duplicates
+    still hit the store."""
+    eng = _engine()
+    fs = FrameSequence(21, SIZE, grid=GRID, dirty_frac=0.1, stamp=3)
+    boom = {"armed": True}
+
+    def frames():
+        yield fs.frame(0)
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("loader died")
+        yield fs.frame(1)
+
+    it = eng.run_sequence(frames())
+    next(it)
+    with pytest.raises(RuntimeError):
+        next(it)
+    inserts = eng.delta_cache_stats()["inserts"]
+    out = list(eng.run_sequence(fs.frames(3)))      # retry from scratch
+    assert out[0].delta.hit == "full"               # frame 0 survived
+    assert out[1].delta.hit == "partial"
+    assert eng.delta_cache_stats()["inserts"] > inserts
+    want = eng.run_tiled(fs.frame(2))
+    _assert_same(want, out[2], "post-fault")
+
+
+# ---------------------------------------------------------------------------
+# FrameSequence ground truth
+# ---------------------------------------------------------------------------
+
+def test_frame_sequence_dirty_tiles_match_hash_classification():
+    fs = FrameSequence(3, SIZE, grid=GRID, dirty_frac=0.2, stamp=3)
+    d0, _ = dm.frame_digests(fs.frame(0), GRID)
+    for i in (1, 2, 3):
+        di, _ = dm.frame_digests(fs.frame(i), GRID)
+        dirty = np.flatnonzero([a != b for a, b in zip(d0, di)])
+        np.testing.assert_array_equal(dirty, fs.dirty_tiles(i))
+    assert fs.dirty_tiles(0).size == 0
+    assert np.array_equal(fs.frame(2), FrameSequence(
+        3, SIZE, grid=GRID, dirty_frac=0.2, stamp=3).frame(2))
+
+
+def test_frame_sequence_validates_inputs():
+    with pytest.raises(ValueError):
+        FrameSequence(0, 50, grid=GRID)         # grid does not divide
+    with pytest.raises(ValueError):
+        FrameSequence(0, SIZE, grid=GRID, dirty_frac=1.5)
+    with pytest.raises(ValueError):
+        FrameSequence(0, 32, grid=(4, 4), stamp=15)   # tile < stamp+margin
+
+
+# ---------------------------------------------------------------------------
+# run_batch dedupe
+# ---------------------------------------------------------------------------
+
+def test_run_batch_dedupe_matches_full_compute():
+    eng = PHEngine(PHConfig(filter_level=FilterLevel.VANILLA))
+    a, b = _img(13), _img(14)
+    batch = np.stack([a, b, a, a, b])
+    got = eng.run_batch(batch)
+    want = eng.run_batch(batch, dedupe=False)
+    for field in got.diagram._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got.diagram,
+                                                         field)),
+                                      np.asarray(getattr(want.diagram,
+                                                         field)), field)
+
+
+def test_run_batch_dedupe_respects_thresholds():
+    """Same bytes under different thresholds are different requests."""
+    eng = PHEngine(PHConfig(filter_level=FilterLevel.VANILLA))
+    a = _img(15)
+    got = eng.run_batch([a, a, a], truncate_values=[0.0, 0.5, 0.0])
+    want = eng.run_batch([a, a, a], truncate_values=[0.0, 0.5, 0.0],
+                         dedupe=False)
+    for field in got.diagram._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.diagram, field)),
+            np.asarray(getattr(want.diagram, field)), field)
+    np.testing.assert_array_equal(np.asarray(got.threshold, np.float64),
+                                  [0.0, 0.5, 0.0])
+
+
+def test_run_batch_dedupe_shrinks_dispatch():
+    """All-identical batch: one distinct image computes, B rows return."""
+    eng = PHEngine(PHConfig(filter_level=FilterLevel.VANILLA))
+    a = _img(16)
+    res = eng.run_batch(np.stack([a] * 4))
+    assert np.asarray(res.diagram.birth).shape[0] == 4
+    single = eng.run(a)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(res.diagram.birth)[i],
+            np.asarray(single.diagram.birth))
+
+
+def test_run_batch_dedupe_mixed_shapes():
+    eng = PHEngine(PHConfig(filter_level=FilterLevel.VANILLA))
+    a, b = _img(17), _img(18)[:32, :32]
+    got = eng.run_batch([a, b, a])
+    want = eng.run_batch([a, b, a], dedupe=False)
+    for field in got.diagram._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.diagram, field)),
+            np.asarray(getattr(want.diagram, field)), field)
+
+
+# ---------------------------------------------------------------------------
+# Serving cache tier
+# ---------------------------------------------------------------------------
+
+def _serve_engine(**kw):
+    kw.setdefault("delta", DeltaSpec(cache_entries=16))
+    return PHEngine(PHConfig(
+        filter_level=FilterLevel.VANILLA,
+        tile=TileSpec(grid=GRID, max_features_per_tile=64,
+                      max_candidates_per_tile=64),
+        serve=ServeSpec(buckets=((SIZE, SIZE),), batch_cap=4,
+                        tick_interval_s=0.0), **kw))
+
+
+def test_server_exact_hash_hit_bypasses_queue():
+    from repro.serving import PHServer
+    img = _img(19)
+    with PHServer(_serve_engine()) as srv:
+        first = srv.submit(img).result(120)
+        fut = srv.submit(img)
+        assert fut.done()               # resolved on the submit thread
+        hit = fut.result(0)
+        _assert_same(first, hit, "tier")
+        snap = srv.stats()
+        assert snap["cache"]["hits"] == 1 and snap["cache"]["misses"] == 1
+        assert srv.metrics.cache_hits == 1
+
+
+def test_server_near_duplicate_rides_delta_path():
+    from repro.serving import PHServer
+    img = _img(20)
+    near = _perturb(img, [6])
+    eng = _serve_engine()
+    with PHServer(eng) as srv:
+        srv.submit(img).result(120)
+        res = srv.submit(near).result(120)
+        assert res.delta is not None and res.delta.hit == "partial"
+        assert res.delta.n_dirty < res.delta.n_tiles
+        _assert_same(eng.run_tiled(near), res, "near-dup")
+        assert srv.cache_stats()["delta_store"]["partial_hits"] >= 1
+
+
+def test_server_without_delta_config_has_no_tier():
+    from repro.serving import PHServer
+    eng = PHEngine(PHConfig(
+        filter_level=FilterLevel.VANILLA,
+        serve=ServeSpec(buckets=((SIZE, SIZE),), batch_cap=4,
+                        tick_interval_s=0.0)))
+    with PHServer(eng) as srv:
+        res = srv.submit(_img(22)).result(120)
+        assert res.delta is None
+        snap = srv.stats()
+        assert snap["cache"]["enabled"] is False
+        assert snap["cache"]["hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Config plumbing
+# ---------------------------------------------------------------------------
+
+def test_delta_spec_validation_and_plan_key():
+    with pytest.raises(ValueError):
+        DeltaSpec(cache_entries=0)
+    with pytest.raises(ValueError):
+        DeltaSpec(hash_algo="crc32")
+    base = PHConfig()
+    on = PHConfig(delta=DeltaSpec())
+    assert base.plan_key() != on.plan_key()
+    # cache_entries / hash_algo / verify are host knobs: same plans
+    assert PHConfig(delta=DeltaSpec(cache_entries=2)).plan_key() == \
+        on.plan_key()
+    assert PHConfig(delta=DeltaSpec(hash_algo="sha1")).plan_key() == \
+        on.plan_key()
+    assert PHConfig(delta=DeltaSpec(verify=True)).plan_key() == \
+        on.plan_key()
+    # dict coercion mirrors the other spec fields
+    assert PHConfig(delta={"cache_entries": 3}).delta.cache_entries == 3
+
+
+def test_delta_stats_dirty_frac():
+    s = dm.DeltaStats(16, 2, "partial")
+    assert s.dirty_frac == 2 / 16
+    assert dm.DeltaStats(0, 0, "full").dirty_frac == 0.0
