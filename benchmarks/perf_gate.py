@@ -27,7 +27,15 @@ Gated invariants:
   **bit-identical** to its cold ``run_tiled`` counterpart and the
   identical-frame resubmission full-hits; rows at >= 256 px must show a
   real speedup, and a full-scale row (>= 1024 px, <= 10% dirty tiles)
-  must hold the paper-motivated >= 5x incremental speedup.
+  must hold the paper-motivated >= 5x incremental speedup.  Streaming
+  rows additionally carry overlap-engine counters: the steady-state
+  dispatch path must perform **zero** blocking device readbacks
+  (``steady_state_dispatch_syncs == 0`` — the serve-gate
+  ``steady_state_traces`` pattern), staging must stay fused (at most one
+  ``jax.device_put`` per whole round), and at gate scale
+  (``max_size >= 256``, on a host with ``host_parallelism >= 2``) the
+  heterogeneous and tiled mixes must show ``overlap_speedup >= 1.2``
+  over the serial loop.
 
 **Trajectory gating**: with ``--baseline-core``/``--baseline-serve`` the
 gate additionally compares the current artifact against a *committed
@@ -104,6 +112,8 @@ PIPELINE_TRAJECTORY = {
     "delta_full_hit_ok": ("exact", None),
     "delta_speedup_10pct": ("min_ratio", 0.5),
     "speedup_vs_serial": ("min_ratio", 0.5),
+    "overlap_speedup": ("min_ratio", 0.5),
+    "steady_state_dispatch_syncs": ("exact", None),
 }
 
 
@@ -258,6 +268,49 @@ def _pipeline_delta_speedup(doc):
     return "; ".join(errs) or None
 
 
+def _pipeline_overlap(doc):
+    """The overlap engine's contract: in steady state the dispatch path
+    performs **zero** blocking device readbacks (they all move to the
+    harvest thread), staging stays fused (one ``jax.device_put`` per
+    whole round — tile-grid rounds stage through the tile provider and
+    count zero), and at gate scale (``max_size >= 256``) the
+    heterogeneous and tiled mixes beat the serial loop by >= 1.2x.
+    The speedup floor is scoped twice, the structural invariants never:
+    smoke scales (< 256 px) are exempt like the delta gate's size
+    floor, and so are hosts without parallelism
+    (``host_parallelism < 2`` — on a single-core CPU host the "device"
+    *is* the host, so staging/compute/harvest threads time-slice one
+    core and overlap cannot buy wall-clock time by construction)."""
+    rows, _ = _pipeline_rows(doc)
+    streaming = [r for r in rows if isinstance(r, dict)
+                 and "steady_state_dispatch_syncs" in r]
+    if not streaming:
+        return "no overlap-instrumented streaming rows in the artifact"
+    errs = []
+    for r in streaming:
+        name = str(r.get("name", "?"))
+        syncs = r.get("steady_state_dispatch_syncs")
+        if syncs != 0:
+            errs.append(f"{name}: {syncs!r} blocking dispatch-path "
+                        f"syncs in steady state, want 0")
+        h2d = r.get("h2d_transfers_per_round", -1.0)
+        if not 0.0 < h2d <= 1.0:
+            errs.append(f"{name}: {h2d!r} H2D transfers per round "
+                        f"(fused batch+thresholds staging broken)")
+        elif "tiled" not in name and h2d != 1.0:
+            errs.append(f"{name}: {h2d!r} H2D transfers per whole "
+                        f"round, want exactly 1 (fused)")
+        scenario = name.split("/")[-1].rsplit("_", 1)[0]
+        if (r.get("max_size", 0) >= 256
+                and r.get("host_parallelism", 1) >= 2
+                and scenario in ("heterogeneous", "tiled_mix")):
+            ratio = r.get("overlap_speedup", 0)
+            if ratio < 1.2:
+                errs.append(f"{name}: overlap_speedup {ratio} < 1.2x "
+                            f"at gate scale")
+    return "; ".join(errs) or None
+
+
 def _pipeline_trajectory(baseline):
     base_rows = {r.get("name"): r
                  for r in _pipeline_rows(baseline)[0]
@@ -309,7 +362,9 @@ RULES = {
     "pipeline": [("delta rows bit-identical + full-hit",
                   _pipeline_delta_identity),
                  ("delta recompute pays its way",
-                  _pipeline_delta_speedup)],
+                  _pipeline_delta_speedup),
+                 ("overlap engine holds its contract",
+                  _pipeline_overlap)],
 }
 
 

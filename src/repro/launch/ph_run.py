@@ -13,6 +13,15 @@ Heterogeneous datasets: ``--sizes 256 512 1024`` cycles image sizes over
 above ``--max-tile-pixels`` stream through the tiled path; the loader
 thread prefetches ``--prefetch-rounds`` rounds ahead (``--no-prefetch``
 serializes load and compute).
+
+``--overlap`` turns on the overlap engine: the staging ring keeps
+``--overlap-depth`` rounds device-staged and in flight, bucket batches
+are donated to the compiled programs, overflow checks and result
+materialization stream asynchronously, and a harvest thread drains
+results so the dispatch loop never blocks on the device.  The opt-out
+toggles (``--no-donate`` / ``--no-async-overflow`` /
+``--no-async-harvest``) each imply ``--overlap`` with that one feature
+off.  Every combination is bit-identical to the synchronous path.
 """
 from __future__ import annotations
 
@@ -35,6 +44,25 @@ def main():
     ap.add_argument("--prefetch-rounds", dest="prefetch_rounds", type=int)
     ap.add_argument("--no-prefetch", action="store_true",
                     help="serialize loading and compute (prefetch_rounds=0)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap engine: async staging ring, donated "
+                         "device buffers, non-blocking regrow, "
+                         "harvest-thread result streaming (bit-identical "
+                         "to the synchronous path)")
+    ap.add_argument("--overlap-depth", dest="overlap_depth", type=int,
+                    help="staging-ring depth: device-staged + in-flight "
+                         "rounds allowed ahead of the harvest (implies "
+                         "--overlap; default 2)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="keep staged batches unaliased instead of "
+                         "donating them to the compiled programs "
+                         "(implies --overlap)")
+    ap.add_argument("--no-async-overflow", action="store_true",
+                    help="block on every overflow check at dispatch time "
+                         "instead of streaming it (implies --overlap)")
+    ap.add_argument("--no-async-harvest", action="store_true",
+                    help="materialize results on the dispatch thread "
+                         "instead of a harvest thread (implies --overlap)")
     ap.add_argument("--strategy", default="part_LPT",
                     choices=["part_executors", "part_images", "part_LPT"])
     ap.add_argument("--filter", default="filter_std",
@@ -115,14 +143,17 @@ def main():
         failure_injector=injector, verbose=True)
     total_objects = sum(d["count"] for d in res.diagrams.values())
     stats = engine.plan_stats()
-    print(json.dumps({
+    out = {
         "config": json.loads(config.to_json()),
         "images": len(res.diagrams), "rounds": res.rounds,
         "failures_recovered": res.failures, "elapsed_s": round(res.elapsed_s, 2),
         "total_objects": total_objects,
         "mean_objects_per_image": total_objects / max(len(res.diagrams), 1),
         "plan_cache": stats,
-    }, indent=1))
+    }
+    if config.overlap is not None and config.overlap.enabled:
+        out["overlap"] = engine.overlap_counters.snapshot()
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from repro.ph.config import (  # noqa: F401
     MERGE_IMPLS,
     DeltaSpec,
     FilterLevel,
+    OverlapSpec,
     PHConfig,
     ServeSpec,
     TileSpec,

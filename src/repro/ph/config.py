@@ -149,6 +149,61 @@ class ServeSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class OverlapSpec:
+    """Host<->device overlap policy (the PR 9 overlap engine).
+
+    With a spec, the transfer/compute/fetch path pipelines instead of
+    serializing:
+
+    * **staging ring** — the pipeline's loader thread stages round r+1's
+      batch *and* thresholds in one fused ``jax.device_put`` while round
+      r computes; ``staging_depth`` bounds how many device-staged rounds
+      (and unresolved result rounds) may be in flight at once;
+    * **donation** (``donate``) — staged bucket batches are donated to
+      the compiled program (``donate_argnums``), so XLA reuses the input
+      buffer for outputs instead of allocating a fresh one per round.
+      Donated inputs are consumed; the rare regrow replay re-stages from
+      the retained host copy (bit-identical, just a second transfer);
+    * **async overflow** (``async_overflow``) — dispatch starts an async
+      device->host copy of the packed overflow scalar (and the diagram)
+      instead of blocking on it, so the next round can be staged and
+      dispatched speculatively; the overflow check happens at harvest
+      time and fires the existing regrow-and-replay only when true;
+    * **async harvest** (``async_harvest``) — result materialization
+      (``np.asarray`` of the diagram) is drained by a harvest thread, so
+      the dispatch thread (pipeline driver / serving tick) never blocks
+      on device results.
+
+    Every overlapped path is bit-identical to the synchronous one —
+    overflow semantics are unchanged, only deferred.
+    """
+
+    enabled: bool = True
+    staging_depth: int = 2
+    donate: bool = True
+    async_overflow: bool = True
+    async_harvest: bool = True
+
+    def __post_init__(self):
+        if not isinstance(self.staging_depth, int) or self.staging_depth < 1:
+            raise ValueError(f"staging_depth must be a positive int, "
+                             f"got {self.staging_depth!r}")
+        for field in ("enabled", "donate", "async_overflow", "async_harvest"):
+            v = getattr(self, field)
+            if not isinstance(v, bool):
+                raise ValueError(f"{field} must be a bool, got {v!r}")
+
+    def replace(self, **changes) -> "OverlapSpec":
+        return dataclasses.replace(self, **changes)
+
+    def plan_fields(self) -> tuple:
+        """``donate`` selects compiled executables (input/output buffer
+        aliasing); ring depth and the async toggles are host-side
+        scheduling, like ``prefetch_rounds``."""
+        return (self.enabled, self.donate)
+
+
+@dataclasses.dataclass(frozen=True)
 class DeltaSpec:
     """Delta-recompute / frame-cache policy (:meth:`PHEngine.run_delta`).
 
@@ -290,6 +345,11 @@ class PHConfig:
     # frame cache and recompute only dirty tiles; the serving daemon adds
     # its exact-hash / near-duplicate cache tier on top.
     delta: DeltaSpec | None = None
+    # Host<->device overlap policy (None = fully synchronous transfers).
+    # With a spec, staging/compute/fetch pipeline: fused H2D staging with
+    # buffer donation, deferred (async) overflow checks with speculative
+    # dispatch, and a harvest thread draining async D2H result copies.
+    overlap: OverlapSpec | None = None
 
     def __post_init__(self):
         if isinstance(self.filter_level, str) and \
@@ -311,6 +371,12 @@ class PHConfig:
         if self.delta is not None and not isinstance(self.delta, DeltaSpec):
             raise ValueError(f"delta must be a DeltaSpec or None, "
                              f"got {type(self.delta).__name__}")
+        if isinstance(self.overlap, dict):
+            object.__setattr__(self, "overlap", OverlapSpec(**self.overlap))
+        if self.overlap is not None and \
+                not isinstance(self.overlap, OverlapSpec):
+            raise ValueError(f"overlap must be an OverlapSpec or None, "
+                             f"got {type(self.overlap).__name__}")
         if self.candidate_mode not in CANDIDATE_MODES:
             raise ValueError(f"candidate_mode must be one of "
                              f"{CANDIDATE_MODES}, got {self.candidate_mode!r}")
@@ -398,7 +464,9 @@ class PHConfig:
         return (self.stage_signature(), self.dtype, self.bucket_rounding,
                 self.tile.plan_fields() if self.tile is not None else None,
                 self.serve.plan_fields() if self.serve is not None else None,
-                self.delta.plan_fields() if self.delta is not None else None)
+                self.delta.plan_fields() if self.delta is not None else None,
+                self.overlap.plan_fields() if self.overlap is not None
+                else None)
 
     # -- construction / serialization -------------------------------------
 
@@ -415,7 +483,9 @@ class PHConfig:
         ``bucket_rounding``, ``prefetch_rounds``/``no_prefetch``; serving:
         ``serve`` (bool), ``serve_buckets`` (sizes or ``"HxW"`` strings),
         ``serve_batch_cap``, ``serve_max_queue``, ``serve_tick_ms``,
-        ``serve_admission``.
+        ``serve_admission``; overlap: ``overlap`` (bool),
+        ``overlap_depth``, ``no_donate``, ``no_async_overflow``,
+        ``no_async_harvest``.
         """
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
@@ -476,6 +546,18 @@ class PHConfig:
                 delta_kw[field] = v
         if delta_kw or getattr(args, "delta", False):
             kw["delta"] = DeltaSpec(**delta_kw)
+        overlap_kw: dict[str, Any] = {}
+        v = getattr(args, "overlap_depth", None)
+        if v is not None:
+            overlap_kw["staging_depth"] = int(v)
+        if getattr(args, "no_donate", False):
+            overlap_kw["donate"] = False
+        if getattr(args, "no_async_overflow", False):
+            overlap_kw["async_overflow"] = False
+        if getattr(args, "no_async_harvest", False):
+            overlap_kw["async_harvest"] = False
+        if overlap_kw or getattr(args, "overlap", False):
+            kw["overlap"] = OverlapSpec(**overlap_kw)
         kw.update(overrides)
         return cls(**kw)
 

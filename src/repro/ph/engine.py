@@ -26,6 +26,7 @@ import dataclasses
 import math
 import threading
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -36,7 +37,18 @@ from repro.core import Diagram, batched_pixhomology, diagram_to_array, \
     num_candidates as core_num_candidates, pixhomology
 from repro.core.packed_keys import key_scope, resolve_merge_keys
 from repro.distributed.context import shard_map_compat
-from repro.ph.config import FilterLevel, PHConfig, TileSpec
+from repro.ph.config import FilterLevel, OverlapSpec, PHConfig, TileSpec
+from repro.ph.overlap import OverlapCounters, PendingResult, start_d2h
+
+# The engine's behavior when the config carries no overlap spec:
+# synchronous transfers, no donation — the pre-overlap code path.
+_OVERLAP_OFF = OverlapSpec(enabled=False)
+
+# Donating an image batch whose buffer no diagram output can alias is
+# intentional (XLA still owns — and may reuse/free early — the donated
+# space); the per-compile advisory would otherwise spam every round.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 
 def threshold_dtype(image_dtype):
@@ -153,6 +165,10 @@ class PHEngine:
         self._hits = 0
         self._misses = 0
         self.regrow_log: list[dict] = []
+        # Overlap-engine accounting (H2D/D2H transfers, blocking syncs by
+        # thread role, donation replays) — bumped by the engine, executor,
+        # driver, and server; read by the bench and the perf gate.
+        self.overlap_counters = OverlapCounters()
         # Guards the plan cache, the regrow memo, and every counter:
         # concurrent submitters (the serving daemon's clients, N threads
         # hammering run()) share one engine, and an unguarded cache miss
@@ -195,6 +211,29 @@ class PHEngine:
                 "misses": self._misses,
                 "regrows": len(self.regrow_log),
             }
+
+    # -- overlap policy ----------------------------------------------------
+
+    def overlap_spec(self) -> OverlapSpec:
+        """Effective overlap policy — a disabled spec when the config
+        carries none (synchronous transfers, the pre-overlap behavior)."""
+        o = self.config.overlap
+        return o if o is not None else _OVERLAP_OFF
+
+    def donate_batched(self) -> bool:
+        """Whether engine-owned padded batches dispatch through donating
+        plans.  Only batches the engine (or executor/server) built from
+        host arrays are ever donated — user-supplied device arrays may be
+        aliased by the caller, and donation invalidates the buffer."""
+        o = self.overlap_spec()
+        return o.enabled and o.donate
+
+    def _stream_results(self) -> bool:
+        """Whether dispatches start async D2H copies on their results
+        (overflow scalar included) instead of leaving the first
+        ``np.asarray`` to schedule a blocking copy."""
+        o = self.overlap_spec()
+        return o.enabled and o.async_overflow
 
     def _merge_keys_for(self, dtype) -> str:
         """The resolved phase-C key encoding for ``dtype`` under this
@@ -292,13 +331,22 @@ class PHEngine:
                     use_pallas=cfg.use_pallas, interpret=cfg.interpret)
 
     def _local_plan(self, kind: str, shape, dtype, mf: int, mc: int,
-                    truncated: bool) -> Plan:
+                    truncated: bool, donate: bool = False) -> Plan:
         """Plan for the non-sharded entry points: ``kind`` selects the
-        callee ("single" -> pixhomology, "batched" -> its vmap)."""
+        callee ("single" -> pixhomology, "batched" -> its vmap).
+
+        ``donate`` compiles with ``donate_argnums=(0,)`` so the image
+        batch's device buffer is reused for an output instead of being
+        re-allocated per round.  Donation changes the executable's
+        input/output aliasing, so it is part of the plan key; callers
+        must own the donated buffer (the bucketed/serving paths build
+        their padded batches from host arrays) and must re-stage it
+        before any replay — the regrow dispatchers do.
+        """
         callee = pixhomology if kind == "single" else batched_pixhomology
         mk = self._merge_keys_for(dtype)
         eff = self._effective_config(tuple(shape)[-2:], dtype)
-        key = (kind, shape, str(dtype), mf, mc, truncated,
+        key = (kind, shape, str(dtype), mf, mc, truncated, donate,
                eff.plan_key())
 
         def build(plan: Plan):
@@ -308,13 +356,16 @@ class PHEngine:
                 plan.traces += 1   # python side effect: runs per (re)trace
                 return callee(x, tv, **kw)
 
+            dn = (0,) if donate else ()
             if truncated:
-                return jax.jit(lambda im, tv: compute(im, tv))
-            return jax.jit(lambda im: compute(im))
+                return jax.jit(lambda im, tv: compute(im, tv),
+                               donate_argnums=dn)
+            return jax.jit(lambda im: compute(im), donate_argnums=dn)
 
         return self.get_plan(key, build, mk)
 
-    def sharded_plan(self, ctx, shape, dtype, mf: int, mc: int) -> Plan:
+    def sharded_plan(self, ctx, shape, dtype, mf: int, mc: int,
+                     donate: bool = False) -> Plan:
         """shard_map'd batched PH over ``ctx.dp_axes`` (always thresholded:
         vanilla rounds pass -inf, which is a no-op for float images).
 
@@ -322,10 +373,14 @@ class PHEngine:
         shard_map — XLA's sharding propagation otherwise replicates the
         merge-scan carries and emits ~70 TB of all-gathers per batch
         (src/repro/ph/DESIGN.md §Perf PH-1: collective 1407 s -> ~0).
+
+        ``donate`` as in :meth:`_local_plan`: the round's padded image
+        batch buffer is donated to the executable (the staging ring owns
+        it and retains the host copy for the rare regrow replay).
         """
         mk = self._merge_keys_for(dtype)
         eff = self._effective_config(tuple(shape)[-2:], dtype)
-        key = ("sharded", ctx, shape, str(dtype), mf, mc,
+        key = ("sharded", ctx, shape, str(dtype), mf, mc, donate,
                eff.plan_key())
 
         def build(plan: Plan):
@@ -349,7 +404,8 @@ class PHEngine:
             return jax.jit(shard_map_compat(
                 compute, mesh=ctx.mesh,
                 in_specs=(P(dp, None, None), P(dp)),
-                out_specs=out_specs))
+                out_specs=out_specs),
+                donate_argnums=(0,) if donate else ())
 
         return self.get_plan(key, build, mk)
 
@@ -487,44 +543,79 @@ class PHEngine:
         return min(mf * self.config.regrow_factor, ceil_f), \
             min(mc * self.config.regrow_factor, ceil_c)
 
-    def run_with_regrow(self, dispatch: Callable[[int, int], Any],
-                        overflowed: Callable[[Any], bool],
-                        n: int, kind: str,
-                        memo_key: tuple | None = None
-                        ) -> tuple[Any, RegrowStats]:
-        """Shared driver: dispatch, then regrow while overflow persists.
+    def begin_regrow(self, dispatch: Callable[[int, int], Any],
+                     overflowed: Callable[[Any], bool],
+                     n: int, kind: str,
+                     memo_key: tuple | None = None,
+                     stream: bool = False
+                     ) -> tuple[Any, Callable[[], tuple[Any, "RegrowStats"]]]:
+        """Dispatch once at the memoized capacities and return
+        ``(out, finish)`` with **no blocking device readback**.
+
+        ``finish()`` performs the deferred overflow check and, on the
+        rare overflow, the regrow-and-replay loop — returning the same
+        ``(out, RegrowStats)`` the synchronous :meth:`run_with_regrow`
+        produces (which is literally ``begin_regrow(...)`` followed by
+        an immediate ``finish()``, so the two are bit-identical by
+        construction; overflow semantics are deferred, never altered).
+
+        With ``stream=True`` the dispatched output starts async
+        device->host copies immediately (``copy_to_host_async``), so
+        the overflow scalar — and usually the diagram itself — is
+        already on the host by the time ``finish()`` looks at it.  The
+        caller may dispatch further work between ``begin`` and
+        ``finish`` (the speculative next round of the overlap engine);
+        a dispatch that donated its input must rebuild it on replay,
+        which the engine's own dispatch closures do.
 
         ``memo_key`` makes grown capacities sticky: a later call for the
         same (kind, shape, dtype) starts at the largest capacity already
         discovered instead of re-walking the doubling chain."""
         cfg = self.config
-        mf, mc = self.initial_capacities(n)
+        mf0, mc0 = self.initial_capacities(n)
         if cfg.auto_regrow and memo_key is not None:
             with self._lock:
                 got = self._grown.get(memo_key)
             if got:
-                mf = max(mf, min(got[0], n))
-                mc = max(mc, min(got[1], n))
-        attempts = 0
-        out = dispatch(mf, mc)
-        over = overflowed(out)   # one blocking readback per dispatch
-        while over and cfg.auto_regrow and attempts < cfg.max_regrows:
-            nmf, nmc = self.grow_capacities(mf, mc, n)
-            if (nmf, nmc) == (mf, mc):
-                break   # at the ceiling: residual overflow is reported
-            with self._lock:
-                self.regrow_log.append({"kind": kind, "from": (mf, mc),
-                                        "to": (nmf, nmc)})
-            mf, mc = nmf, nmc
-            attempts += 1
-            out = dispatch(mf, mc)
-            over = overflowed(out)
-        if attempts and memo_key is not None:
-            with self._lock:
-                got = self._grown.get(memo_key)
-                if got is None or got < (mf, mc):
-                    self._grown[memo_key] = (mf, mc)
-        return out, RegrowStats(attempts, mf, mc, bool(over))
+                mf0 = max(mf0, min(got[0], n))
+                mc0 = max(mc0, min(got[1], n))
+        out0 = dispatch(mf0, mc0)
+        if stream:
+            start_d2h(out0, self.overlap_counters)
+
+        def finish(out=out0, mf=mf0, mc=mc0):
+            attempts = 0
+            over = overflowed(out)  # drains the in-flight copy if streamed
+            while over and cfg.auto_regrow and attempts < cfg.max_regrows:
+                nmf, nmc = self.grow_capacities(mf, mc, n)
+                if (nmf, nmc) == (mf, mc):
+                    break   # at the ceiling: residual overflow is reported
+                with self._lock:
+                    self.regrow_log.append({"kind": kind, "from": (mf, mc),
+                                            "to": (nmf, nmc)})
+                mf, mc = nmf, nmc
+                attempts += 1
+                out = dispatch(mf, mc)
+                over = overflowed(out)
+            if attempts and memo_key is not None:
+                with self._lock:
+                    got = self._grown.get(memo_key)
+                    if got is None or got < (mf, mc):
+                        self._grown[memo_key] = (mf, mc)
+            return out, RegrowStats(attempts, mf, mc, bool(over))
+
+        return out0, finish
+
+    def run_with_regrow(self, dispatch: Callable[[int, int], Any],
+                        overflowed: Callable[[Any], bool],
+                        n: int, kind: str,
+                        memo_key: tuple | None = None
+                        ) -> tuple[Any, RegrowStats]:
+        """Shared synchronous driver: dispatch, then regrow while overflow
+        persists — :meth:`begin_regrow` plus an immediate ``finish()``."""
+        _, finish = self.begin_regrow(dispatch, overflowed, n, kind,
+                                      memo_key=memo_key)
+        return finish()
 
     # -- data prep ---------------------------------------------------------
 
@@ -533,6 +624,20 @@ class PHEngine:
         x = jnp.asarray(image)
         if self.config.dtype is not None:
             x = x.astype(self.config.dtype)
+        return x
+
+    def cast_input_host(self, image) -> np.ndarray:
+        """Host-side twin of :meth:`cast_input`: the same dtype policy
+        (canonicalization included, so ``float64`` inputs land on the
+        dtype the device dispatch will actually use) applied with numpy.
+        Staging paths use this so building a padded round never bounces
+        host -> device -> host — no device allocation happens until the
+        round's one fused ``device_put``."""
+        x = np.asarray(image)
+        dt = self.config.dtype if self.config.dtype is not None else x.dtype
+        np_dt = np.dtype(jax.dtypes.canonicalize_dtype(dt))
+        if x.dtype != np_dt:
+            x = x.astype(np_dt)
         return x
 
     def _auto_threshold(self, image) -> float | None:
@@ -606,18 +711,29 @@ class PHEngine:
             dummy = np.zeros(shape, np.dtype(dtype or "float32"))
             peaks = dummy[::2, ::2]
             peaks[...] = 1 + np.arange(peaks.size).reshape(peaks.shape)
+            host = self.cast_input_host(dummy)
             x = self.cast_input(dummy)
             tv = jnp.asarray(-np.inf, threshold_dtype(x.dtype))
             over = lambda d: bool(np.any(np.asarray(d.overflow)))  # noqa: E731
             for kind, b in [("single", None)] + [("batched", int(b))
                                                  for b in batch_sizes]:
                 bshape = shape if b is None else (b, h, w)
-                xb = x if b is None else jnp.broadcast_to(x, bshape)
+                # Batched dispatches (what the serving tick runs) go
+                # through donating plans when the overlap engine donates:
+                # warming the non-donating twin would leave steady state
+                # retracing.  Donated buffers are consumed per call, so
+                # the donating warmup re-stages from the host dummy.
+                donate = self.donate_batched() and kind == "batched"
+                xb = x if b is None else (
+                    None if donate else jnp.broadcast_to(x, bshape))
                 tb = tv if b is None else jnp.broadcast_to(tv, (b,))
 
-                def dispatch(mf, mc, kind=kind, bshape=bshape, xb=xb, tb=tb):
+                def dispatch(mf, mc, kind=kind, bshape=bshape, xb=xb, tb=tb,
+                             donate=donate):
                     plan = self._local_plan(kind, bshape, x.dtype, mf, mc,
-                                            truncated)
+                                            truncated, donate=donate)
+                    if donate:
+                        xb = jnp.asarray(np.broadcast_to(host, bshape))
                     return plan(xb, tb) if truncated else plan(xb)
 
                 out, _ = self.run_with_regrow(
@@ -741,19 +857,41 @@ class PHEngine:
         distinct images, so callers that need a *fixed* dispatch shape
         (the serving daemon's warmed plans) must pass ``dedupe=False``.
         """
+        return self.run_batch_async(images, truncate_values, bucket=bucket,
+                                    dedupe=dedupe).resolve()
+
+    def run_batch_async(self, images, truncate_values=None, *,
+                        bucket: tuple[int, int] | None = None,
+                        dedupe: bool = True) -> PendingResult:
+        """Non-blocking :meth:`run_batch`: device compute is dispatched —
+        and, with ``overlap.async_overflow``, result copies start
+        streaming to the host — before this returns.  ``resolve()`` on
+        the returned :class:`repro.ph.overlap.PendingResult` performs
+        the deferred overflow check, the rare regrow-and-replay, and the
+        host-side pad repair, producing exactly :meth:`run_batch`'s
+        ``PHResult`` (the synchronous method literally calls this and
+        resolves immediately, so bit-identity is by construction).  The
+        serving daemon's tick thread dispatches through this and hands
+        ``resolve()`` to its harvest thread.
+        """
         if dedupe:
             plan = self._dedupe_batch(images, truncate_values)
             if plan is not None:
                 reps, inverse, rep_images, rep_tvs = plan
-                res = self.run_batch(rep_images, rep_tvs, bucket=bucket,
-                                     dedupe=False)
-                host = jax.tree.map(np.asarray, res.diagram)
-                diag = jax.tree.map(lambda a: a[inverse], host)
-                thr = res.threshold
-                if thr is not None and not np.isscalar(thr):
-                    thr = np.asarray(thr)[inverse]
-                return dataclasses.replace(res, diagram=diag,
-                                           threshold=thr)
+                pending = self.run_batch_async(rep_images, rep_tvs,
+                                               bucket=bucket, dedupe=False)
+
+                def fanout():
+                    res = pending.resolve()
+                    host = jax.tree.map(np.asarray, res.diagram)
+                    diag = jax.tree.map(lambda a: a[inverse], host)
+                    thr = res.threshold
+                    if thr is not None and not np.isscalar(thr):
+                        thr = np.asarray(thr)[inverse]
+                    return dataclasses.replace(res, diagram=diag,
+                                               threshold=thr)
+
+                return PendingResult(fanout)
         arr = images if hasattr(images, "ndim") else None
         if arr is not None and arr.ndim == 3 and (
                 bucket is None or tuple(bucket) == tuple(arr.shape[1:])):
@@ -771,8 +909,11 @@ class PHEngine:
                 [np.asarray(im) for im in seq]), truncate_values)
         return self._run_batch_bucketed(seq, truncate_values, bucket)
 
-    def _run_batch_uniform(self, images, truncate_values=None) -> PHResult:
-        """One-compiled-shape (B, H, W) batch (the pre-serving path)."""
+    def _run_batch_uniform(self, images, truncate_values=None
+                           ) -> PendingResult:
+        """One-compiled-shape (B, H, W) batch (the pre-serving path);
+        dispatches and returns a :class:`PendingResult` whose
+        ``resolve()`` finishes the deferred overflow/regrow work."""
         x = self.cast_input(images)
         if x.ndim != 3:
             raise ValueError(f"expected (B, H, W) batch, got shape {x.shape}")
@@ -795,21 +936,30 @@ class PHEngine:
                 return plan(x, tvals)
             return plan(x)
 
-        diag, stats = self.run_with_regrow(
+        _, finish = self.begin_regrow(
             dispatch, lambda d: bool(np.any(np.asarray(d.overflow))),
-            n, "batched", memo_key=("batched", shape, str(dtype)))
-        return PHResult(diag, self.config.replace(
-            max_features=stats.final_max_features,
-            max_candidates=stats.final_max_candidates), stats,
-            truncate_values)
+            n, "batched", memo_key=("batched", shape, str(dtype)),
+            stream=self._stream_results())
+
+        def materialize(tvs=truncate_values):
+            diag, stats = finish()
+            return PHResult(diag, self.config.replace(
+                max_features=stats.final_max_features,
+                max_candidates=stats.final_max_candidates), stats, tvs)
+
+        return PendingResult(materialize)
 
     def _run_batch_bucketed(self, seq, truncate_values,
-                            bucket: tuple[int, int] | None) -> PHResult:
-        """Mixed-shape batch via one shape-bucketed padded dispatch."""
+                            bucket: tuple[int, int] | None) -> PendingResult:
+        """Mixed-shape batch via one shape-bucketed padded dispatch;
+        dispatches and returns a :class:`PendingResult` (the pad repair
+        and row stacking happen at ``resolve()``)."""
         from repro.pipeline.padding import pad_fixup, pad_image, \
             pad_threshold, unpad_diagram
         from repro.pipeline.scheduler import bucket_shape
-        imgs = [np.asarray(self.cast_input(im)) for im in seq]
+        # Host-side cast: no device allocation during batch building (the
+        # one H2D transfer below stages the whole padded batch at once).
+        imgs = [self.cast_input_host(im) for im in seq]
         if bucket is None:
             per = [bucket_shape(im.shape, self.config.bucket_rounding)
                    for im in imgs]
@@ -842,28 +992,45 @@ class PHEngine:
         dtype = batch.dtype
         shape = batch.shape
         n = bucket[0] * bucket[1]
-        xb = jnp.asarray(batch)
+        donate = self.donate_batched()
+        xb = None if donate else jnp.asarray(batch)
         tvj = jnp.asarray(tvals, threshold_dtype(dtype))
+        dispatched = [0]
 
         def dispatch(mf, mc):
-            plan = self._local_plan("batched", shape, dtype, mf, mc, True)
+            plan = self._local_plan("batched", shape, dtype, mf, mc, True,
+                                    donate=donate)
+            if donate:
+                # A donated buffer is consumed by its dispatch: every
+                # call (re)stages from the retained host batch.  Replays
+                # after an overflow are the only second calls.
+                if dispatched[0]:
+                    self.overlap_counters.bump("donation_replays")
+                dispatched[0] += 1
+                return plan(jnp.asarray(batch), tvj)
             return plan(xb, tvj)
 
-        diag, stats = self.run_with_regrow(
+        _, finish = self.begin_regrow(
             dispatch, lambda d: bool(np.any(np.asarray(d.overflow))),
-            n, "batched", memo_key=("batched", shape, str(dtype)))
-        rows = []
-        host = jax.tree.map(np.asarray, diag)
-        for i in range(len(imgs)):
-            d = Diagram(*(x[i] for x in host))
-            if fixups[i] is not None:
-                d = unpad_diagram(d, fixups[i], bucket)
-            rows.append(d)
-        stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
-        return PHResult(stacked, self.config.replace(
-            max_features=stats.final_max_features,
-            max_candidates=stats.final_max_candidates), stats,
-            tvals)
+            n, "batched", memo_key=("batched", shape, str(dtype)),
+            stream=self._stream_results())
+
+        def materialize():
+            diag, stats = finish()
+            rows = []
+            host = jax.tree.map(np.asarray, diag)
+            for i in range(len(imgs)):
+                d = Diagram(*(x[i] for x in host))
+                if fixups[i] is not None:
+                    d = unpad_diagram(d, fixups[i], bucket)
+                rows.append(d)
+            stacked = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+            return PHResult(stacked, self.config.replace(
+                max_features=stats.final_max_features,
+                max_candidates=stats.final_max_candidates), stats,
+                tvals)
+
+        return PendingResult(materialize)
 
     def num_candidates(self, image, truncate_value=None) -> int:
         """Count death-point candidates under this engine's config (for
@@ -1020,6 +1187,8 @@ class PHEngine:
                 plan = self.tiled_plan(shape, dtype, grid, mf, tf, tk,
                                        truncated, ctx)
                 out = plan(x, tvj) if truncated else plan(x)
+            if self._stream_results():
+                start_d2h(out, self.overlap_counters)
             tile_of = bool(out.tile_overflow)
             merge_of = bool(out.merge_overflow)
             if not (tile_of or merge_of) or not cfg.auto_regrow \
@@ -1109,8 +1278,8 @@ class PHEngine:
             dtype = jnp.asarray(staged.pvals).dtype
             source = staged
         else:
-            x = np.asarray(self.cast_input(image))
-            if x.ndim != 2:
+            x = self.cast_input_host(image)   # host-side: hashing + dirty
+            if x.ndim != 2:                   # stacks never bounce via HBM
                 raise ValueError(f"expected 2D image, got shape {x.shape}")
             if truncate_value is None:
                 truncate_value = self._auto_threshold(image)
@@ -1184,6 +1353,8 @@ class PHEngine:
                                        tk, truncated)
             new_state, out = mg(base, fresh, slots, tvj) if truncated \
                 else mg(base, fresh, slots)
+            if self._stream_results():
+                start_d2h(out, self.overlap_counters)
             tile_of = bool(out.tile_overflow)
             merge_of = bool(out.merge_overflow)
             if not (tile_of or merge_of) or not cfg.auto_regrow \

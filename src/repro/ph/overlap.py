@@ -1,0 +1,133 @@
+"""Overlap-engine primitives: async D2H streaming, transfer counters,
+deferred results.
+
+The synchronous transfer path serializes four things per dispatch: host
+staging, H2D transfer, device compute, and the D2H readback that the
+overflow check (``bool(np.any(np.asarray(d.overflow)))``) forces.  The
+overlap engine (``PHConfig.overlap`` / :class:`repro.ph.OverlapSpec`)
+breaks that chain; this module holds the pieces every layer shares:
+
+* :func:`start_d2h` — begin asynchronous device->host copies on every
+  ``jax.Array`` leaf of a pytree (``copy_to_host_async``), so a later
+  ``np.asarray`` drains an in-flight copy instead of starting a blocking
+  one.  Results and their packed overflow scalar start streaming the
+  moment the dispatch returns.
+* :class:`OverlapCounters` — thread-safe counters the benchmarks and the
+  perf gate read: H2D transfer calls, D2H streams started, blocking
+  syncs on the **dispatch** path (must be zero in steady state with
+  overlap on — the PR 6 ``steady_state_traces == 0`` pattern), blocking
+  syncs on the harvest path (where they belong), and donation replays
+  (re-staging after the rare overflow consumed a donated buffer).
+* :class:`PendingResult` — a deferred computation handle whose
+  ``resolve()`` is memoized and thread-safe (the dispatch thread and a
+  harvest thread may race the first resolve).
+
+Nothing here changes numerics: every overlapped path resolves to exactly
+the bytes the synchronous path produces — overflow/regrow semantics are
+deferred, not altered.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["OverlapCounters", "PendingResult", "start_d2h"]
+
+
+class OverlapCounters:
+    """Thread-safe transfer/sync counters for the overlap engine.
+
+    ``h2d_transfers``
+        ``jax.device_put`` calls issued by staging (a fused batch +
+        thresholds put counts once — the point of fusing them).
+    ``d2h_streams``
+        async device->host copy groups started (one per dispatch whose
+        results were streamed).
+    ``dispatch_syncs``
+        blocking device readbacks performed on the *dispatch* thread
+        (the pipeline driver loop / serving tick).  The overlap engine's
+        contract is that this stays **zero** in steady state; the bench
+        records it per round and the perf gate asserts it.
+    ``harvest_syncs``
+        blocking readbacks performed where they are free — on a harvest
+        thread (or inside an explicit ``resolve()``).
+    ``donation_replays``
+        regrow replays that had to re-stage a consumed (donated) input
+        buffer from its retained host copy.
+    """
+
+    FIELDS = ("h2d_transfers", "d2h_streams", "dispatch_syncs",
+              "harvest_syncs", "donation_replays")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        for f in self.FIELDS:
+            setattr(self, f, 0)
+
+    def bump(self, field: str, k: int = 1) -> None:
+        if field not in self.FIELDS:
+            raise ValueError(f"unknown overlap counter {field!r}")
+        with self._lock:
+            setattr(self, field, getattr(self, field) + k)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {f: getattr(self, f) for f in self.FIELDS}
+
+
+def start_d2h(tree: Any, counters: OverlapCounters | None = None) -> Any:
+    """Begin async device->host copies for every ``jax.Array`` leaf.
+
+    Host (numpy) leaves are untouched; the tree is returned as-is so the
+    call composes inline: ``start_d2h(plan(x))``.  A later
+    ``np.asarray`` on a leaf then waits only for its in-flight copy —
+    never for a newly scheduled one — which is what lets the overflow
+    check and the diagram fetch ride the same stream.
+    """
+    started = False
+    for leaf in jax.tree.leaves(tree):
+        begin = getattr(leaf, "copy_to_host_async", None)
+        if begin is not None:
+            begin()
+            started = True
+    if started and counters is not None:
+        counters.bump("d2h_streams")
+    return tree
+
+
+class PendingResult:
+    """A deferred result: ``resolve()`` runs ``finish`` exactly once
+    (memoized, thread-safe) and returns its value thereafter.
+
+    ``finish`` performs whatever blocking work the dispatch path
+    deferred — the overflow check, the regrow-and-replay loop, host
+    materialization/repair — so callers choose *where* that blocking
+    happens (inline for the synchronous API, a harvest thread for the
+    overlapped one).  An exception raised by ``finish`` is re-raised on
+    every subsequent ``resolve()``.
+    """
+
+    __slots__ = ("_finish", "_lock", "_done", "_value", "_exc")
+
+    def __init__(self, finish: Callable[[], Any]):
+        self._finish = finish
+        self._lock = threading.Lock()
+        self._done = False
+        self._value = None
+        self._exc: BaseException | None = None
+
+    def resolve(self) -> Any:
+        with self._lock:
+            if not self._done:
+                try:
+                    self._value = self._finish()
+                except BaseException as exc:
+                    self._exc = exc
+                finally:
+                    self._done = True
+                    self._finish = None     # drop closed-over buffers
+            if self._exc is not None:
+                raise self._exc
+            return self._value

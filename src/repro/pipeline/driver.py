@@ -15,6 +15,18 @@ computes (double buffering; ``PHConfig.prefetch_rounds``).  Failures keep
 their semantics: a staged-but-unconsumed round is simply discarded and its
 images re-scheduled from the work log.
 
+Overlap engine (``PHConfig.overlap`` with ``async_harvest``): instead of
+blocking on each round's results, the driver dispatches through the
+pool's ``begin_staged`` and hands the deferred resolution to a harvest
+thread, keeping up to ``OverlapSpec.staging_depth`` rounds in flight —
+so in steady state the dispatch loop performs **zero** blocking device
+readbacks (counter-verified: ``OverlapCounters.dispatch_syncs``).  The
+failure injector now observes *dispatch sequence numbers* (identical to
+completed-round indices in synchronous mode); on a failure, rounds whose
+harvest already completed are recorded — they are real results — while
+unresolved in-flight rounds are discarded and their images re-schedule
+from the work log, exactly like a discarded prefetch slot.
+
 ``run_pipeline`` is the engine's distributed workhorse: call it through
 :meth:`repro.ph.PHEngine.run_distributed`.  ``pool`` is any executor with
 ``num_executors`` / ``estimate_costs`` / ``load_round`` / ``run_staged``
@@ -92,6 +104,35 @@ def run_pipeline(pool, images, *, strategy: str = "part_LPT",
     rounds = 0
     attempt = 0
     prefetch = max(0, int(getattr(pool, "prefetch_rounds", 0)))
+    ospec = getattr(pool, "overlap", None)
+    overlapped = (ospec is not None and ospec.enabled
+                  and ospec.async_harvest
+                  and hasattr(pool, "begin_staged"))
+    depth = ospec.staging_depth if overlapped else 0
+    counters = getattr(getattr(pool, "engine", None),
+                       "overlap_counters", None)
+
+    def record(rnd, per_image):
+        nonlocal rounds
+        for img_id, diag in per_image.items():
+            summary = _summarize(diag)
+            done[img_id] = summary
+            if log_path:
+                with log_path.open("a") as f:
+                    f.write(json.dumps(
+                        {"image_id": img_id,
+                         "summary": summary}) + "\n")
+        rounds += 1
+        if verbose:
+            print(f"round {rounds}: {rnd.kind} {rnd.shape} "
+                  f"{len(per_image)} images "
+                  f"({len(done)}/{len(metas)})", flush=True)
+
+    def resolve_on_harvest(pending_round):
+        # Runs on the harvest thread: blocking readbacks are free here.
+        if counters is not None:
+            counters.bump("harvest_syncs")
+        return pending_round.resolve()
 
     while pending and attempt <= max_retries:
         attempt += 1
@@ -107,8 +148,17 @@ def run_pipeline(pool, images, *, strategy: str = "part_LPT",
         round_list = list(sched.rounds())
         loader = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ph-load") \
             if prefetch and len(round_list) > 1 else None
+        harvest = ThreadPoolExecutor(max_workers=1,
+                                     thread_name_prefix="ph-harvest") \
+            if overlapped else None
         staged_q: list = []     # FIFO of in-flight load futures
+        harvest_q: list = []    # FIFO of (harvest future, round)
         next_load = 0
+        # Dispatch sequence for the failure injector: in synchronous mode
+        # it equals the completed-round counter at injection time, so
+        # injector semantics are unchanged; under overlap it indexes
+        # dispatch order (rounds ahead of the harvested count).
+        seq = rounds
 
         def top_up():
             # The front future is the round about to be consumed; while a
@@ -132,28 +182,28 @@ def run_pipeline(pool, images, *, strategy: str = "part_LPT",
                     next_load += 1
                 top_up()
                 if failure_injector:
-                    failure_injector(rounds)
-                per_image = pool.run_staged(staged)
-                for img_id, diag in per_image.items():
-                    summary = _summarize(diag)
-                    done[img_id] = summary
-                    if log_path:
-                        with log_path.open("a") as f:
-                            f.write(json.dumps(
-                                {"image_id": img_id,
-                                 "summary": summary}) + "\n")
-                rounds += 1
-                if verbose:
-                    print(f"round {rounds}: {rnd.kind} {rnd.shape} "
-                          f"{len(per_image)} images "
-                          f"({len(done)}/{len(metas)})", flush=True)
-            pending = [mm for mm in metas if mm.image_id not in done]
+                    failure_injector(seq)
+                seq += 1
+                if harvest is not None:
+                    # Overlapped: dispatch now, resolve on the harvest
+                    # thread; block only when the in-flight window would
+                    # exceed the staging-ring depth.
+                    harvest_q.append((harvest.submit(
+                        resolve_on_harvest, pool.begin_staged(staged)),
+                        rnd))
+                    while len(harvest_q) > depth:
+                        fut, rnd_done = harvest_q.pop(0)
+                        record(rnd_done, fut.result())
+                else:
+                    record(rnd, pool.run_staged(staged))
+            while harvest_q:
+                fut, rnd_done = harvest_q.pop(0)
+                record(rnd_done, fut.result())
         except RuntimeError as e:
             failures += 1
-            pending = [mm for mm in metas if mm.image_id not in done]
             if verbose:
                 print(f"FAILURE (attempt {attempt}): {e}; "
-                      f"{len(pending)} images re-scheduled", flush=True)
+                      f"re-scheduling incomplete images", flush=True)
         finally:
             # Discard staged-but-unconsumed rounds (their images simply
             # re-schedule); surface nothing from the loader here.
@@ -162,8 +212,21 @@ def run_pipeline(pool, images, *, strategy: str = "part_LPT",
                     fut.result()
                 except Exception:
                     pass
+            # Harvest rounds already in flight: a completed round is a
+            # real result (record it — its images must not re-schedule);
+            # a failed or poisoned one is discarded like a prefetch slot
+            # and its images re-schedule from the work log.
+            while harvest_q:
+                fut, rnd_done = harvest_q.pop(0)
+                try:
+                    record(rnd_done, fut.result())
+                except Exception:
+                    pass
+            if harvest is not None:
+                harvest.shutdown(wait=True)
             if loader is not None:
                 loader.shutdown(wait=True)
+        pending = [mm for mm in metas if mm.image_id not in done]
 
     if pending:
         raise RuntimeError(f"pipeline could not finish {len(pending)} images "

@@ -60,7 +60,7 @@ import hashlib
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
 
@@ -157,6 +157,16 @@ class PHServer:
         self._inflight = 0
         self._thread: threading.Thread | None = None
         self._warm_traces: int | None = None
+        # Overlap engine: with async_harvest on, the tick thread only
+        # *dispatches* batches — futures resolve (and in-flight counts
+        # drop) on this harvest thread, so the tick never blocks on
+        # result materialization.  The delta path keeps its synchronous
+        # per-request dispatch (the cache tier inserts on completion).
+        ospec = engine.overlap_spec()
+        self._harvest: ThreadPoolExecutor | None = None
+        if ospec.enabled and ospec.async_harvest and not self._delta_serving:
+            self._harvest = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ph-serve-harvest")
         if start:
             self.start()
 
@@ -216,6 +226,11 @@ class PHServer:
         if self._thread is not None:
             self._thread.join(timeout)
             self._thread = None
+        if self._harvest is not None:
+            # In-flight batches finish resolving on the harvest thread
+            # before shutdown returns (their futures must not dangle).
+            self._harvest.shutdown(wait=True)
+            self._harvest = None
 
     def __enter__(self) -> "PHServer":
         return self
@@ -291,6 +306,7 @@ class PHServer:
         snap["engine"] = self.engine.plan_stats()
         snap["steady_state_traces"] = self.steady_state_traces()
         snap["cache"] = self.cache_stats()
+        snap["overlap"] = self.engine.overlap_counters.snapshot()
         return snap
 
     # -- cache tier --------------------------------------------------------
@@ -353,20 +369,27 @@ class PHServer:
                             range(min(len(q), self.spec.batch_cap))]
                     self._inflight += len(reqs)
                     cond.notify_all()   # blocked submitters: space freed
+                deferred = False
                 try:
-                    self._dispatch(bucket, reqs)
+                    deferred = self._dispatch(bucket, reqs)
                 finally:
-                    with cond:
-                        self._inflight -= len(reqs)
-                        cond.notify_all()   # drain()/shutdown waiters
+                    if not deferred:
+                        with cond:
+                            self._inflight -= len(reqs)
+                            cond.notify_all()   # drain()/shutdown waiters
 
-    def _dispatch(self, bucket, reqs) -> None:
+    def _dispatch(self, bucket, reqs) -> bool:
         """Run one bucket micro-batch and resolve its futures.  A raise
         anywhere in compute fails *this round's* futures only — the loop
-        (and every other queued request) carries on."""
+        (and every other queued request) carries on.
+
+        Returns True when resolution was handed to the harvest thread
+        (async harvest): the futures resolve there, bit-identically to
+        the synchronous path — same :meth:`_finish_batch` on another
+        thread — and the in-flight accounting follows them."""
         if self._delta_serving:
             self._dispatch_delta(bucket, reqs)
-            return
+            return False
         t0 = time.perf_counter()
         imgs = [r.image for r in reqs]
         tvs = [r.truncate_value for r in reqs]
@@ -379,8 +402,40 @@ class PHServer:
         try:
             # dedupe=False: the warmed plans require the fixed dispatch
             # shape; exact duplicates are the cache tier's job anyway.
-            out = self.engine.run_batch(imgs, tvs, bucket=bucket,
-                                        dedupe=False)
+            # Dispatch-only: device compute launches (and, with
+            # async_overflow, D2H copies start) without blocking here.
+            pending = self.engine.run_batch_async(imgs, tvs, bucket=bucket,
+                                                  dedupe=False)
+        except Exception as exc:        # noqa: BLE001 — isolate the round
+            for r in reqs:
+                r.future.set_exception(exc)
+            self.metrics.record_failure(bucket, len(reqs))
+            return False
+        if self._harvest is not None:
+            self._harvest.submit(self._harvest_batch, bucket, reqs,
+                                 pending, t0)
+            return True
+        self.engine.overlap_counters.bump("dispatch_syncs")
+        self._finish_batch(bucket, reqs, pending, t0)
+        return False
+
+    def _harvest_batch(self, bucket, reqs, pending, t0) -> None:
+        """Harvest-thread entry: resolve the batch, then release its
+        in-flight slots (drain()/shutdown wait on exactly this)."""
+        try:
+            self.engine.overlap_counters.bump("harvest_syncs")
+            self._finish_batch(bucket, reqs, pending, t0)
+        finally:
+            with self._cond:
+                self._inflight -= len(reqs)
+                self._cond.notify_all()
+
+    def _finish_batch(self, bucket, reqs, pending, t0) -> None:
+        """Materialize one dispatched batch and resolve its futures —
+        the blocking half of :meth:`_dispatch`, runnable on either the
+        tick thread (sync) or the harvest thread (async)."""
+        try:
+            out = pending.resolve()
         except Exception as exc:        # noqa: BLE001 — isolate the round
             for r in reqs:
                 r.future.set_exception(exc)

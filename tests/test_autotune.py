@@ -443,6 +443,13 @@ _DELTA_ROW = {
               "inserts": 12, "evictions": 4, "collisions": 0},
 }
 
+_OVERLAP_ROW = {
+    "name": "pipeline/heterogeneous_128", "max_size": 128,
+    "host_parallelism": 1, "overlap_speedup": 1.1,
+    "steady_state_dispatch_syncs": 0, "h2d_transfers_per_round": 1.0,
+    "d2h_streams_per_round": 1.0, "donation_replays": 0,
+}
+
 
 def _gate_pipeline(tmp_path, cur_rows, base_rows=None):
     pg = _load_perf_gate()
@@ -457,9 +464,12 @@ def _gate_pipeline(tmp_path, cur_rows, base_rows=None):
 
 
 def test_gate_pipeline_passes_and_requires_delta_rows(tmp_path):
-    assert _gate_pipeline(tmp_path, [_DELTA_ROW], [_DELTA_ROW]) == []
+    rows = [_DELTA_ROW, _OVERLAP_ROW]
+    assert _gate_pipeline(tmp_path, rows, rows) == []
     fails = _gate_pipeline(tmp_path, [])
     assert any("no delta frame-sequence rows" in f for f in fails)
+    assert any("no overlap-instrumented streaming rows" in f
+               for f in fails)
 
 
 def test_gate_pipeline_fails_on_identity_break(tmp_path):
@@ -478,7 +488,7 @@ def test_gate_pipeline_fails_on_identity_break(tmp_path):
 def test_gate_pipeline_full_scale_floor(tmp_path):
     big = dict(_DELTA_ROW, name="pipeline/delta_frame_seq_1024",
                size=1024, delta_speedup_10pct=6.3)
-    assert _gate_pipeline(tmp_path, [_DELTA_ROW, big]) == []
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW, big, _OVERLAP_ROW]) == []
     slow = dict(big, delta_speedup_10pct=3.0)
     fails = _gate_pipeline(tmp_path, [slow])
     assert any("< 5x at full scale" in f for f in fails)
@@ -498,6 +508,46 @@ def test_gate_pipeline_trajectory_on_speedup(tmp_path):
     flipped = dict(_DELTA_ROW, delta_bit_identical=False)
     fails = _gate_pipeline(tmp_path, [flipped], [_DELTA_ROW])
     assert any("delta_bit_identical" in f for f in fails)
+
+
+def test_gate_pipeline_overlap_rule(tmp_path):
+    # structural invariants gate on every instrumented row
+    synced = dict(_OVERLAP_ROW, steady_state_dispatch_syncs=3)
+    fails = _gate_pipeline(tmp_path, [_DELTA_ROW, synced])
+    assert any("blocking dispatch-path" in f for f in fails)
+    split = dict(_OVERLAP_ROW, h2d_transfers_per_round=2.0)
+    fails = _gate_pipeline(tmp_path, [_DELTA_ROW, split])
+    assert any("fused batch+thresholds staging broken" in f for f in fails)
+    unfused = dict(_OVERLAP_ROW, h2d_transfers_per_round=0.5)
+    fails = _gate_pipeline(tmp_path, [_DELTA_ROW, unfused])
+    assert any("want exactly 1 (fused)" in f for f in fails)
+    # tiled mixes stage oversize rounds through the provider: < 1 is fine
+    tiled = dict(_OVERLAP_ROW, name="pipeline/tiled_mix_192",
+                 max_size=192, h2d_transfers_per_round=0.833)
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW, tiled]) == []
+    # the 1.2x floor binds only at gate scale on a parallel host
+    slow = dict(_OVERLAP_ROW, name="pipeline/heterogeneous_384",
+                max_size=384, host_parallelism=4, overlap_speedup=1.05)
+    fails = _gate_pipeline(tmp_path, [_DELTA_ROW, slow])
+    assert any("overlap_speedup" in f for f in fails)
+    fast = dict(slow, overlap_speedup=1.3)
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW, fast]) == []
+    # ... and is exempt on a serial host or at smoke scale
+    serial_host = dict(slow, host_parallelism=1)
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW, serial_host]) == []
+    smoke = dict(slow, name="pipeline/heterogeneous_128", max_size=128)
+    assert _gate_pipeline(tmp_path, [_DELTA_ROW, smoke]) == []
+
+
+def test_gate_pipeline_trajectory_on_overlap(tmp_path):
+    regressed = dict(_OVERLAP_ROW, overlap_speedup=0.4)  # < 0.5 x 1.1
+    fails = _gate_pipeline(tmp_path, [_DELTA_ROW, regressed],
+                           [_DELTA_ROW, _OVERLAP_ROW])
+    assert any("overlap_speedup" in f for f in fails)
+    synced = dict(_OVERLAP_ROW, steady_state_dispatch_syncs=1)
+    fails = _gate_pipeline(tmp_path, [_DELTA_ROW, synced],
+                           [_DELTA_ROW, _OVERLAP_ROW])
+    assert any("steady_state_dispatch_syncs" in f for f in fails)
 
 
 def test_gate_serve_cache_tier_rule(tmp_path):

@@ -1,0 +1,367 @@
+"""Overlap engine: async staging rings, donated device buffers,
+non-blocking regrow, harvest-thread D2H — across the engine, pipeline,
+serving, and delta paths.
+
+The contract under test everywhere: every overlapped path is
+**bit-identical** to its synchronous twin (overflow semantics deferred,
+never altered), the dispatch path performs zero blocking device
+readbacks in steady state, and host-side round building allocates
+nothing on device until the one fused ``jax.device_put``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import astro
+from repro.distributed.context import single_device_ctx
+from repro.ph import (DeltaSpec, OverlapSpec, PHConfig, PHEngine, ServeSpec,
+                      TileSpec)
+from repro.pipeline.driver import FailureInjector
+from repro.pipeline.executor import ShardedPHExecutor
+from repro.pipeline.scheduler import BucketRound, ImageMeta
+
+
+def _bumpy(seed=0, shape=(8, 8)):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+def _assert_diagrams_equal(d, ref):
+    c = int(d.count)
+    assert c == int(ref.count)
+    for a, b in ((d.birth, ref.birth), (d.death, ref.death),
+                 (d.p_birth, ref.p_birth), (d.p_death, ref.p_death)):
+        assert np.array_equal(np.asarray(a)[:c], np.asarray(b)[:c])
+
+
+# ---------------------------------------------------------------------------
+# OverlapSpec plumbing: validation, plan_key, flags, JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_overlap_spec_validation():
+    spec = OverlapSpec()
+    assert spec.enabled and spec.donate and spec.staging_depth == 2
+    assert spec.async_overflow and spec.async_harvest
+    with pytest.raises(ValueError):
+        OverlapSpec(staging_depth=0)
+    with pytest.raises(ValueError):
+        OverlapSpec(donate="yes")
+    with pytest.raises(ValueError):
+        PHConfig(overlap="on")
+
+
+def test_overlap_plan_key_and_roundtrip():
+    cfg = PHConfig(overlap=OverlapSpec())
+    again = PHConfig.from_json(cfg.to_json())
+    assert again == cfg and again.plan_key() == cfg.plan_key()
+    # donation changes input/output aliasing -> selects executables;
+    # ring depth and the async toggles are host-side scheduling only.
+    assert cfg.plan_key() != PHConfig().plan_key()
+    assert cfg.plan_key() != PHConfig(
+        overlap=OverlapSpec(donate=False)).plan_key()
+    assert cfg.plan_key() == PHConfig(
+        overlap=OverlapSpec(staging_depth=7, async_overflow=False,
+                            async_harvest=False)).plan_key()
+
+
+def test_overlap_from_flags():
+    from types import SimpleNamespace
+    cfg = PHConfig.from_flags(SimpleNamespace(
+        overlap=True, overlap_depth=3, no_donate=True,
+        no_async_overflow=False, no_async_harvest=False))
+    assert cfg.overlap == OverlapSpec(staging_depth=3, donate=False)
+    assert PHConfig.from_flags(SimpleNamespace()).overlap is None
+    # any overlap sub-flag implies the spec even without --overlap
+    assert PHConfig.from_flags(SimpleNamespace(
+        no_async_harvest=True)).overlap == OverlapSpec(async_harvest=False)
+
+
+# ---------------------------------------------------------------------------
+# Host-side staging: no device bounce, one fused H2D per round
+# ---------------------------------------------------------------------------
+
+def test_cast_input_host_matches_device_cast():
+    import jax.numpy as jnp
+    for cfg in (PHConfig(), PHConfig(dtype="float32")):
+        eng = PHEngine(cfg)
+        for img in (np.ones((4, 4), np.float64),
+                    np.ones((4, 4), np.float32),
+                    np.arange(16, dtype=np.int32).reshape(4, 4)):
+            host = eng.cast_input_host(img)
+            dev = eng.cast_input(img)
+            assert isinstance(host, np.ndarray)
+            assert not isinstance(host, jnp.ndarray.__mro__[0]) or True
+            assert host.dtype == np.asarray(dev).dtype
+            np.testing.assert_array_equal(host, np.asarray(dev))
+
+
+def test_build_host_round_allocates_nothing_on_device(monkeypatch):
+    """Regression for the host->device->host staging bounce: building a
+    padded round is pure numpy — any device_put (or implicit jnp
+    conversion) during the build is a bug."""
+    import jax
+    eng = PHEngine(PHConfig(max_features=2048, filter_level="filter_std"))
+    pool = ShardedPHExecutor(eng, single_device_ctx())
+    rnd = BucketRound("whole", (32, 32), ((0, ImageMeta(0, (24, 24))),))
+
+    def boom(*a, **kw):
+        raise AssertionError("device_put during host-side round build")
+
+    monkeypatch.setattr(jax, "device_put", boom)
+    staged = pool._build_host_round(rnd)
+    monkeypatch.undo()
+    assert isinstance(staged.host_batch, np.ndarray)
+    assert isinstance(staged.host_tvals, np.ndarray)
+    assert staged.batch is None     # nothing staged yet
+    # ... and the subsequent staging is exactly one fused device_put
+    before = eng.overlap_counters.snapshot()
+    staged = pool._stage_round(staged)
+    after = eng.overlap_counters.snapshot()
+    assert after["h2d_transfers"] - before["h2d_transfers"] == 1
+    assert staged.batch is not None and staged.tvals is not None
+    np.testing.assert_array_equal(np.asarray(staged.batch),
+                                  staged.host_batch)
+    np.testing.assert_array_equal(np.asarray(staged.tvals),
+                                  staged.host_tvals)
+
+
+# ---------------------------------------------------------------------------
+# Engine: run_batch_async == run_batch, donation safety, deferred regrow
+# ---------------------------------------------------------------------------
+
+def test_run_batch_async_matches_run_batch():
+    sync = PHEngine(PHConfig())
+    over = PHEngine(PHConfig(overlap=OverlapSpec()))
+    # uniform (stacked) and bucketed (mixed-shape) routes
+    stacked = np.stack([_bumpy(0), _bumpy(1), _bumpy(2)])
+    mixed = [_bumpy(3, (6, 5)), _bumpy(4, (8, 8)), _bumpy(5, (5, 9))]
+    for imgs in (stacked, mixed):
+        want = sync.run_batch(imgs)
+        pending = over.run_batch_async(imgs)
+        got = pending.resolve()
+        assert pending.resolve() is got        # memoized
+        n = len(imgs)
+        for i in range(n):
+            row = type(got.diagram)(
+                *(np.asarray(f)[i] for f in got.diagram))
+            ref = type(want.diagram)(
+                *(np.asarray(f)[i] for f in want.diagram))
+            _assert_diagrams_equal(row, ref)
+
+
+def test_donating_batch_does_not_corrupt_caller_arrays():
+    """Donation must only ever consume engine-owned padded buffers: the
+    caller's arrays are intact and a repeat call is bit-identical."""
+    over = PHEngine(PHConfig(overlap=OverlapSpec()))
+    imgs = [_bumpy(7, (6, 6)), _bumpy(8, (8, 8))]
+    copies = [im.copy() for im in imgs]
+    first = over.run_batch(imgs)
+    for im, cp in zip(imgs, copies):
+        np.testing.assert_array_equal(im, cp)
+    second = over.run_batch(imgs)
+    for f in first.diagram._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(first.diagram, f)),
+            np.asarray(getattr(second.diagram, f)), err_msg=f)
+
+
+def test_nonblocking_regrow_still_regrows():
+    """With async_overflow the check is deferred to resolve() — but an
+    overflowing batch must still regrow to the same capacities and the
+    same diagram bytes as the synchronous engine."""
+    def cfg(overlap):
+        return PHConfig(max_features=4, max_candidates=16, overlap=overlap)
+
+    imgs = np.stack([_bumpy(11, (16, 16)), _bumpy(12, (16, 16))])
+    want = PHEngine(cfg(None)).run_batch(imgs)
+    over = PHEngine(cfg(OverlapSpec()))
+    got = over.run_batch_async(imgs).resolve()
+    assert want.regrow.regrown and got.regrow.regrown
+    assert got.regrow.attempts == want.regrow.attempts
+    assert got.regrow.final_max_features == want.regrow.final_max_features
+    for f in want.diagram._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got.diagram, f)),
+                                      np.asarray(getattr(want.diagram, f)),
+                                      err_msg=f)
+    assert over.overlap_counters.snapshot()["d2h_streams"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: overlap bit-identical to sync, zero dispatch-path syncs
+# ---------------------------------------------------------------------------
+
+def _tiled_engine(**kw):
+    kw.setdefault("max_features", 4096)
+    kw.setdefault("filter_level", "filter_std")
+    return PHEngine(PHConfig(tile=TileSpec(
+        grid=(2, 2), max_features_per_tile=1024,
+        max_candidates_per_tile=2048, max_tile_pixels=32 * 32), **kw))
+
+
+IMAGES = [(0, 24), (1, 32), (2, 64), (3, 32), (4, 24)]
+
+
+def test_overlap_pipeline_bit_identical_to_sync():
+    """Heterogeneous + tiled mix end to end: the overlap engine is a
+    pure latency optimization, and in steady state every blocking
+    readback happens on the harvest thread."""
+    sync = _tiled_engine(prefetch_rounds=1)
+    over = _tiled_engine(prefetch_rounds=1, overlap=OverlapSpec())
+    want = sync.run_distributed(IMAGES)
+    before = over.overlap_counters.snapshot()
+    got = over.run_distributed(IMAGES)
+    after = over.overlap_counters.snapshot()
+    assert got.diagrams == want.diagrams
+    assert after["dispatch_syncs"] == before["dispatch_syncs"]
+    assert after["harvest_syncs"] > before["harvest_syncs"]
+    # the sync engine pays its readbacks on the dispatch path instead
+    assert sync.overlap_counters.snapshot()["harvest_syncs"] == 0
+
+
+def test_overlap_failure_discards_inflight_and_resumes(tmp_path):
+    """An injected executor failure while later rounds are staged and in
+    flight: completed harvests are real results, unresolved rounds are
+    discarded, and the retry completes everything from the work log —
+    matching the synchronous pipeline bit for bit."""
+    log = tmp_path / "overlap.jsonl"
+    over = _tiled_engine(prefetch_rounds=1,
+                         overlap=OverlapSpec(staging_depth=2))
+    res = over.run_distributed(IMAGES, work_log=log,
+                               failure_injector=FailureInjector([0, 1]))
+    assert res.failures == 2
+    assert len(res.diagrams) == len(IMAGES)
+    want = _tiled_engine().run_distributed(IMAGES)
+    assert res.diagrams == want.diagrams
+    # nothing done twice: the log holds exactly one line per image
+    import json
+    ids = [json.loads(l)["image_id"] for l in log.read_text().splitlines()]
+    assert sorted(ids) == sorted(i for i, _ in IMAGES)
+    # resume recomputes nothing
+    over2 = _tiled_engine(overlap=OverlapSpec())
+    res2 = over2.run_distributed(IMAGES, work_log=log)
+    assert res2.diagrams == res.diagrams
+    assert over2.overlap_counters.snapshot()["h2d_transfers"] == 0
+
+
+def test_overlap_failure_with_delta_does_not_poison_cache(tmp_path):
+    """The delta frame store stays consistent when an overlapped round
+    fails mid-flight: retried rounds replace entries in place and the
+    resumed results match a delta-free, overlap-free pipeline."""
+    def mk(delta, overlap):
+        return PHEngine(PHConfig(
+            max_features=4096, filter_level="filter_std", delta=delta,
+            overlap=overlap, prefetch_rounds=1,
+            tile=TileSpec(grid=(2, 2), max_features_per_tile=1024,
+                          max_candidates_per_tile=2048,
+                          max_tile_pixels=32 * 32)))
+
+    log = tmp_path / "delta_overlap.jsonl"
+    eng = mk(DeltaSpec(cache_entries=8), OverlapSpec())
+    res = eng.run_distributed([(0, 32), (2, 64)], work_log=log,
+                              failure_injector=FailureInjector([0, 1]))
+    assert res.failures == 2 and len(res.diagrams) == 2
+    assert len(eng._delta_cache._entries) == 1      # one oversized frame
+    want = mk(None, None).run_distributed([(0, 32), (2, 64)])
+    assert res.diagrams == want.diagrams
+
+
+# ---------------------------------------------------------------------------
+# Serving: harvest-thread future resolution, hammered, bit-identical
+# ---------------------------------------------------------------------------
+
+def test_server_async_harvest_bit_identical_under_hammer():
+    from repro.serving import PHServer
+    spec = ServeSpec(buckets=((8, 8), (16, 16)), batch_cap=3,
+                     tick_interval_s=0.001)
+    eng = PHEngine(PHConfig(serve=spec, overlap=OverlapSpec()))
+    eng.warmup()
+    shapes = [(6, 5), (8, 8), (12, 10), (16, 16)]
+    imgs = [_bumpy(i, shapes[i % len(shapes)]) for i in range(16)]
+    results = [None] * len(imgs)
+    errs = []
+    with PHServer(eng) as srv:
+        srv.warmup()
+        barrier = threading.Barrier(4)
+
+        def hammer(k):
+            try:
+                barrier.wait(timeout=30)
+                futs = [(i, srv.submit(imgs[i]))
+                        for i in range(k, len(imgs), 4)]
+                for i, f in futs:
+                    results[i] = f.result(timeout=120)
+            except Exception as e:          # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(k,))
+                   for k in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errs and all(r is not None for r in results)
+        assert srv.steady_state_traces() == 0
+        st = srv.stats()
+    assert st["completed"] == len(imgs)
+    assert st["overlap"]["dispatch_syncs"] == 0
+    assert st["overlap"]["harvest_syncs"] > 0
+    ref = PHEngine(PHConfig())
+    for im, res in zip(imgs, results):
+        want = ref.run(im, truncate_value=res.threshold)
+        _assert_diagrams_equal(res.diagram, want.diagram)
+
+
+def test_server_sync_and_async_harvest_agree():
+    from repro.serving import PHServer
+    spec = ServeSpec(buckets=((8, 8),), batch_cap=2,
+                     tick_interval_s=0.001)
+    imgs = [_bumpy(i) for i in range(5)]
+    out = {}
+    for label, overlap in (("sync", OverlapSpec(async_harvest=False)),
+                           ("async", OverlapSpec())):
+        eng = PHEngine(PHConfig(serve=spec, overlap=overlap))
+        with PHServer(eng) as srv:
+            futs = [srv.submit(im) for im in imgs]
+            out[label] = [f.result(timeout=120) for f in futs]
+    for a, b in zip(out["sync"], out["async"]):
+        assert a.threshold == b.threshold
+        _assert_diagrams_equal(a.diagram, b.diagram)
+
+
+def test_server_shutdown_drains_harvest_thread():
+    from repro.serving import PHServer
+    spec = ServeSpec(buckets=((8, 8),), batch_cap=2,
+                     tick_interval_s=0.001)
+    eng = PHEngine(PHConfig(serve=spec, overlap=OverlapSpec()))
+    srv = PHServer(eng)
+    futs = [srv.submit(_bumpy(i)) for i in range(6)]
+    srv.shutdown(drain=True)
+    assert all(f.done() and f.exception() is None for f in futs)
+
+
+# ---------------------------------------------------------------------------
+# Delta path: host-side casting, overlap engine bit-identity
+# ---------------------------------------------------------------------------
+
+def test_run_delta_overlap_bit_identical():
+    from repro.data.astro import FrameSequence
+    def mk(overlap):
+        return PHEngine(PHConfig(
+            max_features=2048, delta=DeltaSpec(cache_entries=4),
+            overlap=overlap,
+            tile=TileSpec(grid=(2, 2), max_tile_pixels=16 * 16,
+                          max_features_per_tile=256,
+                          max_candidates_per_tile=512)))
+
+    fs = FrameSequence(3, 32, grid=(2, 2), dirty_frac=0.3, stamp=3)
+    tv, _ = astro.filter_threshold(fs.base(), "filter_std")
+    a, b = mk(None), mk(OverlapSpec())
+    for i in range(3):
+        da = a.run_delta(fs.frame(i), tv)
+        db = b.run_delta(fs.frame(i), tv)
+        assert da.delta.hit == db.delta.hit
+        for f in da.diagram._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(da.diagram, f)),
+                np.asarray(getattr(db.diagram, f)), err_msg=f)

@@ -200,7 +200,9 @@ def test_shutdown_without_drain_fails_pending(engine):
 # ---------------------------------------------------------------------------
 
 def test_fault_injected_round_isolated(engine, monkeypatch):
-    real = engine.run_batch
+    # The tick thread dispatches through run_batch_async (run_batch is
+    # its resolve-immediately wrapper), so inject the failure there.
+    real = engine.run_batch_async
     fails = {"left": 1}
 
     def flaky(*a, **kw):
@@ -209,7 +211,7 @@ def test_fault_injected_round_isolated(engine, monkeypatch):
             raise RuntimeError("injected dispatch failure")
         return real(*a, **kw)
 
-    monkeypatch.setattr(engine, "run_batch", flaky)
+    monkeypatch.setattr(engine, "run_batch_async", flaky)
     srv = PHServer(engine, start=False)
     # 2*CAP same-bucket requests -> exactly two dispatch rounds, FIFO.
     futs = [srv.submit(_bumpy(i)) for i in range(2 * CAP)]
