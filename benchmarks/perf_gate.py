@@ -37,6 +37,13 @@ Gated invariants:
   heterogeneous and tiled mixes must show ``overlap_speedup >= 1.2``
   over the serial loop.
 
+* ``BENCH_distance.json`` — the diagram-distance rows hold their
+  structural invariants: Pallas/XLA backend **bit-parity**, the
+  dual-filtration contract (sublevel distances == superlevel distances
+  of the negated frames, bit-for-bit), capacity-pad inertness
+  (bottleneck exactly, sliced Wasserstein to float rounding), and zero
+  steady-state re-traces of the cached distance plan.
+
 **Trajectory gating**: with ``--baseline-core``/``--baseline-serve`` the
 gate additionally compares the current artifact against a *committed
 baseline snapshot* (``benchmarks/baselines/BENCH_*.json``), so perf
@@ -105,6 +112,13 @@ SERVE_TRAJECTORY = {
     "steady.steady_state_traces": ("exact", None),
     "steady.failed": ("exact", None),
     "steady.rejected": ("exact", None),
+}
+
+DISTANCE_TRAJECTORY = {
+    "distance_bit_identical": ("exact", None),
+    "sublevel_bit_identical": ("exact", None),
+    "pad_inert_bn": ("exact", None),
+    "steady_traces": ("le", None),
 }
 
 PIPELINE_TRAJECTORY = {
@@ -207,6 +221,12 @@ def _serve_latency_summaries(doc):
             return f"bucket {label}: occupancy {occ!r}"
         for series in ("queue_wait_s", "e2e_s"):
             s = b.get(series, {})
+            if s.get("count", 0) < 2:
+                # Zero samples summarize all-zero and one sample pins
+                # every percentile to that sample — "ordered" would hold
+                # vacuously, so the rule says nothing there; skip rather
+                # than read meaning into a degenerate window.
+                continue
             ps = [s.get("p50"), s.get("p95"), s.get("p99")]
             if any(p is None for p in ps):
                 return f"bucket {label}: {series} missing percentiles"
@@ -337,6 +357,64 @@ def _pipeline_trajectory(baseline):
     return check
 
 
+DISTANCE_FIELDS = ("distance_bit_identical", "sublevel_bit_identical",
+                   "pad_inert_bn", "pad_inert_sw_rel", "steady_traces")
+
+
+def _distance_invariants(doc):
+    """Every row: backend bit-parity, the dual-filtration contract, pad
+    inertness (bottleneck exactly, SW to float rounding), and zero
+    steady-state re-traces of the cached distance plan."""
+    if not doc:
+        return "empty artifact"
+    errs = []
+    for row in doc:
+        name = row.get("name", "?")
+        for field in DISTANCE_FIELDS:
+            if field not in row:
+                errs.append(f"{name}: missing {field}")
+        if row.get("distance_bit_identical") is not True:
+            errs.append(f"{name}: Pallas kernel diverged from the XLA "
+                        f"reference")
+        if row.get("sublevel_bit_identical") is not True:
+            errs.append(f"{name}: sublevel run != superlevel(-image) "
+                        f"distances")
+        if row.get("pad_inert_bn") is not True:
+            errs.append(f"{name}: bottleneck bound moved under capacity "
+                        f"padding")
+        if row.get("pad_inert_sw_rel", 1.0) > 1e-5:
+            errs.append(f"{name}: SW moved {row.get('pad_inert_sw_rel')} "
+                        f"rel under capacity padding (> 1e-5)")
+        if row.get("steady_traces", -1) != 0:
+            errs.append(f"{name}: {row.get('steady_traces')!r} "
+                        f"steady-state distance-plan traces, want 0")
+    return "; ".join(errs) or None
+
+
+def _distance_trajectory(baseline):
+    base_rows = {r.get("name"): r for r in baseline if isinstance(r, dict)}
+
+    def check(doc):
+        errs, matched = [], 0
+        for row in doc:
+            b = base_rows.get(row.get("name"))
+            if b is None:
+                continue
+            matched += 1
+            for field, (mode, arg) in DISTANCE_TRAJECTORY.items():
+                if field not in row or field not in b:
+                    continue
+                err = _check_value(f"{row['name']}.{field}", mode, arg,
+                                   row[field], b[field])
+                if err:
+                    errs.append(err)
+        if not matched:
+            errs.append("no rows matched the baseline by name")
+        return "; ".join(errs) or None
+
+    return check
+
+
 def _serve_backpressure(doc):
     sat = doc.get("saturation")
     if sat is None:
@@ -365,6 +443,7 @@ RULES = {
                   _pipeline_delta_speedup),
                  ("overlap engine holds its contract",
                   _pipeline_overlap)],
+    "distance": [("distance invariants hold", _distance_invariants)],
 }
 
 
@@ -381,7 +460,8 @@ def run_gate(kind: str, path: str,
         except (OSError, json.JSONDecodeError) as e:
             return [f"[{kind}] baseline {baseline_path}: unreadable ({e})"]
         make = {"core": _core_trajectory, "serve": _serve_trajectory,
-                "pipeline": _pipeline_trajectory}[kind]
+                "pipeline": _pipeline_trajectory,
+                "distance": _distance_trajectory}[kind]
         rules.append((f"trajectory vs {baseline_path}", make(baseline)))
     failures = []
     for name, check in rules:
@@ -398,6 +478,7 @@ def main():
     ap.add_argument("--core", help="BENCH_core.json path")
     ap.add_argument("--serve", help="BENCH_serve.json path")
     ap.add_argument("--pipeline", help="BENCH_pipeline.json path")
+    ap.add_argument("--distance", help="BENCH_distance.json path")
     ap.add_argument("--baseline-core",
                     help="committed core baseline to gate the trajectory "
                          "against (benchmarks/baselines/BENCH_core.json)")
@@ -408,11 +489,16 @@ def main():
                     help="committed pipeline baseline to gate the "
                          "trajectory against "
                          "(benchmarks/baselines/BENCH_pipeline.json)")
+    ap.add_argument("--baseline-distance",
+                    help="committed distance baseline to gate the "
+                         "trajectory against "
+                         "(benchmarks/baselines/BENCH_distance.json)")
     args = ap.parse_args()
-    if not (args.core or args.serve or args.pipeline):
-        ap.error("nothing to gate: pass --core, --serve and/or --pipeline")
+    if not (args.core or args.serve or args.pipeline or args.distance):
+        ap.error("nothing to gate: pass --core, --serve, --pipeline "
+                 "and/or --distance")
     failures = []
-    for kind in ("core", "serve", "pipeline"):
+    for kind in ("core", "serve", "pipeline", "distance"):
         path = getattr(args, kind)
         if path:
             failures += run_gate(kind, path,

@@ -84,13 +84,16 @@ def hasher(algo: str):
 
 
 def frame_digests(source, grid: tuple[int, int], *, algo: str = "blake2b",
-                  with_bytes: bool = False
+                  with_bytes: bool = False, filtration: str = "superlevel"
                   ) -> tuple[tuple[bytes, ...], tuple[bytes, ...] | None]:
     """Per-tile content digests of one frame's **halo-padded** tile bytes.
 
     ``source`` is a host 2D array or a :class:`StagedTiles` (one readback).
     Both hash exactly the bytes of ``split_tiles(image, grid, fill)`` rows,
-    so entries created from either input form match each other.  Returns
+    so entries created from either input form match each other — which is
+    why ``filtration`` matters here: the halo fill is the *user-space*
+    inert extreme of the filtration (``+inf`` under sublevel), matching
+    what :func:`repro.core.tiling.load_tile_stacks` staged.  Returns
     ``(digests, tile_bytes)`` — the raw bytes only when ``with_bytes``
     (verify mode); digests include the halo, so a neighbor-border change
     dirties this tile with no extra bookkeeping.
@@ -108,6 +111,8 @@ def frame_digests(source, grid: tuple[int, int], *, algo: str = "blake2b",
         validate_grid(arr.shape, (gr, gc))
         tr, tc = arr.shape[0] // gr, arr.shape[1] // gc
         fill = np.asarray(_neg_inf(arr.dtype))
+        if filtration == "sublevel":
+            fill = -fill
         padded = np.pad(arr, 1, constant_values=fill)
         rows = [np.ascontiguousarray(
             padded[(t // gc) * tr:(t // gc) * tr + tr + 2,
@@ -159,7 +164,8 @@ def empty_state(shape: tuple[int, int], grid: tuple[int, int], dtype,
 
 
 def dirty_stacks(source, grid: tuple[int, int], dirty: np.ndarray,
-                 bucket: int) -> tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+                 bucket: int, filtration: str = "superlevel"
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
     """Halo-padded (bucket, tr+2, tc+2) value/gidx stacks of the dirty
     tiles plus their padded slot vector.
 
@@ -179,6 +185,8 @@ def dirty_stacks(source, grid: tuple[int, int], dirty: np.ndarray,
         gr, gc = grid
         tr, tc = arr.shape[0] // gr, arr.shape[1] // gc
         fill = np.asarray(_neg_inf(arr.dtype))
+        if filtration == "sublevel":
+            fill = -fill
         padded = np.pad(arr, 1, constant_values=fill)
         win = [padded[(t // gc) * tr:(t // gc) * tr + tr + 2,
                       (t % gc) * tc:(t % gc) * tc + tc + 2] for t in dirty]
@@ -211,11 +219,21 @@ def _phase_ab_stack(pvals, pgidx, tv, *, tile_max_features: int,
 
 
 def phase_ab_stack(pvals, pgidx, tv=None, *, merge_keys: str = "packed",
+                   filtration: str = "superlevel",
                    **kwargs) -> TileBoundaryState:
     """Per-tile phases A+B over a (D, tr+2, tc+2) stack — the *same*
     vmapped program the cold tiled path runs over all T tiles, applied to
     the dirty subset.  Row independence of ``vmap`` is what makes the
-    delta state bit-identical to a cold one, row for row."""
+    delta state bit-identical to a cold one, row for row.
+
+    Under ``filtration='sublevel'`` the user-space stacks and threshold
+    negate here; the returned state is in the *internal* superlevel order,
+    exactly what the cached :class:`TileBoundaryState` rows hold (diagrams
+    only un-negate at :func:`scatter_merge`)."""
+    packed_keys.check_finite(pvals, where="tile stacks", allow_inf=True)
+    pvals = packed_keys.filtration_view(pvals, filtration)
+    if tv is not None and filtration == "sublevel":
+        tv = jnp.negative(tv)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys, pvals.dtype)
     truncated = tv is not None
     tvj = tv if truncated else _neg_inf(jnp.float32)
@@ -248,6 +266,7 @@ def _scatter_merge(state: TileBoundaryState, fresh: TileBoundaryState,
 
 def scatter_merge(state: TileBoundaryState, fresh: TileBoundaryState,
                   slots, tv=None, *, merge_keys: str = "packed",
+                  filtration: str = "superlevel",
                   **kwargs) -> tuple[TileBoundaryState, TiledDiagram]:
     """Scatter fresh dirty-tile rows into the cached state and replay the
     O(boundary) seam merge.  Returns the updated full state (the next
@@ -256,12 +275,23 @@ def scatter_merge(state: TileBoundaryState, fresh: TileBoundaryState,
     ``slots`` may contain duplicates (bucket padding repeats a real dirty
     slot with an identical fresh row), so the scatter is idempotent
     whatever order XLA applies it in.
+
+    Both states are in the internal superlevel order regardless of
+    ``filtration`` (see :func:`phase_ab_stack`); under sublevel the
+    user-space threshold negates in and only the diagram negates out.
     """
+    if tv is not None and filtration == "sublevel":
+        tv = jnp.negative(tv)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys,
                                                 state.root_val.dtype)
     truncated = tv is not None
     tvj = tv if truncated else _neg_inf(jnp.float32)
     with packed_keys.key_scope(merge_keys):
-        return _scatter_merge(state, fresh, jnp.asarray(slots, jnp.int32),
-                              tvj, truncated=truncated,
-                              merge_keys=merge_keys, **kwargs)
+        new_state, td = _scatter_merge(
+            state, fresh, jnp.asarray(slots, jnp.int32), tvj,
+            truncated=truncated, merge_keys=merge_keys, **kwargs)
+    if filtration == "sublevel":
+        d = td.diagram
+        td = td._replace(diagram=d._replace(birth=jnp.negative(d.birth),
+                                            death=jnp.negative(d.death)))
+    return new_state, td

@@ -51,9 +51,92 @@ except ImportError:  # pragma: no cover - exercised only on exotic installs
     _enable_x64 = None
 
 MERGE_KEYS = ("packed", "rank")
+FILTRATIONS = ("superlevel", "sublevel")
 
 _I64_MIN = np.int64(np.iinfo(np.int64).min)
 _LOW32 = np.int64(0xFFFFFFFF)
+
+
+def resolve_filtration(filtration: str) -> str:
+    """Validate a ``filtration`` request (superlevel or sublevel)."""
+    if filtration not in FILTRATIONS:
+        raise ValueError(f"filtration must be one of {FILTRATIONS}, "
+                         f"got {filtration!r}")
+    return filtration
+
+
+def _float_dtype(dt) -> bool:
+    dt = jnp.dtype(dt)
+    return dt.kind == "f" or dt == jnp.bfloat16
+
+
+def filtration_view(values, filtration: str):
+    """Map values between user space and the internal superlevel order.
+
+    The whole compute stack is written for the superlevel filtration
+    (births at maxima, elder-rule merges downward).  A sublevel request
+    is exact negation at the boundary: IEEE sign flips are bit-exact and
+    order-reversing, so running the unchanged superlevel machinery on
+    ``-x`` and negating the resulting diagram values is *bit-identical*
+    to ``superlevel(-x)`` — the differential oracle the tests hold every
+    path to.  Negation is an involution, so the same function maps both
+    directions (image and threshold in, diagram births/deaths out).
+
+    Sublevel needs a floating dtype: negating an integer image overflows
+    at the dtype minimum (``-int32.min`` does not exist), so integer
+    inputs are rejected with a clear error instead of wrapping silently.
+    """
+    resolve_filtration(filtration)
+    if filtration == "superlevel":
+        return values
+    if not _float_dtype(values.dtype):
+        raise ValueError(
+            f"filtration='sublevel' requires a floating dtype (negation "
+            f"of {jnp.dtype(values.dtype)} overflows at the minimum); "
+            f"cast the image to a float dtype first")
+    return -values
+
+
+def check_finite(values, where: str = "image", *,
+                 allow_inf: bool = False):
+    """Reject non-finite pixels at a public boundary (shared message).
+
+    Filtrations order pixels; NaN admits no order — the packed bit-cast
+    (:func:`monotone_key32`) scatters negative-sign NaNs below ``-inf``
+    while a stable argsort puts every NaN after ``+inf``, silently
+    corrupting diagrams either way — so NaN is rejected with the same
+    error at every public entry point (engine cast, core wrappers,
+    packed *and* rank key paths).  ``±inf`` is rejected at the *user*
+    boundary (``allow_inf=False``, the engine's ``cast_input_host``): it
+    collides with the inert pad/halo sentinels.  The core wrappers pass
+    ``allow_inf=True`` because padded/halo-filled frames legitimately
+    carry the ``±inf`` fill by the time they reach them.  Subnormals are
+    inside the contract: they order correctly under the sign-corrected
+    bit-cast and the ``-0.0`` canonicalization keeps key equality
+    matching comparison equality.
+
+    Tracers pass through unchecked (a jitted caller's values are
+    abstract); concrete device arrays sync once, which is the price of
+    the check at an eager boundary.  Returns ``values`` unchanged.
+    """
+    if isinstance(values, jax.core.Tracer):
+        return values
+    arr = np.asarray(values)
+    if not _float_dtype(arr.dtype):
+        return values
+    if arr.dtype.kind != "f":          # bfloat16: widen exactly for the test
+        arr = arr.astype(np.float32)
+    if np.isnan(arr).any():
+        raise ValueError(
+            f"non-finite pixel(s) in {where}: NaN values cannot be "
+            f"ordered by a filtration; mask or clean the image before "
+            f"calling")
+    if not allow_inf and not np.isfinite(arr).all():
+        raise ValueError(
+            f"non-finite pixel(s) in {where}: infinite values collide "
+            f"with the inert pad sentinels; mask or clean the image "
+            f"before calling")
+    return values
 
 
 def packable_dtype(dtype) -> bool:

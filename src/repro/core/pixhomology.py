@@ -560,7 +560,7 @@ def phase_c(image_flat: jnp.ndarray, key_flat: jnp.ndarray,
     static_argnames=("max_features", "max_candidates", "candidate_mode",
                      "use_pallas", "interpret", "merge_impl", "phase_a_impl",
                      "strip_rows", "merge_keys", "phase_c_impl",
-                     "phase_c_block", "tournament_width"))
+                     "phase_c_block", "tournament_width", "filtration"))
 def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
                  max_features: int = 256,
                  max_candidates: int = 4096,
@@ -573,13 +573,26 @@ def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
                  merge_keys: str = "rank",
                  phase_c_impl: str = "fused",
                  phase_c_block: int = 1024,
-                 tournament_width: int = 2) -> Diagram:
+                 tournament_width: int = 2,
+                 filtration: str = "superlevel") -> Diagram:
     """Jitted Algorithm-1 core; ``merge_keys`` must arrive fully resolved
     (the public :func:`pixhomology` wrapper resolves it and opens the x64
-    scope the packed encoding needs)."""
+    scope the packed encoding needs).
+
+    ``filtration="sublevel"`` is an exact boundary negation: the image
+    (and Variant-2 threshold, whose ``keep <= t`` semantics negate to the
+    internal ``keep >= -t``) flip sign on entry, the unchanged superlevel
+    machinery runs, and the diagram's birth/death values flip back on
+    exit.  IEEE negation is bit-exact, so the result is bit-identical to
+    ``superlevel(-image)`` with the signs flipped — the differential
+    oracle in ``tests/test_filtration_distance.py``.
+    """
     if image.ndim != 2:
         raise ValueError(f"expected 2D image, got shape {image.shape}")
     packed_keys.assert_key_context(merge_keys)
+    image = packed_keys.filtration_view(image, filtration)
+    if truncate_value is not None and filtration == "sublevel":
+        truncate_value = jnp.negative(truncate_value)
     h, w = image.shape
     vals = image.reshape(-1)
     key = total_order_keys(vals, merge_keys)
@@ -607,21 +620,36 @@ def _pixhomology(image: jnp.ndarray, truncate_value=None, *,
         raise ValueError(f"unknown candidate_mode {candidate_mode!r}")
 
     # Stage C: merge + essential class + diagram.
-    return phase_c(vals, key, labels, cand, (h, w), truncate_value,
-                   max_features=max_features, max_candidates=max_candidates,
-                   merge_impl=merge_impl, phase_c_impl=phase_c_impl,
-                   phase_c_block=phase_c_block,
-                   tournament_width=tournament_width,
-                   use_pallas=use_pallas, interpret=interpret)
+    d = phase_c(vals, key, labels, cand, (h, w), truncate_value,
+                max_features=max_features, max_candidates=max_candidates,
+                merge_impl=merge_impl, phase_c_impl=phase_c_impl,
+                phase_c_block=phase_c_block,
+                tournament_width=tournament_width,
+                use_pallas=use_pallas, interpret=interpret)
+    if filtration == "sublevel":
+        # Back to user space: births ascend from minima, padding flips to
+        # +inf, the essential class dies at the global maximum.
+        d = d._replace(birth=jnp.negative(d.birth),
+                       death=jnp.negative(d.death))
+    return d
 
 
 def pixhomology(image: jnp.ndarray, truncate_value=None, *,
                 merge_keys: str = "packed", **kwargs) -> Diagram:
-    """0-dim PH of a 2D image under the superlevel filtration (Algorithm 1).
+    """0-dim PH of a 2D image (Algorithm 1), superlevel by default.
 
     Returns a fixed-capacity :class:`Diagram`, rows sorted by descending
     (birth value, birth index); row 0 is the essential class of the global
-    maximum with death at the global minimum.
+    maximum with death at the global minimum.  ``filtration="sublevel"``
+    flips the order (floating dtypes only): rows sort ascending by birth,
+    padding is ``+inf``, and the essential class of the global minimum
+    dies at the global maximum — bit-identical to ``superlevel(-image)``
+    with the signs flipped.
+
+    Non-finite pixels are rejected with :func:`packed_keys.check_finite`
+    on concrete inputs (NaN admits no filtration order; ±inf collides
+    with the pad sentinels) — identically on the packed and rank key
+    paths, since the check precedes key resolution.
 
     ``truncate_value`` (optional, traced): the paper's Variant-2 threshold.
     Components born below it are dropped, merges below it are skipped, and
@@ -638,6 +666,7 @@ def pixhomology(image: jnp.ndarray, truncate_value=None, *,
     trace runs under :func:`repro.core.packed_keys.key_scope`, entered
     here when this is the outermost call.
     """
+    packed_keys.check_finite(image, allow_inf=True)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys, image.dtype)
     with packed_keys.key_scope(merge_keys):
         return _pixhomology(image, truncate_value, merge_keys=merge_keys,
@@ -649,6 +678,7 @@ def batched_pixhomology(images: jnp.ndarray, truncate_values=None, *,
     """vmap'd PixHomology over a batch (B, H, W) — one executor task each.
 
     ``truncate_values``: optional (B,) per-image Variant-2 thresholds."""
+    packed_keys.check_finite(images, allow_inf=True)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys, images.dtype)
     fn = functools.partial(_pixhomology, merge_keys=merge_keys, **kwargs)
     with packed_keys.key_scope(merge_keys):
@@ -664,7 +694,8 @@ def num_candidates(image: jnp.ndarray,
                    interpret: bool = False,
                    phase_a_impl: str = "fused",
                    strip_rows: int = 8,
-                   merge_keys: str = "packed") -> jnp.ndarray:
+                   merge_keys: str = "packed",
+                   filtration: str = "superlevel") -> jnp.ndarray:
     """Count death-point candidates (to size ``max_candidates``).
 
     The stage toggles follow the same semantics as :func:`pixhomology`
@@ -675,6 +706,10 @@ def num_candidates(image: jnp.ndarray,
     branches that need it (packed bit-keys avoid the argsort here too).
     """
     h, w = image.shape
+    packed_keys.check_finite(image, allow_inf=True)
+    image = packed_keys.filtration_view(image, filtration)
+    if truncate_value is not None and filtration == "sublevel":
+        truncate_value = jnp.negative(truncate_value)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys, image.dtype)
     with packed_keys.key_scope(merge_keys):
         pa = phase_a(image, phase_a_impl=phase_a_impl, strip_rows=strip_rows,

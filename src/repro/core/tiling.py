@@ -240,7 +240,7 @@ class StagedTiles:
 
 
 def load_tile_stacks(provider, grid: tuple[int, int], *,
-                     ctx=None) -> StagedTiles:
+                     ctx=None, fill=None) -> StagedTiles:
     """Stage a tile provider's halo-padded tiles on device, one at a time.
 
     ``provider``: ``shape`` / ``dtype`` / ``halo_tile(t, grid, fill=...)``
@@ -248,13 +248,16 @@ def load_tile_stacks(provider, grid: tuple[int, int], *,
     a device array as soon as it is generated, so peak host residency is a
     single halo-padded tile regardless of the image size.  With ``ctx`` the
     stacks are placed on the mesh's data axes (the same tile placement the
-    sharded per-tile phases use).
+    sharded per-tile phases use).  ``fill`` overrides the halo fill value
+    (user-space inert extreme: ``+inf`` when the stacks will be consumed
+    under the sublevel filtration; defaults to the superlevel ``-inf``).
     """
     h, w = provider.shape
     grid = tuple(grid)
     validate_grid((h, w), grid)
     n_tiles = grid[0] * grid[1]
-    fill = _neg_inf(jnp.dtype(provider.dtype)).item()
+    if fill is None:
+        fill = _neg_inf(jnp.dtype(provider.dtype)).item()
     pv = [jnp.asarray(provider.halo_tile(t, grid, fill=fill))
           for t in range(n_tiles)]
     pg = [jnp.asarray(halo_gidx_tile((h, w), grid, t))
@@ -676,7 +679,7 @@ def merge_tile_state(state: TileBoundaryState, tv, *,
     jax.jit,
     static_argnames=("grid", "max_features", "tile_max_features",
                      "tile_max_candidates", "shard_ctx", "merge_keys",
-                     "phase_c_impl", "phase_c_block"))
+                     "phase_c_impl", "phase_c_block", "filtration"))
 def _tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
                        grid: tuple[int, int],
                        max_features: int = 8192,
@@ -685,21 +688,28 @@ def _tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
                        shard_ctx=None,
                        merge_keys: str = "rank",
                        phase_c_impl: str = "fused",
-                       phase_c_block: int = 1024) -> TiledDiagram:
+                       phase_c_block: int = 1024,
+                       filtration: str = "superlevel") -> TiledDiagram:
     """Jitted host-resident-image core of :func:`tiled_pixhomology`."""
     if image.ndim != 2:
         raise ValueError(f"expected 2D image, got shape {image.shape}")
     h, w = image.shape
     validate_grid((h, w), grid)
     gidx2d = jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
-    pvals = split_tiles(image, grid, _neg_inf(image.dtype))
+    # Halo fill stays in user space here (the stacks core owns the
+    # filtration negation): inert means below everything under superlevel,
+    # above everything under sublevel.
+    fill = _neg_inf(image.dtype)
+    if filtration == "sublevel":
+        fill = jnp.negative(fill)
+    pvals = split_tiles(image, grid, fill)
     pgidx = split_tiles(gidx2d, grid, jnp.int32(-1))
     return _tiled_pixhomology_stacks(
         pvals, pgidx, truncate_value, shape=(h, w), grid=grid,
         max_features=max_features, tile_max_features=tile_max_features,
         tile_max_candidates=tile_max_candidates, shard_ctx=shard_ctx,
         merge_keys=merge_keys, phase_c_impl=phase_c_impl,
-        phase_c_block=phase_c_block)
+        phase_c_block=phase_c_block, filtration=filtration)
 
 
 def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
@@ -723,6 +733,7 @@ def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
     ``split_tiles`` below or by :func:`load_tile_stacks` (tile-provider
     path with O(tile) host residency).
     """
+    packed_keys.check_finite(image, allow_inf=True)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys, image.dtype)
     with packed_keys.key_scope(merge_keys):
         return _tiled_pixhomology(image, truncate_value,
@@ -733,7 +744,7 @@ def tiled_pixhomology(image: jnp.ndarray, truncate_value=None, *,
     jax.jit,
     static_argnames=("shape", "grid", "max_features", "tile_max_features",
                      "tile_max_candidates", "shard_ctx", "merge_keys",
-                     "phase_c_impl", "phase_c_block"))
+                     "phase_c_impl", "phase_c_block", "filtration"))
 def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
                               truncate_value=None, *,
                               shape: tuple[int, int],
@@ -744,7 +755,9 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
                               shard_ctx=None,
                               merge_keys: str = "rank",
                               phase_c_impl: str = "fused",
-                              phase_c_block: int = 1024) -> TiledDiagram:
+                              phase_c_block: int = 1024,
+                              filtration: str = "superlevel"
+                              ) -> TiledDiagram:
     """Jitted tile-stack core of :func:`tiled_pixhomology_stacks`."""
     h, w = shape
     validate_grid((h, w), grid)
@@ -755,6 +768,13 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
         raise ValueError(f"tile stack shape {pvals.shape} does not match "
                          f"image {shape} under grid {grid}")
     packed_keys.assert_key_context(merge_keys)
+    # Sublevel runs on the exact negation: the stacks (user space, +inf
+    # halo fill) and threshold negate here, every internal stage — tile
+    # phases, ring condensation, seam merge — stays in superlevel order,
+    # and only the output diagram negates back at the bottom.
+    pvals = packed_keys.filtration_view(pvals, filtration)
+    if truncate_value is not None and filtration == "sublevel":
+        truncate_value = jnp.negative(truncate_value)
     truncated = truncate_value is not None
     tv = (jnp.asarray(truncate_value) if truncated
           else _neg_inf(jnp.float32))
@@ -793,12 +813,17 @@ def _tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
                     sp(1), sp(1), sp(1), sp(0), sp(0), sp(0), sp(0)))
 
     state = phase_ab(pvals, pgidx, tv)
-    return merge_tile_state(
+    td = merge_tile_state(
         state, tv, shape=(h, w), grid=grid, max_features=max_features,
         tile_max_features=tile_max_features,
         tile_max_candidates=tile_max_candidates, truncated=truncated,
         merge_keys=merge_keys, phase_c_impl=phase_c_impl,
         phase_c_block=phase_c_block)
+    if filtration == "sublevel":
+        d = td.diagram
+        td = td._replace(diagram=d._replace(birth=jnp.negative(d.birth),
+                                            death=jnp.negative(d.death)))
+    return td
 
 
 def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
@@ -814,6 +839,7 @@ def tiled_pixhomology_stacks(pvals: jnp.ndarray, pgidx: jnp.ndarray,
     identical to :func:`tiled_pixhomology` (including ``merge_keys``
     resolution and its x64 scope).
     """
+    packed_keys.check_finite(pvals, where="tile stacks", allow_inf=True)
     merge_keys = packed_keys.resolve_merge_keys(merge_keys, pvals.dtype)
     with packed_keys.key_scope(merge_keys):
         return _tiled_pixhomology_stacks(pvals, pgidx, truncate_value,

@@ -1,0 +1,18 @@
+"""Batched diagram-distance kernels (sliced-Wasserstein + bottleneck bound).
+
+``ops.pairwise_distances`` dispatches the pair-grid distance matrix
+between the Pallas kernel (``kernel.py``) and the pure-XLA oracle
+(``ref.py``); the projection / persistence-profile *preparation* stages
+are shared XLA code in ``ref.py`` so both backends consume literally the
+same arrays.  See ``src/repro/ph/DESIGN.md`` §12 for the capacity-pad
+inertness argument this package relies on.
+"""
+from repro.kernels.ph_distance.ops import (  # noqa: F401
+    diagram_distances,
+    pairwise_distances,
+)
+from repro.kernels.ph_distance.ref import (  # noqa: F401
+    diagram_projections,
+    pair_distances,
+    persistence_profiles,
+)

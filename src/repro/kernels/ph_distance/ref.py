@@ -1,0 +1,185 @@
+"""Pure-XLA reference for the diagram-distance kernels (the Pallas oracle).
+
+Everything the distance matrix needs happens in two stages:
+
+1. **Preparation** (per diagram, O(B·K·F), shared by both backends):
+   :func:`diagram_projections` turns each capacity-padded diagram into
+   its direction projections + diagonal projections, and
+   :func:`persistence_profiles` into its descending persistence profile.
+   Both run as plain XLA whichever backend computes the matrix, so the
+   Pallas kernel and this reference consume *identical* device arrays.
+
+2. **Pair reduction** (per (i, j) pair): :func:`pair_distances` — the
+   single op sequence both backends execute.  The Pallas kernel imports
+   it and calls it once per grid point; :func:`distance_matrix` here
+   vmaps it over the full pair grid.  Sharing the function (not a
+   re-implementation) is what the bit-identity contract rests on, the
+   same structure as ``ph_phase_c.ref`` re-exporting the Boruvka round
+   body.
+
+Distances computed, for 0-dim diagrams padded to capacity ``F``:
+
+``sw``
+    Sliced Wasserstein (Carrière et al.): for each direction ``θ_k``,
+    diagram A's projected points are augmented with the *diagonal
+    projections* of B's points (and vice versa), both 2F-vectors are
+    sorted, and the 1-D W1 distance is their elementwise L1 **sum** (not
+    mean — W1 between equal-mass point measures is the matched-pair
+    sum).  ``sw`` averages the K directions.
+``bn``
+    Bottleneck lower bound: ``max_k |pA_(k) - pB_(k)| / 2`` over the
+    descending persistence profiles.  Matching the k-th most persistent
+    features against each other (or the diagonal, at cost ``pers/2``)
+    bounds any bottleneck matching from below; it is symmetric,
+    vanishes at A = B, and satisfies the triangle inequality exactly
+    (it is a scaled sup-norm on profile space).
+
+**Capacity-pad inertness.** Pad rows (``p_birth < 0``) are canonicalized
+to the diagonal point (0, 0) before projection.  A pad in diagram A then
+contributes a 0 to A's own projected vector *and* its diagonal
+projection contributes a 0 to B's augmented vector — both sorted
+2F-vectors gain equal multisets of zeros, and 1-D optimal transport
+between equal-mass sorted vectors is invariant under inserting identical
+values into both sides, so the W1 *sum* is unchanged.  The profile side
+is immediate: pads carry persistence 0, and appending equal zeros to
+both profiles cannot change a max of absolute differences.  Distances
+therefore do not depend on ``max_features`` (tests check this by
+recomputing at doubled capacity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed_keys import (
+    key_pad,
+    masked_top_k,
+    monotone_key32,
+    pack_keys,
+    packable_dtype,
+)
+
+__all__ = ["canonical_points", "diagram_projections", "distance_matrix",
+           "pair_distances", "persistence_profiles"]
+
+
+def canonical_points(birth, death, p_birth):
+    """Pad rows -> the diagonal point (0, 0); returns ``(b, d, valid)``.
+
+    Valid rows of engine-produced diagrams are finite (the engine rejects
+    non-finite images and the essential death is the global extremum),
+    so after this the projection math never sees an inf — pad rows'
+    ±inf sentinels are replaced wholesale, whichever filtration's
+    convention they follow.
+    """
+    valid = p_birth >= 0
+    zero = jnp.zeros((), birth.dtype)
+    return (jnp.where(valid, birth, zero),
+            jnp.where(valid, death, zero),
+            valid)
+
+
+def _directions(n_dirs: int, dtype):
+    """K half-circle directions, midpoints of equal angular bins —
+    deterministic (no RNG anywhere near a cached plan)."""
+    k = jnp.arange(n_dirs, dtype=jnp.dtype(dtype))
+    theta = (k + jnp.asarray(0.5, dtype)) * (jnp.pi / n_dirs)
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def diagram_projections(birth, death, p_birth, *, n_dirs: int = 16):
+    """Per-diagram projection tables: ``(pts, diag)``, each (..., K, F).
+
+    ``pts[..., k, f]`` is point f projected on direction k;
+    ``diag[..., k, f]`` is the projection of point f's nearest diagonal
+    point ``((b+d)/2, (b+d)/2)``.  Pad rows project to 0 on both tables
+    (the inertness precondition).
+    """
+    b, d, _ = canonical_points(birth, death, p_birth)
+    ct, st = _directions(n_dirs, b.dtype)
+    pts = b[..., None, :] * ct[:, None] + d[..., None, :] * st[:, None]
+    mid = (b + d) * jnp.asarray(0.5, b.dtype)
+    diag = mid[..., None, :] * (ct + st)[:, None]
+    return pts, diag
+
+
+def persistence_profiles(birth, death, p_birth, *, merge_keys: str = "rank",
+                         width: int = 2):
+    """Descending persistence profile per diagram: (..., F).
+
+    Persistence is ``|birth - death|`` on valid rows (filtration-neutral:
+    superlevel diagrams carry birth >= death, sublevel the reverse) and
+    exactly 0 on pads.  Selection goes through the repo's single
+    selection primitive: packed int64 keys run the
+    ``select_descending`` blockwise tournament, 32-bit monotone keys a
+    full ``top_k`` — tie *order* may differ between encodings but the
+    selected persistence *values* are identical, which is all a profile
+    is.  Non-packable dtypes (float64 without packed keys) fall back to
+    a plain float ``top_k`` (persistence >= 0, so -1 is a safe mask
+    fill).
+    """
+    b, d, valid = canonical_points(birth, death, p_birth)
+    pers = jnp.abs(b - d)   # pads are (0, 0) -> persistence exactly 0
+
+    def _row(p, v):
+        f = p.shape[0]
+        if merge_keys == "packed":
+            keys = pack_keys(p)
+        elif packable_dtype(p.dtype):
+            keys = monotone_key32(p)
+        else:
+            top = jax.lax.top_k(jnp.where(v, p, -jnp.ones((), p.dtype)),
+                                f)[0]
+            return jnp.maximum(top, jnp.zeros((), p.dtype))
+        top, pos = masked_top_k(keys, v, f, width)
+        return jnp.where(top > key_pad(top.dtype), p[pos],
+                         jnp.zeros_like(p))
+
+    if pers.ndim == 1:
+        return _row(pers, valid)
+    flat = pers.reshape(-1, pers.shape[-1])
+    vflat = valid.reshape(-1, valid.shape[-1])
+    out = jax.vmap(_row)(flat, vflat)
+    return out.reshape(pers.shape)
+
+
+def pair_distances(pts_a, diag_a, prof_a, pts_b, diag_b, prof_b):
+    """One (A, B) pair: ``(sw, bn)`` scalars.
+
+    THE shared op sequence — the Pallas kernel executes this function
+    per grid point, the XLA reference vmaps it; fixed per-axis
+    reductions (sum along F, then mean along K) keep the accumulation
+    shape identical on both sides.
+    """
+    va = jnp.sort(jnp.concatenate([pts_a, diag_b], axis=-1), axis=-1)
+    vb = jnp.sort(jnp.concatenate([pts_b, diag_a], axis=-1), axis=-1)
+    w1 = jnp.sum(jnp.abs(va - vb), axis=-1)          # (K,) per-direction W1
+    sw = jnp.sum(w1, axis=-1) / w1.shape[-1]         # mean over directions
+    bn = jnp.asarray(0.5, prof_a.dtype) * jnp.max(jnp.abs(prof_a - prof_b),
+                                                  axis=-1)
+    return sw, bn
+
+
+def distance_matrix(pts, diag, prof):
+    """Full (B, B) pair grid of :func:`pair_distances` -> ``(sw, bn)``.
+
+    This is the production CPU backend and the oracle the Pallas kernel
+    is verified against (``tests/test_filtration_distance.py`` asserts
+    bit-equality in interpret mode).  Pairs are enumerated through
+    ``lax.map`` — one unbatched trace of :func:`pair_distances` per
+    pair, exactly the program the kernel runs per grid point — rather
+    than vmap: batched reductions may reassociate the W1 sums and break
+    the last-bit contract (each pair's inner work is already (K, 2F)
+    vectorized, so the scan costs nothing at realistic B).
+    """
+    pts, diag, prof = (jnp.asarray(a) for a in (pts, diag, prof))
+    n = pts.shape[0]
+    idx = jnp.arange(n * n, dtype=jnp.int32)
+
+    def _one(p):
+        i, j = p // n, p % n
+        return pair_distances(pts[i], diag[i], prof[i],
+                              pts[j], diag[j], prof[j])
+
+    sw, bn = jax.lax.map(_one, idx)
+    return sw.reshape(n, n), bn.reshape(n, n)

@@ -68,6 +68,12 @@ def main():
     ap.add_argument("--filter", default="filter_std",
                     choices=["vanilla", "filter_light", "filter_std",
                              "filter_heavy"])
+    ap.add_argument("--filtration", default="superlevel",
+                    choices=["superlevel", "sublevel"],
+                    help="filtration direction: superlevel (paper default, "
+                         "births at maxima) or sublevel (births at minima; "
+                         "runs the same machinery on the exactly negated "
+                         "image — floating dtypes only)")
     ap.add_argument("--work-log")
     ap.add_argument("--inject-failure", type=int, nargs="*", default=[],
                     help="round indices to fail once (recovery demo)")

@@ -13,7 +13,10 @@ import enum
 import json
 from typing import Any
 
-from repro.core.packed_keys import MERGE_KEYS  # noqa: F401  (single source)
+from repro.core.packed_keys import (  # noqa: F401  (single source)
+    FILTRATIONS,
+    MERGE_KEYS,
+)
 
 CANDIDATE_MODES = ("exact", "paper")
 HASH_ALGOS = ("blake2b", "sha1", "md5")
@@ -272,6 +275,13 @@ class PHConfig:
     # Diagram / merge-sweep capacities (static shapes; padded).
     max_features: int = 8192
     max_candidates: int = 32768
+    # Filtration direction: "superlevel" (births at maxima — the paper's
+    # astronomical-source workload) or "sublevel" (births at minima;
+    # floating dtypes only).  Implemented as an exact boundary negation,
+    # so sublevel(x) is bit-identical to superlevel(-x) with flipped
+    # signs; part of stage_signature()/plan_key — plans and delta-cache
+    # entries never cross filtrations.
+    filtration: str = "superlevel"         # "superlevel" | "sublevel"
     # Algorithm variants / stage implementations (the stage graph: phase A
     # pointers+flags, phase B label resolution, phase C merge — every
     # combination is bit-identical, only the compiled program changes).
@@ -377,6 +387,14 @@ class PHConfig:
                 not isinstance(self.overlap, OverlapSpec):
             raise ValueError(f"overlap must be an OverlapSpec or None, "
                              f"got {type(self.overlap).__name__}")
+        if self.filtration not in FILTRATIONS:
+            raise ValueError(f"filtration must be one of {FILTRATIONS}, "
+                             f"got {self.filtration!r}")
+        if self.filtration == "sublevel" and self.dtype in ("int32",):
+            raise ValueError(
+                "filtration='sublevel' requires a floating dtype "
+                "(integer negation overflows at the minimum); pick a "
+                "float dtype or leave dtype=None with float inputs")
         if self.candidate_mode not in CANDIDATE_MODES:
             raise ValueError(f"candidate_mode must be one of "
                              f"{CANDIDATE_MODES}, got {self.candidate_mode!r}")
@@ -443,7 +461,7 @@ class PHConfig:
         keys *compiled programs*, so it is embedded in :meth:`plan_key`.
         """
         return (("a", self.phase_a_impl, self.strip_rows, self.use_pallas,
-                 self.interpret),
+                 self.interpret, self.filtration),
                 ("b", "frontier" if self.phase_a_impl == "fused"
                  else "dense", self.candidate_mode),
                 ("c", self.merge_impl, self.merge_keys, self.phase_c_impl,
@@ -475,7 +493,8 @@ class PHConfig:
         """Build from an argparse ``Namespace`` (or any attribute bag).
 
         Recognized attributes (all optional): ``max_features``,
-        ``max_candidates``, ``candidate_mode``, ``merge_impl``,
+        ``max_candidates``, ``candidate_mode``, ``filtration``,
+        ``merge_impl``,
         ``merge_keys``, ``phase_a_impl``, ``strip_rows``,
         ``filter`` or ``filter_level``,
         ``dtype``, ``use_pallas``, ``interpret``,
@@ -489,7 +508,7 @@ class PHConfig:
         """
         kw: dict[str, Any] = {}
         for name in ("max_features", "max_candidates", "candidate_mode",
-                     "merge_impl", "merge_keys", "phase_a_impl",
+                     "filtration", "merge_impl", "merge_keys", "phase_a_impl",
                      "strip_rows", "phase_c_impl", "phase_c_block",
                      "tournament_width", "autotune", "autotune_cache",
                      "dtype", "use_pallas", "interpret",

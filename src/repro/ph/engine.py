@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core import Diagram, batched_pixhomology, diagram_to_array, \
     num_candidates as core_num_candidates, pixhomology
-from repro.core.packed_keys import key_scope, resolve_merge_keys
+from repro.core.packed_keys import check_finite, key_scope, \
+    resolve_merge_keys
 from repro.distributed.context import shard_map_compat
 from repro.ph.config import FilterLevel, OverlapSpec, PHConfig, TileSpec
 from repro.ph.overlap import OverlapCounters, PendingResult, start_d2h
@@ -328,7 +329,8 @@ class PHEngine:
                     phase_c_impl=cfg.phase_c_impl,
                     phase_c_block=cfg.phase_c_block,
                     tournament_width=cfg.tournament_width,
-                    use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+                    use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+                    filtration=cfg.filtration)
 
     def _local_plan(self, kind: str, shape, dtype, mf: int, mc: int,
                     truncated: bool, donate: bool = False) -> Plan:
@@ -432,7 +434,8 @@ class PHEngine:
                     tile_max_features=tf, tile_max_candidates=tk,
                     shard_ctx=ctx, merge_keys=mk,
                     phase_c_impl=cfg.phase_c_impl,
-                    phase_c_block=cfg.phase_c_block)
+                    phase_c_block=cfg.phase_c_block,
+                    filtration=cfg.filtration)
 
             if truncated:
                 return jax.jit(lambda im, tv: compute(im, tv))
@@ -460,7 +463,8 @@ class PHEngine:
                     tile_max_features=tf, tile_max_candidates=tk,
                     shard_ctx=ctx, merge_keys=mk,
                     phase_c_impl=cfg.phase_c_impl,
-                    phase_c_block=cfg.phase_c_block)
+                    phase_c_block=cfg.phase_c_block,
+                    filtration=cfg.filtration)
 
             if truncated:
                 return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))
@@ -476,14 +480,16 @@ class PHEngine:
         logarithmic in the tile count."""
         from repro.core.delta import phase_ab_stack
         mk = self._merge_keys_for(dtype)
+        cfg = self.config
         key = ("delta_ab", tuple(tile_shape), str(dtype), n_stack, tf, tk,
-               truncated, self.config.plan_key())
+               truncated, cfg.plan_key())
 
         def build(plan: Plan):
             def compute(pv, pg, tv=None):
                 plan.traces += 1
                 return phase_ab_stack(pv, pg, tv, tile_max_features=tf,
-                                      tile_max_candidates=tk, merge_keys=mk)
+                                      tile_max_candidates=tk, merge_keys=mk,
+                                      filtration=cfg.filtration)
 
             if truncated:
                 return jax.jit(lambda pv, pg, tv: compute(pv, pg, tv))
@@ -510,7 +516,8 @@ class PHEngine:
                     max_features=mf, tile_max_features=tf,
                     tile_max_candidates=tk, merge_keys=mk,
                     phase_c_impl=cfg.phase_c_impl,
-                    phase_c_block=cfg.phase_c_block)
+                    phase_c_block=cfg.phase_c_block,
+                    filtration=cfg.filtration)
 
             if truncated:
                 return jax.jit(lambda s, f, sl, tv: compute(s, f, sl, tv))
@@ -620,7 +627,13 @@ class PHEngine:
     # -- data prep ---------------------------------------------------------
 
     def cast_input(self, image) -> jnp.ndarray:
-        """Apply the config's dtype policy (None = keep the input dtype)."""
+        """Apply the config's dtype policy (None = keep the input dtype).
+
+        The engine boundary rejects non-finite pixels: NaN cannot be
+        ordered by any filtration (the packed bit-cast keys would silently
+        scatter it through the key order), and ±inf collides with the
+        inert pad/halo sentinels the padded dispatch paths rely on."""
+        check_finite(image)
         x = jnp.asarray(image)
         if self.config.dtype is not None:
             x = x.astype(self.config.dtype)
@@ -632,8 +645,10 @@ class PHEngine:
         dtype the device dispatch will actually use) applied with numpy.
         Staging paths use this so building a padded round never bounces
         host -> device -> host — no device allocation happens until the
-        round's one fused ``device_put``."""
+        round's one fused ``device_put``.  Rejects non-finite pixels
+        exactly like :meth:`cast_input`."""
         x = np.asarray(image)
+        check_finite(x)
         dt = self.config.dtype if self.config.dtype is not None else x.dtype
         np_dt = np.dtype(jax.dtypes.canonicalize_dtype(dt))
         if x.dtype != np_dt:
@@ -646,8 +661,14 @@ class PHEngine:
         if self.config.filter_level is FilterLevel.VANILLA:
             return None
         from repro.data import astro
-        t, _ = astro.filter_threshold(np.asarray(image),
-                                      self.config.filter_level)
+        host = np.asarray(image)
+        if self.config.filtration == "sublevel":
+            # The astro statistic keeps the brightest pixels of a
+            # superlevel analysis; its exact sublevel mirror is the
+            # negation on both sides (keep <= -t of -image == keep >= t).
+            t, _ = astro.filter_threshold(-host, self.config.filter_level)
+            return None if t is None else -t
+        t, _ = astro.filter_threshold(host, self.config.filter_level)
         return t
 
     def auto_threshold(self, image) -> float | None:
@@ -711,9 +732,16 @@ class PHEngine:
             dummy = np.zeros(shape, np.dtype(dtype or "float32"))
             peaks = dummy[::2, ::2]
             peaks[...] = 1 + np.arange(peaks.size).reshape(peaks.shape)
+            if self.config.filtration == "sublevel":
+                # Same worst case, mirrored: the planted extrema must be
+                # the filtration's feature points (local minima), and the
+                # inert "no truncation" sentinel flips sign with it.
+                dummy = -dummy
+            inert = np.inf if self.config.filtration == "sublevel" \
+                else -np.inf
             host = self.cast_input_host(dummy)
             x = self.cast_input(dummy)
-            tv = jnp.asarray(-np.inf, threshold_dtype(x.dtype))
+            tv = jnp.asarray(inert, threshold_dtype(x.dtype))
             over = lambda d: bool(np.any(np.asarray(d.overflow)))  # noqa: E731
             for kind, b in [("single", None)] + [("batched", int(b))
                                                  for b in batch_sizes]:
@@ -975,6 +1003,8 @@ class PHEngine:
         if len(tvs) != len(imgs):
             raise ValueError(f"{len(tvs)} thresholds for {len(imgs)} images")
 
+        filt = self.config.filtration
+        inert = np.inf if filt == "sublevel" else -np.inf
         batch = np.empty((len(imgs), *bucket), imgs[0].dtype)
         tvals = np.empty((len(imgs),), np.float64)
         fixups: list = [None] * len(imgs)
@@ -984,10 +1014,10 @@ class PHEngine:
                                  f"{im.dtype} vs {imgs[0].dtype}")
             t = tvs[i] if tvs[i] is not None else self._auto_threshold(im)
             if im.shape != bucket:
-                t = pad_threshold(im, t)
-                fixups[i] = pad_fixup(im)
-            batch[i] = pad_image(im, bucket)
-            tvals[i] = -np.inf if t is None else t
+                t = pad_threshold(im, t, filt)
+                fixups[i] = pad_fixup(im, filt)
+            batch[i] = pad_image(im, bucket, filt)
+            tvals[i] = inert if t is None else t
 
         dtype = batch.dtype
         shape = batch.shape
@@ -1044,7 +1074,117 @@ class PHEngine:
             x, cfg.candidate_mode, truncate_value,
             use_pallas=cfg.use_pallas, interpret=cfg.interpret,
             phase_a_impl=cfg.phase_a_impl, strip_rows=cfg.strip_rows,
-            merge_keys=cfg.merge_keys))
+            merge_keys=cfg.merge_keys, filtration=cfg.filtration))
+
+    # -- diagram distances -------------------------------------------------
+
+    def _stack_diagrams(self, diagrams):
+        """Normalize distance inputs to host ``(birth, death, p_birth)``
+        stacks of one common capacity.
+
+        Accepts a batched :class:`PHResult`/:class:`Diagram` (2D fields,
+        straight from :meth:`run_batch`), a sequence of per-image
+        results/diagrams (1D fields, possibly of *mixed* capacities —
+        regrow makes these; shorter ones gain pad rows, which the
+        distance kernels treat as diagonal points, i.e. exactly
+        nothing), or a ready ``(birth, death, p_birth)`` array triple.
+        NaN births/deaths are rejected here — the same boundary rule as
+        image inputs; the ±inf pad sentinels are of course allowed.
+        """
+        if isinstance(diagrams, tuple) and len(diagrams) == 3 \
+                and not isinstance(diagrams[0], (PHResult, Diagram)):
+            birth, death, p_birth = (np.asarray(a) for a in diagrams)
+        else:
+            if isinstance(diagrams, (PHResult, Diagram)):
+                diagrams = [diagrams]
+            ds = [r.diagram if isinstance(r, PHResult) else r
+                  for r in diagrams]
+            if not ds:
+                raise ValueError("distance_matrix needs at least one "
+                                 "diagram")
+            rows = []
+            for d in ds:
+                b = np.atleast_2d(np.asarray(d.birth))
+                de = np.atleast_2d(np.asarray(d.death))
+                pb = np.atleast_2d(np.asarray(d.p_birth))
+                rows.extend((b[i], de[i], pb[i]) for i in range(b.shape[0]))
+            f = max(r[0].shape[0] for r in rows)
+
+            def _grow(a, fill, dt):
+                out = np.full(f, fill, dt)
+                out[:a.shape[0]] = a
+                return out
+
+            birth = np.stack([_grow(b, 0, b.dtype) for b, _, _ in rows])
+            death = np.stack([_grow(d, 0, d.dtype) for _, d, _ in rows])
+            p_birth = np.stack([_grow(p, -1, np.int32) for _, _, p in rows])
+        if birth.ndim != 2:
+            raise ValueError(f"expected stacked (B, F) diagrams, got "
+                             f"shape {tuple(birth.shape)}")
+        check_finite(birth, where="diagram births", allow_inf=True)
+        check_finite(death, where="diagram deaths", allow_inf=True)
+        return birth, death, p_birth.astype(np.int32)
+
+    def distance_plan(self, b: int, f: int, dtype, n_dirs: int) -> Plan:
+        """Plan for the ``(B, F)`` diagram-distance matrix — its own
+        cached kind, so serving/bench loops over a fixed batch shape
+        trace once.  The plan key carries the backend toggles (the
+        Pallas/interpret choice changes the executable) and the resolved
+        key encoding (the profile selection primitive differs)."""
+        mk = self._merge_keys_for(dtype)
+        cfg = self.config
+        key = ("distance", b, f, str(dtype), n_dirs, mk,
+               cfg.use_pallas, cfg.interpret)
+
+        def build(plan: Plan):
+            from repro.kernels.ph_distance import diagram_distances
+
+            def compute(birth, death, p_birth):
+                plan.traces += 1
+                return diagram_distances(
+                    birth, death, p_birth, n_dirs=n_dirs, merge_keys=mk,
+                    width=cfg.tournament_width,
+                    use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+
+            return jax.jit(compute)
+
+        return self.get_plan(key, build, mk)
+
+    def distance_matrix(self, diagrams, *, n_dirs: int = 16):
+        """Pairwise distance matrices of a batch of diagrams.
+
+        ``diagrams``: anything :meth:`_stack_diagrams` accepts — a
+        batched result from :meth:`run_batch`, a list of :meth:`run`
+        results (mixed capacities fine), raw :class:`Diagram` tuples, or
+        a ``(birth, death, p_birth)`` array triple.  Returns
+        ``(sw, bottleneck)``, both (B, B) jnp arrays: sliced-Wasserstein
+        distance and the bottleneck lower bound — definitions and the
+        capacity-pad inertness argument live in
+        :mod:`repro.kernels.ph_distance.ref` and DESIGN.md §12.
+
+        Diagrams are taken in this engine's ``config.filtration``
+        convention.  Both distances are invariant under simultaneously
+        negating every diagram (a point reflection: all projections
+        negate, so per-direction sorted pairings — and the persistence
+        profiles — are preserved), so sublevel diagrams are canonicalized
+        to the internal superlevel space by exact negation before the
+        kernels run; matrices of a sublevel run and of the superlevel
+        run on the negated images then agree bit-for-bit (a tested
+        invariant).
+        """
+        birth, death, p_birth = self._stack_diagrams(diagrams)
+        if self.config.filtration == "sublevel":
+            birth, death = -birth, -death
+        dt = self.config.dtype if self.config.dtype is not None \
+            else birth.dtype
+        dt = np.dtype(jax.dtypes.canonicalize_dtype(dt))
+        if not np.issubdtype(dt, np.floating):
+            dt = np.dtype(np.float32)
+        birth = birth.astype(dt, copy=False)
+        death = death.astype(dt, copy=False)
+        plan = self.distance_plan(birth.shape[0], birth.shape[1],
+                                  dt, int(n_dirs))
+        return plan(birth, death, p_birth)
 
     def should_tile(self, n_pixels: int) -> bool:
         """True when the config routes an ``n_pixels`` image through the
@@ -1060,6 +1200,11 @@ class PHEngine:
         by this engine's config.  ``None`` under VANILLA."""
         if self.config.filter_level is FilterLevel.VANILLA:
             return None
+        if self.config.filtration == "sublevel":
+            raise ValueError(
+                "filter_level-derived thresholds for tile providers are "
+                "superlevel statistics; under filtration='sublevel' pass "
+                "an explicit truncate_value (or use FilterLevel.VANILLA)")
         if not hasattr(provider, "filter_threshold"):
             raise ValueError(
                 f"filter_level={self.config.filter_level} needs a "
@@ -1089,7 +1234,11 @@ class PHEngine:
                 else getattr(provider, "dtype", np.float32)
             grid = self._resolve_grid(tuple(provider.shape),
                                       np.dtype(dt), spec)
-        return tiling.load_tile_stacks(provider, tuple(grid), ctx=ctx)
+        # Halo fill is the user-space inert extreme of the filtration
+        # (the tiled core negates it to the internal -inf under sublevel).
+        fill = np.inf if self.config.filtration == "sublevel" else None
+        return tiling.load_tile_stacks(provider, tuple(grid), ctx=ctx,
+                                       fill=fill)
 
     def run_tiled(self, image, truncate_value=None, *, grid=None,
                   ctx=None) -> PHResult:
@@ -1300,7 +1449,8 @@ class PHEngine:
         tv_key = float(truncate_value) if truncated else None
 
         digests, raw = delta_mod.frame_digests(
-            source, grid, algo=dspec.hash_algo, with_bytes=dspec.verify)
+            source, grid, algo=dspec.hash_algo, with_bytes=dspec.verify,
+            filtration=cfg.filtration)
         # Everything that must match for a cached state row to be
         # bit-reusable (threshold included: it filters inside phase B).
         context = (tuple(shape), grid, str(dtype), dspec.hash_algo, tv_key,
@@ -1345,7 +1495,7 @@ class PHEngine:
                 base = delta_mod.empty_state(shape, grid, dtype, tf, tk)
             bucket = delta_mod.dirty_bucket(len(dirty), n_tiles)
             pv, pg, slots = delta_mod.dirty_stacks(source, grid, dirty,
-                                                   bucket)
+                                                   bucket, cfg.filtration)
             ab = self.delta_ab_plan(tile_shape, dtype, bucket, tf, tk,
                                     truncated)
             fresh = ab(pv, pg, tvj) if truncated else ab(pv, pg)

@@ -150,7 +150,9 @@ class ShardedPHExecutor:
         its addressable slots.)"""
         h, _ = _require_square(meta.shape)
         img = astro.generate_image(meta.image_id, h)
-        t, _ = astro.filter_threshold(img, self.engine.config.filter_level)
+        # Engine-derived so the threshold statistic mirrors correctly
+        # under filtration='sublevel' (None under VANILLA either way).
+        t = self.engine.auto_threshold(img)
         self._measured_costs[(meta.image_id, meta.shape)] = \
             astro.estimate_cost(img, self.engine.config.filter_level)
         return img, t
@@ -175,9 +177,11 @@ class ShardedPHExecutor:
         round happens in :meth:`_stage_round`."""
         m = self.num_executors
         hb, wb = rnd.shape
+        filt = self.engine.config.filtration
+        inert = np.inf if filt == "sublevel" else -np.inf
         bdt = self.engine.cast_input_host(np.zeros((), np.float32)).dtype
-        batch = np.full((m, hb, wb), pad_fill_value(bdt), bdt)
-        tvals = np.full((m,), -np.inf, np.dtype(threshold_dtype(bdt)))
+        batch = np.full((m, hb, wb), pad_fill_value(bdt, filt), bdt)
+        tvals = np.full((m,), inert, np.dtype(threshold_dtype(bdt)))
         fixups: list = [None] * len(rnd.entries)
         for k, (slot, meta) in enumerate(rnd.entries):
             img, t = self._load_one(meta)
@@ -194,10 +198,10 @@ class ShardedPHExecutor:
                         "False)")
                 batch[slot, :h, :w] = img
                 tvals[slot] = t
-                fixups[k] = pad_fixup(img)
+                fixups[k] = pad_fixup(img, filt)
             else:
                 batch[slot] = img
-                tvals[slot] = -np.inf if t is None else t
+                tvals[slot] = inert if t is None else t
         filled = {slot for slot, _ in rnd.entries}
         src = rnd.entries[0][0]
         for s in range(m):          # pad free slots: repeat a staged image
@@ -237,11 +241,13 @@ class ShardedPHExecutor:
         stages through :meth:`load_round`; this remains for direct
         ``run_round`` use."""
         size = self.image_size
+        inert = np.inf if self.engine.config.filtration == "sublevel" \
+            else -np.inf
         imgs, thresholds, costs = [], [], {}
         for i in image_ids:
             img, t = self._load_one(ImageMeta(int(i), (size, size)))
             imgs.append(img)
-            thresholds.append(-np.inf if t is None else t)
+            thresholds.append(inert if t is None else t)
             costs[i] = self._measured_costs[(int(i), (size, size))]
         return np.stack(imgs), np.asarray(thresholds, np.float32), costs
 
@@ -392,16 +398,22 @@ class ShardedPHExecutor:
         # a batched consumer expects.
         f = max(d.birth.shape[0] for d in diags)
 
+        sublevel = self.engine.config.filtration == "sublevel"
+
         def padded(d: Diagram) -> Diagram:
             extra = f - d.birth.shape[0]
             if extra == 0:
                 return d
-            neg_inf = (-np.inf if np.issubdtype(d.birth.dtype, np.floating)
-                       else np.iinfo(d.birth.dtype).min)
+            # Match the core's own pad rows: -inf under superlevel,
+            # +inf in sublevel user space (diagrams negate on the way out).
+            fill = (-np.inf if np.issubdtype(d.birth.dtype, np.floating)
+                    else np.iinfo(d.birth.dtype).min)
+            if sublevel:
+                fill = -fill
             return Diagram(
-                np.concatenate([d.birth, np.full(extra, neg_inf,
+                np.concatenate([d.birth, np.full(extra, fill,
                                                  d.birth.dtype)]),
-                np.concatenate([d.death, np.full(extra, neg_inf,
+                np.concatenate([d.death, np.full(extra, fill,
                                                  d.death.dtype)]),
                 np.concatenate([d.p_birth, np.full(extra, -1, np.int32)]),
                 np.concatenate([d.p_death, np.full(extra, -1, np.int32)]),

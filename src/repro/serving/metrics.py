@@ -86,19 +86,25 @@ class Reservoir:
         return self._buf[:min(self._seen, self._buf.size)]
 
     def percentile(self, q: float) -> float:
+        """Exact percentile over the retained window; ``0.0`` when no
+        sample has been recorded yet (a freshly started server must
+        expose zeroed — not raising, not NaN — latency stats)."""
         with self._lock:
             w = self._window()
             if w.size == 0:
-                raise ValueError("no samples recorded")
+                return 0.0
             return float(np.percentile(w, q))
 
     def summary(self) -> dict:
         """``{count, mean, p50, p95, p99, max}`` (seconds in, seconds
-        out); ``{"count": 0}`` when empty."""
+        out); all-zero when empty, so dashboards and the perf gate can
+        read every key of a fresh server without guards (single-sample
+        windows are exact: every percentile is that sample)."""
         with self._lock:
             w = self._window()
             if w.size == 0:
-                return {"count": 0}
+                return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
+                        "p99": 0.0, "max": 0.0}
             p50, p95, p99 = np.percentile(w, [50.0, 95.0, 99.0])
             return {"count": self._seen,
                     "mean": float(w.mean()),
@@ -216,7 +222,7 @@ class ServeMetrics:
     def mean_batch_seconds(self, bucket) -> float | None:
         m = self.bucket(bucket)
         s = m.batch_s.summary()
-        return s.get("mean")
+        return s["mean"] if s["count"] else None
 
     # -- export ------------------------------------------------------------
 

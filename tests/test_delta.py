@@ -349,8 +349,8 @@ def test_verify_mode_detects_injected_hash_collision(monkeypatch):
 
     real = dm.frame_digests
 
-    def colliding(source, grid, *, algo="blake2b", with_bytes=False):
-        digests, raw = real(source, grid, algo=algo, with_bytes=True)
+    def colliding(source, grid, *, algo="blake2b", with_bytes=False, **kw):
+        digests, raw = real(source, grid, algo=algo, with_bytes=True, **kw)
         fake = tuple(b"\x00" * 16 for _ in digests)
         return fake, (raw if with_bytes else None)
 
@@ -372,8 +372,9 @@ def test_without_verify_identical_digests_are_trusted(monkeypatch):
     base = _img(11)
     real = dm.frame_digests
 
-    def colliding(source, grid, *, algo="blake2b", with_bytes=False):
-        digests, raw = real(source, grid, algo=algo, with_bytes=with_bytes)
+    def colliding(source, grid, *, algo="blake2b", with_bytes=False, **kw):
+        digests, raw = real(source, grid, algo=algo, with_bytes=with_bytes,
+                            **kw)
         return tuple(b"\x01" * 16 for _ in digests), raw
 
     monkeypatch.setattr(dm, "frame_digests", colliding)

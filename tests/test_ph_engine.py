@@ -77,7 +77,10 @@ def test_config_stage_signature_keys_compiled_programs():
         PHConfig(phase_a_impl="pooled").plan_key()
     assert PHConfig().plan_key() != PHConfig(strip_rows=16).plan_key()
     sig = PHConfig(phase_a_impl="fused", strip_rows=4).stage_signature()
-    assert ("a", "fused", 4, None, False) in sig
+    assert ("a", "fused", 4, None, False, "superlevel") in sig
+    # filtration selects different compiled programs (key negation sites)
+    assert PHConfig().plan_key() != \
+        PHConfig(filtration="sublevel").plan_key()
     assert any(s[0] == "b" and "frontier" in s for s in sig)
     # pooled phase A resolves densely; fused on the compacted frontier
     assert any("dense" in s for s in

@@ -344,9 +344,10 @@ def test_assign_bucket():
 
 def test_reservoir_window_and_percentiles():
     r = Reservoir(4)
-    assert r.summary() == {"count": 0}
-    with pytest.raises(ValueError):
-        r.percentile(50)
+    # empty reservoirs summarize as zeros (scrapers need stable fields)
+    assert r.summary() == {"count": 0, "mean": 0.0, "max": 0.0,
+                           "p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert r.percentile(50) == 0.0
     for v in range(1, 11):
         r.add(float(v))
     assert len(r) == 10
